@@ -1,0 +1,140 @@
+"""Shared benchmark helpers: timing, analytic prover-memory model, the
+in-circuit BFS strawman (the paper's 'naive' baseline in Fig 6a), CSV rows.
+
+Scale note: the paper ran 60k/120k/180k-row fact tables on a 256 GB server;
+this container benchmarks the same circuits at 2^11..2^14 rows — all
+COMPARATIVE claims (edge-list vs CSR, flat-vs-linear scaling, BiRC vs
+preprocess) are scale-free and reproduce directly; absolute times differ.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import field as F
+from repro.core import plonkish as pk
+from repro.core import prover as pv
+from repro.core import verifier as vf
+from repro.core.operators.common import Operator, eq_flag_gadget, fill_eq_flag
+from repro.graphdb import ldbc
+
+BENCH_CFG = pv.ProverConfig(blowup=4, n_queries=16, fri_final_size=32)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6  # us
+
+
+def est_prover_mem_bytes(circuit: pk.Circuit, cfg: pv.ProverConfig) -> int:
+    """Analytic prover working set: LDEs + Merkle layers + ext columns.
+
+    (jax device buffers are invisible to tracemalloc, so the comparative
+    memory numbers use this model — dominated by (cols x N x blowup) u32.)
+    """
+    n, b = circuit.n_rows, cfg.blowup
+    base_cols = (circuit.n_fixed + circuit.n_advice + circuit.n_instance +
+                 circuit.n_data)
+    ext_cols = circuit.n_ext * 4 + 4 * b   # helper + quotient components
+    lde = (base_cols + ext_cols) * n * b * 4
+    merkle = 3 * (2 * n * b * 8 * 4)       # digest layers per tree
+    witness = base_cols * n * 4
+    deep = n * b * 4 * 4 * 2
+    return lde + merkle + witness + deep
+
+
+def db_with_rows(n_rows: int, seed: int = 0):
+    """LDBC-ish instance whose fact tables have ~n_rows rows."""
+    return ldbc.generate(n_knows=n_rows, n_persons=max(24, n_rows // 16),
+                         n_comments=n_rows, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# the 'naive in-circuit BFS' strawman (Fig 6a baseline)
+# ---------------------------------------------------------------------------
+def build_bfs_circuit(n_rows: int, m_edges: int, n_nodes: int, hops: int):
+    """Executes BFS *inside* the circuit, hop by hop: per hop an edge
+    activation lookup, a logUp in-degree aggregation, and an OR gate. Circuit
+    size grows linearly with hop count — the paper's Fig 6a behaviour."""
+    from repro.core.operators.common import region_selector
+    c = pk.Circuit(n_rows, name=f"bfs{hops}")
+    U = c.add_data("U")
+    V = c.add_data("V")
+    N = c.add_data("N")
+    sel_e = region_selector(c, "sel_edge", m_edges)
+    sel_n = region_selector(c, "sel_node", n_nodes)
+    id_s = c.add_instance("id_s")
+    f_prev, inv0 = eq_flag_gadget(c, "f0", N, id_s, sel_n)
+    gadgets = [("f0", f_prev, inv0)]
+    for k in range(hops):
+        a_k = c.add_advice(f"a{k}")       # edge activation = f_k[U[e]]
+        cnt = c.add_advice(f"cnt{k}")     # in-degree count of active edges
+        nz = c.add_advice(f"nz{k}")
+        inv = c.add_advice(f"nzinv{k}")
+        f_next = c.add_advice(f"f{k+1}")
+        c.add_bus(f"act{k}", [U, a_k], [N, f_prev], m_f=sel_e, t_sel=sel_n)
+        c.add_bus(f"agg{k}", [V], [N], m_f=a_k, m_t=cnt, t_sel=sel_n)
+        c.add_gate(f"nz_bool{k}", nz * (pk.Const(1) - nz))
+        c.add_gate(f"nz_zero{k}", (pk.Const(1) - nz) * cnt)
+        c.add_gate(f"nz_nonzero{k}", sel_n * nz * (cnt * inv - pk.Const(1)))
+        c.add_gate(f"or{k}", sel_n * (f_next - (f_prev + nz - f_prev * nz)))
+        c.add_gate(f"f_region{k}", (pk.Const(1) - sel_n) * f_next)
+        gadgets.append((f"hop{k}", a_k, cnt, nz, inv, f_next))
+        f_prev = f_next
+    op = Operator(c.name, c)
+    op.handles = dict(U=U, V=V, N=N, sel_e=sel_e, sel_n=sel_n, id_s=id_s,
+                      hops=hops, m_edges=m_edges, n_nodes=n_nodes)
+    return op
+
+
+def bfs_witness(op, src, dst, node_ids, id_s):
+    from repro.core.operators.common import host_inv
+    c = op.circuit
+    h = op.handles
+    n = c.n_rows
+    m, nn = h["m_edges"], h["n_nodes"]
+    data = op.new_data()
+    advice = op.new_advice()
+    inst = op.new_instance()
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    node_ids = np.asarray(node_ids, np.int64)
+    data[0, :m] = src % F.P
+    data[1, :m] = dst % F.P
+    data[2, :nn] = node_ids % F.P
+    inst[0] = id_s
+    sel_n = np.zeros(n, np.int64)
+    sel_n[:nn] = 1
+    sel_e = np.zeros(n, np.int64)
+    sel_e[:m] = 1
+    idx_of = {int(v): i for i, v in enumerate(node_ids.tolist())}
+    f = (node_ids == id_s).astype(np.int64)
+    # fill f0 eq gadget
+    fl_idx = c.advice_names.index("f0/fl")
+    inv_idx = c.advice_names.index("f0/inv")
+    advice[fl_idx, :nn] = f
+    diff = (data[2].astype(np.int64) - id_s) % F.P
+    invv = host_inv(diff)
+    advice[inv_idx] = np.where((sel_n == 1) & (advice[fl_idx] == 0), invv, 0)
+    f_prev = np.zeros(n, np.int64)
+    f_prev[:nn] = f
+    for k in range(h["hops"]):
+        a = np.zeros(n, np.int64)
+        a[:m] = f_prev[[idx_of[int(u)] for u in src]]
+        cnt = np.zeros(n, np.int64)
+        for e in range(m):
+            if a[e]:
+                cnt[idx_of[int(dst[e])]] += 1
+        nz = (cnt > 0).astype(np.int64)
+        inv = host_inv(cnt % F.P)
+        f_next = np.zeros(n, np.int64)
+        f_next[:nn] = f_prev[:nn] | nz[:nn]
+        advice[c.advice_names.index(f"a{k}")] = a
+        advice[c.advice_names.index(f"cnt{k}")] = cnt
+        advice[c.advice_names.index(f"nz{k}")] = nz
+        advice[c.advice_names.index(f"nzinv{k}")] = np.where(nz == 1, inv, 0)
+        advice[c.advice_names.index(f"f{k+1}")] = f_next
+        f_prev = f_next
+    return advice, inst, data

@@ -1,0 +1,105 @@
+"""Roofline report generator: reads dryrun_single.json (+ dryrun_multi.json)
+and emits the EXPERIMENTS.md §Roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--json dryrun_single.json]
+
+Terms (per cell, hardware model: TPU v5e-like 197 TF/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI):
+    compute    = HLO_FLOPs / (chips * peak)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+with HLO_* = per-device cost_analysis x chips and collective_bytes summed
+from the partitioned module's collective ops. MODEL_FLOPS = 6*N*D (dense) or
+6*N_active*D (MoE) for train; 2*N*D for single-token decode/prefill-token.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs.registry import SHAPES, get_config
+from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    if arch.startswith("zkgraph"):
+        return 0.0                      # no 6ND analogue for the prover
+    cfg = get_config(arch)
+    from repro.models.config import active_param_count
+    n_active = active_param_count(cfg)
+    s = SHAPES[shape_name]
+    if s.kind == "train":
+        tokens = s.seq_len * s.global_batch
+        return 6.0 * n_active * tokens
+    if s.kind == "prefill":
+        tokens = s.seq_len * s.global_batch
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * s.global_batch      # decode: 1 token per request
+
+
+def fmt_t(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def analyse(rec: dict) -> dict:
+    chips = rec["n_chips"]
+    c = rec.get("corrected")
+    if c and "UNCORRECTED" not in c.get("method", ""):
+        flops = c["flops"] * chips
+        hbm = c["bytes"] * chips
+        coll = c["coll"] * chips
+    else:
+        flops = rec["per_device_flops"] * chips
+        hbm = rec["per_device_bytes"] * chips
+        coll = rec["collectives"]["total"] * chips
+    t_c = flops / (chips * PEAK_FLOPS)
+    t_m = hbm / (chips * HBM_BW)
+    t_x = coll / (chips * ICI_BW)
+    mf = model_flops(rec["arch"], rec["shape"])
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    bound = max(t_c, t_m, t_x, 1e-30)
+    # roofline fraction = useful-model-FLOP time / the binding term
+    # (MFU-style: 1.0 would mean the dominant resource is fully spent on
+    # model FLOPs)
+    t_useful = mf / (chips * PEAK_FLOPS)
+    return dict(t_compute=t_c, t_memory=t_m, t_collective=t_x,
+                dominant=dom[0], model_flops=mf,
+                useful_frac=mf / flops if flops else 0.0,
+                roofline_frac=t_useful / bound)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="dryrun_single.json")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    recs = json.load(open(args.json))
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "roofline frac | MODEL/HLO |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("ok") is None:
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | "
+                  f"{r['skipped'][:40]} |")
+            continue
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | FAIL | — | |")
+            continue
+        a = analyse(r)
+        note = "" if r.get("corrected") and "UNCORRECTED" not in \
+            r["corrected"].get("method", "") else "raw†"
+        if r["arch"].startswith("zkgraph"):
+            note = "paper workload"
+        print(f"| {r['arch']} | {r['shape']} | {fmt_t(a['t_compute'])} | "
+              f"{fmt_t(a['t_memory'])} | {fmt_t(a['t_collective'])} | "
+              f"**{a['dominant']}** | {a['roofline_frac']*100:.1f}% | "
+              f"{a['useful_frac']*100:.0f}% {note} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""DBRX-132B: MoE 16 experts top-4, fine-grained [hf:databricks/dbrx-base]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", n_layers=40, d_model=6144, n_heads=48, n_kv=8,
+    d_ff=10752, vocab=100352, head_dim=128, norm="layernorm", mlp="swiglu",
+    rope_theta=5e5, moe_experts=16, moe_top_k=4)

@@ -1,0 +1,7 @@
+"""Falcon-Mamba-7B: attention-free Mamba1 [arXiv:2410.05355]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", n_layers=64, d_model=4096, n_heads=64, n_kv=0,
+    d_ff=0, vocab=65024, head_dim=64, norm="rmsnorm", block_type="mamba1",
+    ssm_state=16)

@@ -1,0 +1,7 @@
+"""InternLM2-1.8B: dense GQA decoder [arXiv:2403.17297]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-1.8b", n_layers=24, d_model=2048, n_heads=16, n_kv=8,
+    d_ff=8192, vocab=92544, head_dim=128, norm="rmsnorm", mlp="swiglu",
+    rope_theta=1e6)

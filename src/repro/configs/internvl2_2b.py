@@ -1,0 +1,7 @@
+"""InternVL2-2B: InternLM2 backbone + ViT frontend stub [arXiv:2404.16821]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b", n_layers=24, d_model=2048, n_heads=16, n_kv=8,
+    d_ff=8192, vocab=92553, head_dim=128, norm="rmsnorm", mlp="swiglu",
+    rope_theta=1e6, frontend="vlm", frontend_len=256)

@@ -1,0 +1,7 @@
+"""Mixtral-8x22B: MoE 8 experts top-2, GQA kv=8, SWA [arXiv:2401.04088]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b", n_layers=56, d_model=6144, n_heads=48, n_kv=8,
+    d_ff=16384, vocab=32768, head_dim=128, norm="rmsnorm", mlp="swiglu",
+    rope_theta=1e6, sliding_window=4096, moe_experts=8, moe_top_k=2)

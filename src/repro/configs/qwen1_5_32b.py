@@ -1,0 +1,7 @@
+"""Qwen1.5-32B: dense, QKV bias [hf:Qwen/Qwen1.5-32B]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b", n_layers=64, d_model=5120, n_heads=40, n_kv=40,
+    d_ff=27392, vocab=152064, head_dim=128, norm="rmsnorm", mlp="swiglu",
+    qkv_bias=True, rope_theta=1e6)

@@ -1,0 +1,57 @@
+"""Architecture + shape registry: ``--arch <id>`` lookup and the assigned
+input-shape grid (40 cells)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+import importlib
+
+ARCHS = {
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "qwen1.5-32b": "repro.configs.qwen1_5_32b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "whisper-base": "repro.configs.whisper_base",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+}
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(arch: str):
+    mod = importlib.import_module(ARCHS[arch])
+    return mod.CONFIG
+
+
+def cells():
+    """All 40 (arch, shape) cells with skip annotations.
+
+    long_500k needs sub-quadratic attention: run for SSM/hybrid/SWA archs,
+    skip (recorded) for pure full-attention archs (DESIGN.md §4).
+    """
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            skip = None
+            if sname == "long_500k" and not cfg.subquadratic:
+                skip = "full attention: 500k decode cache is not sub-quadratic"
+            out.append((arch, sname, skip))
+    return out

@@ -1,0 +1,7 @@
+"""StarCoder2-15B: GQA kv=4, sliding window 4096 [arXiv:2402.19173]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b", n_layers=40, d_model=6144, n_heads=48, n_kv=4,
+    d_ff=24576, vocab=49152, head_dim=128, norm="layernorm", mlp="gelu",
+    qkv_bias=True, proj_bias=True, rope_theta=1e5, sliding_window=4096)

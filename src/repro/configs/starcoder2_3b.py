@@ -1,0 +1,7 @@
+"""StarCoder2-3B: GQA kv=2, sliding window 4096, LN+bias [arXiv:2402.19173]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b", n_layers=30, d_model=3072, n_heads=24, n_kv=2,
+    d_ff=12288, vocab=49152, head_dim=128, norm="layernorm", mlp="gelu",
+    qkv_bias=True, proj_bias=True, rope_theta=1e5, sliding_window=4096)

@@ -1,0 +1,8 @@
+"""Whisper-base: enc-dec, conv frontend stubbed [arXiv:2212.04356]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", n_layers=6, d_model=512, n_heads=8, n_kv=8,
+    d_ff=2048, vocab=51865, head_dim=64, norm="layernorm", mlp="gelu",
+    proj_bias=True, enc_dec=True, enc_layers=6, frontend="audio",
+    frontend_len=1500)

@@ -1,0 +1,7 @@
+"""Zamba2-1.2B: Mamba2 backbone + shared attention blocks [arXiv:2411.15242]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", n_layers=38, d_model=2048, n_heads=32, n_kv=32,
+    d_ff=8192, vocab=32000, head_dim=64, norm="rmsnorm", mlp="swiglu",
+    block_type="mamba2", shared_attn_every=6, ssm_state=64)

@@ -1,0 +1,11 @@
+"""The paper's own workload config: distributed ZK proving pipeline shapes."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ZKGraphConfig:
+    name: str = "zkgraph-prover"
+    n_rows: int = 1 << 16          # circuit rows per proof
+    n_columns: int = 32            # committed base columns
+    blowup: int = 4
+    batch_proofs: int = 256       # proofs batched across the mesh

@@ -1,0 +1,249 @@
+"""BabyBear prime field Fp (p = 2^31 - 2^27 + 1) and its quartic extension Fp4.
+
+TPU adaptation of the paper's BN254 scalar field (see DESIGN.md §2): all
+arithmetic stays inside 32-bit lanes with 64-bit intermediates on CPU; the
+Pallas kernels carry a pure-uint32 16-bit-limb multiply path for real TPUs.
+
+Conventions
+-----------
+* Fp elements: ``jnp.uint32`` arrays, canonical representatives in [0, p).
+* Fp4 elements: uint32 arrays whose **last axis has size 4** (coefficients of
+  1, x, x^2, x^3 in Fp[x]/(x^4 - W)).
+* All ops are vectorized and jit-safe.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # uint64 intermediates for mulmod
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Base field constants
+# ---------------------------------------------------------------------------
+P = 2013265921                     # 15 * 2^27 + 1  (BabyBear)
+TWO_ADICITY = 27
+GENERATOR = 31                     # multiplicative generator of Fp*
+W_EXT = 11                         # Fp4 = Fp[x]/(x^4 - 11)  (Plonky3 constant)
+
+_U32 = jnp.uint32
+_U64 = jnp.uint64
+
+
+def _pow_py(base: int, exp: int, mod: int = P) -> int:
+    return pow(base, exp, mod)
+
+
+# two-adic roots of unity: ROOTS[k] has order 2^k
+ROOTS: list[int] = [1] * (TWO_ADICITY + 1)
+ROOTS[TWO_ADICITY] = _pow_py(GENERATOR, (P - 1) >> TWO_ADICITY)
+for _k in range(TWO_ADICITY - 1, -1, -1):
+    ROOTS[_k] = ROOTS[_k + 1] * ROOTS[_k + 1] % P
+assert ROOTS[1] == P - 1 and ROOTS[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# Fp ops
+# ---------------------------------------------------------------------------
+def fp(x) -> jnp.ndarray:
+    """Coerce ints / arrays into canonical Fp uint32 form."""
+    arr = jnp.asarray(x)
+    if arr.dtype in (jnp.int64, jnp.uint64, jnp.int32):
+        arr = jnp.remainder(arr.astype(jnp.int64), P).astype(_U32)
+    else:
+        arr = arr.astype(_U32)
+        arr = jnp.where(arr >= P, arr - P, arr)
+    return arr
+
+
+def fadd(a, b):
+    s = a.astype(_U32) + b.astype(_U32)          # < 2^32, no overflow (a,b < 2^31)
+    return jnp.where(s >= P, s - P, s)
+
+
+def fsub(a, b):
+    a = a.astype(_U32)
+    b = b.astype(_U32)
+    return jnp.where(a >= b, a - b, a + (_U32(P) - b))
+
+
+def fneg(a):
+    a = a.astype(_U32)
+    return jnp.where(a == 0, a, _U32(P) - a)
+
+
+def fmul(a, b):
+    prod = a.astype(_U64) * b.astype(_U64)
+    return (prod % _U64(P)).astype(_U32)
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def fpow(a, e: int):
+    """a ** e with a *static* python-int exponent (square and multiply)."""
+    result = jnp.full(jnp.shape(a), 1, _U32)
+    base = jnp.asarray(a, _U32)
+    while e > 0:
+        if e & 1:
+            result = fmul(result, base)
+        base = fmul(base, base)
+        e >>= 1
+    return result
+
+
+def finv(a):
+    return fpow(a, P - 2)
+
+
+@jax.jit
+def fbatch_inv(a):
+    """Montgomery batch inversion along the last axis: one finv total.
+
+    Zero entries map to zero (callers guard their own semantics).
+    """
+    safe = jnp.where(a == 0, _U32(1), a)
+    # inv(a_i) = (prefix-excl-self * suffix-excl-self) * inv(prod of all)
+    pref = jax.lax.associative_scan(fmul, safe, axis=-1)
+    total_inv = finv(pref[..., -1])
+    shifted = jnp.concatenate(
+        [jnp.ones_like(pref[..., :1]), pref[..., :-1]], axis=-1
+    )  # prefix product excluding self
+    # suffix products: reverse-scan
+    rev = jnp.flip(safe, axis=-1)
+    suf = jax.lax.associative_scan(fmul, rev, axis=-1)
+    suf = jnp.flip(suf, axis=-1)
+    suf_excl = jnp.concatenate([suf[..., 1:], jnp.ones_like(suf[..., :1])], axis=-1)
+    inv = fmul(fmul(shifted, suf_excl), total_inv[..., None])
+    return jnp.where(a == 0, _U32(0), inv)
+
+
+# ---------------------------------------------------------------------------
+# Fp4 ops — last axis of size 4
+# ---------------------------------------------------------------------------
+def ext(x) -> jnp.ndarray:
+    """Embed Fp scalar/array into Fp4 (append 3 zero coefficients)."""
+    x = fp(x)
+    z = jnp.zeros(x.shape + (3,), _U32)
+    return jnp.concatenate([x[..., None], z], axis=-1)
+
+
+def ext_from_coeffs(c0, c1, c2, c3):
+    return jnp.stack([fp(c0), fp(c1), fp(c2), fp(c3)], axis=-1)
+
+
+EXT_ZERO = np.array([0, 0, 0, 0], np.uint32)
+EXT_ONE = np.array([1, 0, 0, 0], np.uint32)
+
+
+def eadd(a, b):
+    return fadd(a, b)
+
+
+def esub(a, b):
+    return fsub(a, b)
+
+
+def eneg(a):
+    return fneg(a)
+
+
+@jax.jit
+def emul(a, b):
+    """Schoolbook Fp4 multiply with reduction x^4 = W_EXT."""
+    a0, a1, a2, a3 = a[..., 0], a[..., 1], a[..., 2], a[..., 3]
+    b0, b1, b2, b3 = b[..., 0], b[..., 1], b[..., 2], b[..., 3]
+    w = _U32(W_EXT)
+
+    def m(x, y):
+        return fmul(x, y)
+
+    c0 = fadd(m(a0, b0), fmul(w, fadd(fadd(m(a1, b3), m(a2, b2)), m(a3, b1))))
+    c1 = fadd(fadd(m(a0, b1), m(a1, b0)), fmul(w, fadd(m(a2, b3), m(a3, b2))))
+    c2 = fadd(fadd(m(a0, b2), m(a1, b1)), fadd(m(a2, b0), fmul(w, m(a3, b3))))
+    c3 = fadd(fadd(m(a0, b3), m(a1, b2)), fadd(m(a2, b1), m(a3, b0)))
+    return jnp.stack([c0, c1, c2, c3], axis=-1)
+
+
+def emul_fp(a_ext, b_fp):
+    """Fp4 * Fp (scalar multiply each coefficient)."""
+    return fmul(a_ext, b_fp[..., None].astype(_U32))
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def epow(a, e: int):
+    result = jnp.broadcast_to(jnp.asarray(EXT_ONE), jnp.shape(a)).astype(_U32)
+    base = a
+    while e > 0:
+        if e & 1:
+            result = emul(result, base)
+        base = emul(base, base)
+        e >>= 1
+    return result
+
+
+@jax.jit
+def einv(a):
+    """Inverse in Fp4 via the norm map (two Frobenius conjugates).
+
+    For q = p, Frobenius phi(a)(x) = a(x^p). Since x^4 = W, x^p = x * W^((p-1)/4)
+    with (p-1) divisible by 4. N(a) = a * phi(a) * phi^2(a) * phi^3(a) in Fp.
+    inv(a) = phi(a)*phi^2(a)*phi^3(a) / N(a).
+    """
+    s = _pow_py(W_EXT, (P - 1) // 4)  # x^p = s * x, s^4 = W^(p-1) = 1
+    # phi^k multiplies coefficient i by s^(i*k)
+    def frob(v, k):
+        mults = np.array([_pow_py(s, i * k) for i in range(4)], np.uint32)
+        return fmul(v, jnp.asarray(mults))
+
+    a1 = frob(a, 1)
+    a2 = frob(a, 2)
+    a3 = frob(a, 3)
+    prod = emul(emul(a1, a2), a3)
+    norm = emul(a, prod)  # lies in Fp: coefficients 1..3 are ~0
+    n0 = norm[..., 0]
+    inv_n = finv(n0)
+    return emul_fp(prod, inv_n)
+
+
+@jax.jit
+def ebatch_inv(a):
+    """Batch inversion of Fp4 elements along axis -2 (stack of ext elements)."""
+    # fold to one inv via prefix/suffix products (like fbatch_inv but emul)
+    is_zero = jnp.all(a == 0, axis=-1, keepdims=True)
+    one = jnp.broadcast_to(jnp.asarray(EXT_ONE), a.shape).astype(_U32)
+    safe = jnp.where(is_zero, one, a)
+    pref = jax.lax.associative_scan(emul, safe, axis=-2)
+    total_inv = einv(pref[..., -1, :])
+    shifted = jnp.concatenate([one[..., :1, :], pref[..., :-1, :]], axis=-2)
+    rev = jnp.flip(safe, axis=-2)
+    suf = jnp.flip(jax.lax.associative_scan(emul, rev, axis=-2), axis=-2)
+    suf_excl = jnp.concatenate([suf[..., 1:, :], one[..., :1, :]], axis=-2)
+    inv = emul(emul(shifted, suf_excl), total_inv[..., None, :])
+    return jnp.where(is_zero, jnp.zeros_like(inv), inv)
+
+
+# ---------------------------------------------------------------------------
+# misc helpers
+# ---------------------------------------------------------------------------
+def rand_fp(key, shape):
+    """Uniform Fp sample (rejection-free: 2^31 mod p bias is ~2^-4 of range;
+    use 64-bit sample mod p for negligible bias)."""
+    bits = jax.random.bits(key, shape, dtype=jnp.uint32).astype(_U64)
+    bits2 = jax.random.bits(jax.random.fold_in(key, 1), shape, dtype=jnp.uint32)
+    wide = (bits << _U64(32)) | bits2.astype(_U64)
+    return (wide % _U64(P)).astype(_U32)
+
+
+def rand_ext(key, shape=()):
+    return rand_fp(key, tuple(shape) + (4,))
+
+
+@functools.lru_cache(maxsize=None)
+def root_of_unity(order: int) -> int:
+    """Primitive root of unity of the given power-of-two order (python int)."""
+    k = order.bit_length() - 1
+    assert order == 1 << k and k <= TWO_ADICITY, f"bad NTT order {order}"
+    return ROOTS[k]

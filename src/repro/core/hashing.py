@@ -1,0 +1,111 @@
+"""Poseidon2-shaped permutation over BabyBear, batched as matmuls.
+
+The TPU adaptation (DESIGN.md §2): the per-round linear layer of a width-16
+permutation is a 16x16 matrix, so hashing a batch of states is one
+(batch,16)x(16,16) modular matmul per round — an MXU-friendly schedule (the
+Pallas kernel in ``repro.kernels.poseidon`` tiles exactly this). NOT a
+security-audited parameter set (see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import field as F
+
+WIDTH = 16          # state lanes
+RATE = 8            # sponge rate (lanes absorbed/squeezed per block)
+DIGEST = 8          # digest lanes
+FULL_ROUNDS = 8     # 4 at start + 4 at end
+PARTIAL_ROUNDS = 14
+SBOX_DEG = 7        # gcd(7, p-1) = 1 -> permutation
+
+_U32 = jnp.uint32
+_U64 = jnp.uint64
+
+
+@functools.lru_cache(maxsize=None)
+def _params():
+    """(mds (16,16), round_constants (n_rounds,16)) as numpy uint32."""
+    # DFT-style matrix: M[i][j] = w^(i*j) with w a 16th root of unity.
+    # Vandermonde-of-roots => invertible; dense mixing; literally an NTT step.
+    w = F.root_of_unity(WIDTH)
+    mds = np.zeros((WIDTH, WIDTH), np.uint32)
+    for i in range(WIDTH):
+        for j in range(WIDTH):
+            mds[i, j] = pow(w, i * j, F.P)
+    rng = np.random.default_rng(20250713)
+    n_rounds = FULL_ROUNDS + PARTIAL_ROUNDS
+    rc = (rng.integers(0, F.P, size=(n_rounds, WIDTH), dtype=np.int64)).astype(np.uint32)
+    return mds, rc
+
+
+def _sbox(x):
+    x2 = F.fmul(x, x)
+    x4 = F.fmul(x2, x2)
+    x6 = F.fmul(x4, x2)
+    return F.fmul(x6, x)
+
+
+def _matmul_mod(state, mat):
+    """(batch..., 16) x (16, 16) modular matmul.  Sum of 16 products of
+    values < 2^31: fits in uint64 (16 * 2^62 overflows — reduce per-term)."""
+    prod = state[..., :, None].astype(_U64) * mat[None, :, :].astype(_U64)
+    prod = prod % _U64(F.P)                      # (batch..., 16, 16) < 2^31
+    s = jnp.sum(prod, axis=-2) % _U64(F.P)       # 16 * 2^31 < 2^36: safe
+    return s.astype(_U32)
+
+
+@jax.jit
+def permute(state: jnp.ndarray) -> jnp.ndarray:
+    """Apply the permutation to (..., 16) BabyBear states."""
+    mds, rc = _params()
+    mds = jnp.asarray(mds)
+    rc = jnp.asarray(rc)
+    half = FULL_ROUNDS // 2
+    r = 0
+    for _ in range(half):
+        state = F.fadd(state, rc[r])
+        state = _sbox(state)
+        state = _matmul_mod(state, mds)
+        r += 1
+    for _ in range(PARTIAL_ROUNDS):
+        state = F.fadd(state, rc[r])
+        state = state.at[..., 0].set(_sbox(state[..., 0]))
+        state = _matmul_mod(state, mds)
+        r += 1
+    for _ in range(half):
+        state = F.fadd(state, rc[r])
+        state = _sbox(state)
+        state = _matmul_mod(state, mds)
+        r += 1
+    return state
+
+
+def compress(left: jnp.ndarray, right: jnp.ndarray) -> jnp.ndarray:
+    """2-to-1 compression for Merkle: (..., 8),(..., 8) -> (..., 8)."""
+    state = jnp.concatenate([left, right], axis=-1)
+    return permute(state)[..., :DIGEST]
+
+
+def hash_rows(rows: jnp.ndarray) -> jnp.ndarray:
+    """Sponge-hash each row of (..., n, k) field elements -> (..., n, 8).
+
+    k is padded to a multiple of RATE; absorb RATE lanes per permutation.
+    """
+    *batch, n, k = rows.shape
+    pad = (-k) % RATE
+    if pad:
+        rows = jnp.pad(rows, [(0, 0)] * (rows.ndim - 1) + [(0, pad)])
+        k += pad
+    state = jnp.zeros(tuple(batch) + (n, WIDTH), _U32)
+    # domain-separate by absorbed length
+    state = state.at[..., WIDTH - 1].set(_U32(k % F.P))
+    for blk in range(k // RATE):
+        chunk = rows[..., blk * RATE:(blk + 1) * RATE]
+        state = state.at[..., :RATE].set(F.fadd(state[..., :RATE], chunk))
+        state = permute(state)
+    return state[..., :DIGEST]

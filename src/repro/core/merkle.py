@@ -1,0 +1,70 @@
+"""Merkle tree over BabyBear rows (Poseidon-like compression).
+
+Commits to a 2D matrix (n_leaves, row_width): leaf i hashes row i, internal
+nodes use 2-to-1 compression. Openings return the row plus the authentication
+path. All layers are materialized as jnp arrays (prover-side); verification is
+pure and cheap.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dc_field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import field as F
+from . import hashing as H
+
+_U32 = jnp.uint32
+
+
+@dataclass
+class MerkleTree:
+    leaves: jnp.ndarray          # (n, width) committed rows
+    layers: list                 # [(n,8), (n/2,8), ..., (1,8)]
+
+    @property
+    def root(self) -> jnp.ndarray:
+        return self.layers[-1][0]
+
+
+def commit(rows: jnp.ndarray) -> MerkleTree:
+    """rows: (n, width) with n a power of two."""
+    n = rows.shape[0]
+    assert n & (n - 1) == 0, "leaf count must be a power of two"
+    layer = H.hash_rows(rows)                       # (n, 8)
+    layers = [layer]
+    while layer.shape[0] > 1:
+        layer = H.compress(layer[0::2], layer[1::2])
+        layers.append(layer)
+    return MerkleTree(leaves=rows, layers=layers)
+
+
+def open_at(tree: MerkleTree, indices: jnp.ndarray):
+    """Open leaves at ``indices`` (k,). Returns (rows (k,width), path (k,d,8))."""
+    rows = tree.leaves[indices]
+    sibs = []
+    idx = indices
+    for layer in tree.layers[:-1]:
+        sibs.append(layer[idx ^ 1])
+        idx = idx // 2
+    path = jnp.stack(sibs, axis=1) if sibs else jnp.zeros((len(indices), 0, 8), _U32)
+    return rows, path
+
+
+def verify_open(root, indices, rows, path) -> jnp.ndarray:
+    """Vectorized path check. Returns bool scalar (all openings valid)."""
+    node = H.hash_rows(rows)                       # (k, 8)
+    idx = jnp.asarray(indices)
+    ok = jnp.array(True)
+    depth = path.shape[1]
+    for d in range(depth):
+        sib = path[:, d]
+        is_right = (idx & 1).astype(bool)[:, None]
+        left = jnp.where(is_right, sib, node)
+        right = jnp.where(is_right, node, sib)
+        node = H.compress(left, right)
+        idx = idx // 2
+    ok = jnp.all(node == root[None, :])
+    return ok

@@ -1,0 +1,2 @@
+from . import (all_shortest, birc, expansion, orderby, reachability,
+               set_expansion, sssp)  # noqa: F401

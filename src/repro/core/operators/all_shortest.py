@@ -1,0 +1,116 @@
+"""All-shortest-path enumeration (paper §IV-E).
+
+Reduction (as in the paper): with dist(s,t) = d proven by the SSSP operator,
+the set of final hops of all distinct shortest paths is
+    { p : dist(s,p) = d-1  and  (p,t) in E }.
+This circuit consumes the same public distance column D as the SSSP proof
+(the planner checks the instance columns match across the chained proofs) and
+emits that frontier as its public output.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .. import field as F
+from ..plonkish import Circuit, Const
+from .common import Operator, eq_flag_gadget, fill_eq_flag, pad_col, region_selector
+
+
+def build(n_rows: int, m_edges: int, n_nodes: int,
+          undirected: bool = True) -> Operator:
+    c = Circuit(n_rows, name="all_shortest")
+    U = c.add_data("U")
+    V = c.add_data("V")
+    N = c.add_data("N")
+    sel_e = region_selector(c, "sel_edge", m_edges)
+    sel_n = region_selector(c, "sel_node", n_nodes)
+    id_t = c.add_instance("id_t")
+    d = c.add_instance("d")              # claimed shortest distance s->t
+    D = c.add_instance("D")              # distances (shared with SSSP proof)
+    out_sel = c.add_instance("out_sel")
+    C_out = c.add_instance("C_out")
+    UD = c.add_advice("UD")
+    c.add_bus("ud", [U, UD], [N, D], m_f=sel_e, t_sel=sel_n)
+    ft, inv_t = eq_flag_gadget(c, "tgt", V, id_t, sel_e)
+    fe, inv_e = eq_flag_gadget(c, "dm1", UD, d - Const(1), sel_e)
+    se = c.add_advice("se")
+    c.add_gate("se_def", se - ft * fe)
+    handles = dict(U=U, V=V, N=N, sel_e=sel_e, sel_n=sel_n, id_t=id_t, d=d,
+                   D=D, out_sel=out_sel, C_out=C_out, UD=UD, ft=ft,
+                   inv_t=inv_t, fe=fe, inv_e=inv_e, se=se, m_edges=m_edges,
+                   n_nodes=n_nodes, undirected=undirected)
+    if not undirected:
+        c.add_multiset_equal("out_perm", [C_out], out_sel, [U], se)
+    else:
+        VD = c.add_advice("VD")
+        c.add_bus("vd", [V, VD], [N, D], m_f=sel_e, t_sel=sel_n)
+        gt, inv_t2 = eq_flag_gadget(c, "tgt_b", U, id_t, sel_e)
+        ge, inv_e2 = eq_flag_gadget(c, "dm1_b", VD, d - Const(1), sel_e)
+        se2 = c.add_advice("se2")
+        c.add_gate("se2_def", se2 - gt * ge)
+        out_dir = c.add_instance("out_dir")
+        m_fwd = c.add_advice("m_out_fwd")
+        m_bwd = c.add_advice("m_out_bwd")
+        c.add_gate("m_fwd_def", m_fwd - out_sel * out_dir)
+        c.add_gate("m_bwd_def", m_bwd - out_sel * (Const(1) - out_dir))
+        c.add_multiset_equal("out_fwd", [C_out], m_fwd, [U], se)
+        c.add_multiset_equal("out_bwd", [C_out], m_bwd, [V], se2)
+        handles.update(VD=VD, gt=gt, inv_t2=inv_t2, ge=ge, inv_e2=inv_e2,
+                       se2=se2, out_dir=out_dir, m_fwd=m_fwd, m_bwd=m_bwd)
+    op = Operator("all_shortest", c)
+    op.handles = handles
+    return op
+
+
+def witness(op: Operator, src, dst, node_ids, dist, id_t: int, d: int):
+    h = op.handles
+    n = op.circuit.n_rows
+    m, nn = h["m_edges"], h["n_nodes"]
+    data = op.new_data()
+    advice = op.new_advice()
+    inst = op.new_instance()
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    node_ids = np.asarray(node_ids, np.int64)
+    dist = np.asarray(dist, np.int64)
+    data[h["U"].index] = pad_col(src, n)
+    data[h["V"].index] = pad_col(dst, n)
+    data[h["N"].index] = pad_col(node_ids, n)
+    inst[h["id_t"].index] = id_t
+    inst[h["d"].index] = d
+    inst[h["D"].index, :nn] = dist
+    sel_e = np.zeros(n, np.int64)
+    sel_e[:m] = 1
+    idx_of = {int(v): i for i, v in enumerate(node_ids.tolist())}
+    ud = np.asarray([dist[idx_of[int(u)]] for u in src], np.int64)
+    advice[h["UD"].index] = pad_col(ud, n)
+    fill_eq_flag(advice, h["ft"], h["inv_t"], data[h["V"].index],
+                 np.full(n, id_t), sel_e)
+    fill_eq_flag(advice, h["fe"], h["inv_e"], advice[h["UD"].index],
+                 np.full(n, d - 1), sel_e)
+    se = advice[h["ft"].index].astype(np.int64) * advice[h["fe"].index]
+    advice[h["se"].index] = se
+    if not h["undirected"]:
+        k = int(se.sum())
+        inst[h["out_sel"].index, :k] = 1
+        inst[h["C_out"].index, :k] = data[h["U"].index][se.astype(bool)]
+    else:
+        vd = np.asarray([dist[idx_of[int(v)]] for v in dst], np.int64)
+        advice[h["VD"].index] = pad_col(vd, n)
+        fill_eq_flag(advice, h["gt"], h["inv_t2"], data[h["U"].index],
+                     np.full(n, id_t), sel_e)
+        fill_eq_flag(advice, h["ge"], h["inv_e2"], advice[h["VD"].index],
+                     np.full(n, d - 1), sel_e)
+        se2 = advice[h["gt"].index].astype(np.int64) * advice[h["ge"].index]
+        advice[h["se2"].index] = se2
+        kf, kb = int(se.sum()), int(se2.sum())
+        k = kf + kb
+        inst[h["out_sel"].index, :k] = 1
+        inst[h["out_dir"].index, :kf] = 1
+        inst[h["C_out"].index, :kf] = data[h["U"].index][se.astype(bool)]
+        inst[h["C_out"].index, kf:k] = data[h["V"].index][se2.astype(bool)]
+        advice[h["m_fwd"].index] = inst[h["out_sel"].index] * \
+            inst[h["out_dir"].index]
+        advice[h["m_bwd"].index] = inst[h["out_sel"].index] * \
+            (1 - inst[h["out_dir"].index])
+    return advice, inst, data

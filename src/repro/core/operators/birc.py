@@ -1,0 +1,49 @@
+"""Bidirectional relationship canonicalization (paper §IV-D).
+
+Vieta's trick: (min,max) is the unique ordered root pair of
+x^2 - (U+V)x + UV, enforced by sum/product invariants + an order constraint.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..plonkish import Circuit, Const
+from .common import Operator, pad_col, region_selector
+from .set_expansion import SENTINEL_BITS, _fill_named_range
+
+
+def build(n_rows: int, m_edges: int) -> Operator:
+    c = Circuit(n_rows, name="birc")
+    U = c.add_data("U")
+    V = c.add_data("V")
+    sel = region_selector(c, "sel_edge", m_edges)
+    L = c.add_instance("L")      # canonical min (public output)
+    H = c.add_instance("H")      # canonical max
+    c.add_gate("sum_invariant", sel * (U + V - L - H))
+    c.add_gate("prod_invariant", sel * (U * V - L * H))
+    c.add_range_check("order", H - L, SENTINEL_BITS, sel=sel)
+    op = Operator("birc", c)
+    op.handles = dict(U=U, V=V, sel=sel, L=L, H=H, m_edges=m_edges)
+    return op
+
+
+def witness(op: Operator, src, dst):
+    h = op.handles
+    n = op.circuit.n_rows
+    data = op.new_data()
+    advice = op.new_advice()
+    inst = op.new_instance()
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    data[h["U"].index] = pad_col(src, n)
+    data[h["V"].index] = pad_col(dst, n)
+    lo = np.minimum(src, dst)
+    hi = np.maximum(src, dst)
+    inst[h["L"].index, : len(lo)] = lo
+    inst[h["H"].index, : len(hi)] = hi
+    sel = np.zeros(n, np.int64)
+    sel[: h["m_edges"]] = 1
+    diff = np.zeros(n, np.int64)
+    diff[: len(lo)] = hi - lo
+    _fill_named_range(op.circuit, advice, "order", np.where(sel, diff, 0))
+    return advice, inst, data

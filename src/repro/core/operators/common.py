@@ -1,0 +1,167 @@
+"""Shared circuit gadgets + witness helpers for the graph operators."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dc_field
+
+import numpy as np
+
+from .. import field as F
+from .. import prover as pv
+from .. import verifier as vf
+from ..plonkish import Circuit, Col, Const, Expr
+
+
+def host_inv(x: np.ndarray) -> np.ndarray:
+    """Vectorized modular inverse on the host (witness side only)."""
+    import jax.numpy as jnp
+    arr = jnp.asarray(np.asarray(x, np.int64) % F.P).astype(jnp.uint32)
+    return np.asarray(F.fbatch_inv(arr)).astype(np.int64)
+
+
+def eq_flag_gadget(c: Circuit, name: str, lhs: Expr, rhs: Expr, sel: Expr):
+    """fl = 1 iff lhs == rhs on selected rows (standard inverse trick).
+
+    Gates: fl boolean; sel*fl*(lhs-rhs)=0; sel*(1-fl)*((lhs-rhs)*inv - 1)=0.
+    Returns (fl, inv) advice columns. Witness: use fill_eq_flag.
+    """
+    fl = c.add_advice(f"{name}/fl")
+    inv = c.add_advice(f"{name}/inv")
+    diff = lhs - rhs
+    c.add_gate(f"{name}/bool", fl * (Const(1) - fl))
+    c.add_gate(f"{name}/zero", sel * fl * diff)
+    c.add_gate(f"{name}/nonzero", sel * (Const(1) - fl) * (diff * inv - Const(1)))
+    return fl, inv
+
+
+def fill_eq_flag(advice, fl: Col, inv: Col, lhs_vals, rhs_vals, sel_vals):
+    lhs = np.asarray(lhs_vals, np.int64) % F.P
+    rhs = np.asarray(rhs_vals, np.int64) % F.P
+    sel = np.asarray(sel_vals, np.int64)
+    eq = (lhs == rhs) & (sel != 0)
+    advice[fl.index] = eq.astype(np.uint32)
+    diff = (lhs - rhs) % F.P
+    invv = host_inv(diff)
+    advice[inv.index] = np.where((sel != 0) & ~eq, invv, 0).astype(np.uint32)
+
+
+def region_selector(c: Circuit, name: str, length: int) -> Col:
+    vals = np.zeros(c.n_rows, np.uint32)
+    vals[:length] = 1
+    return c.add_fixed(name, vals)
+
+
+def pad_col(vals, n: int) -> np.ndarray:
+    out = np.zeros(n, np.int64)
+    v = np.asarray(vals, np.int64)
+    out[: len(v)] = v
+    return out % F.P
+
+
+@dataclass
+class Operator:
+    """A compiled operator: circuit + keys + the filled column layout."""
+    name: str
+    circuit: Circuit
+    keys: pv.Keys = None
+    handles: dict = dc_field(default_factory=dict)
+
+    def keygen(self, cfg: pv.ProverConfig = None):
+        self.keys = pv.keygen(self.circuit, cfg or pv.ProverConfig())
+        return self
+
+    def new_advice(self):
+        return np.zeros((self.circuit.n_advice, self.circuit.n_rows), np.uint32)
+
+    def new_instance(self):
+        return np.zeros((self.circuit.n_instance, self.circuit.n_rows), np.uint32)
+
+    def new_data(self):
+        return np.zeros((self.circuit.n_data, self.circuit.n_rows), np.uint32)
+
+    def prove(self, advice, instance, data=None):
+        assert self.keys is not None, "call keygen() first"
+        return pv.prove(self.keys, advice, instance, data, label=self.name)
+
+    def verify(self, instance, proof, expected_data_root=None) -> bool:
+        return vf.verify(self.keys, instance, proof, expected_data_root,
+                         label=self.name)
+
+
+def check_constraints(op: Operator, advice, instance, data=None,
+                      seed: int = 0) -> list:
+    """Fast witness validation on H (no proof): returns list of violated
+    constraint names. Gates are checked exactly; buses/grand-products with a
+    random challenge (sound whp)."""
+    import jax.numpy as jnp
+    from .. import prover as pv_mod
+    from ..plonkish import ADVICE, DATA, FIXED, INSTANCE, BaseOps, eval_expr
+
+    c = op.circuit
+    c.assign_ext_cols()
+    n = c.n_rows
+    if data is None:
+        data = np.zeros((0, n), np.uint32)
+    adv = advice.copy()
+    pv_mod.auto_multiplicities(c, data, adv, instance)
+    fixed_n = jnp.asarray(np.stack(c.fixed_cols)
+                          if c.fixed_cols else np.zeros((0, n), np.uint32))
+    srcs = {FIXED: fixed_n, ADVICE: jnp.asarray(adv.astype(np.uint32)),
+            INSTANCE: jnp.asarray(instance.astype(np.uint32)),
+            DATA: jnp.asarray(np.asarray(data).astype(np.uint32))}
+
+    def getter(kind, idx, rot):
+        return jnp.roll(srcs[kind][idx], -rot)
+
+    like = jnp.zeros(n, jnp.uint32)
+    bad = []
+    for name, gate in c.gates:
+        v = eval_expr(gate, getter, BaseOps, like)
+        if int(jnp.max(v)) != 0:
+            bad.append(f"gate:{name}@rows{np.nonzero(np.asarray(v))[0][:5].tolist()}")
+    rng = np.random.default_rng(seed)
+    alpha = jnp.asarray(rng.integers(1, F.P, size=4).astype(np.uint32))
+    beta = jnp.asarray(rng.integers(1, F.P, size=4).astype(np.uint32))
+    ext_cols = pv_mod.build_ext_columns(c, getter, like, alpha, beta)
+    # a bus/gp is satisfied iff its helper column telescopes around the cycle:
+    # check the wrap increment (constraint at row n-1 -> row 0)
+    from ..plonkish import compress_tuple
+    i = 0
+    for bus in c.buses:
+        h = ext_cols[i]
+        f_vals = [eval_expr(e, getter, BaseOps, like) for e in bus.f_tuple]
+        t_vals = [eval_expr(e, getter, BaseOps, like) for e in bus.t_tuple]
+        m_f = eval_expr(bus.m_f, getter, BaseOps, like)
+        m_t = eval_expr(bus.m_t * bus.t_sel, getter, BaseOps, like)
+        d_f = F.eadd(jnp.broadcast_to(beta, (n, 4)), compress_tuple(f_vals, alpha))
+        d_t = F.eadd(jnp.broadcast_to(beta, (n, 4)), compress_tuple(t_vals, alpha))
+        h1 = jnp.roll(h, -1, axis=0)
+        lhs = F.emul(F.esub(h1, h), F.emul(d_f, d_t))
+        rhs = F.esub(F.fmul(d_t, m_f[:, None]), F.fmul(d_f, m_t[:, None]))
+        if not np.array_equal(np.asarray(lhs), np.asarray(rhs)):
+            bad.append(f"bus:{bus.name}")
+        i += 1
+    for gp in c.gps:
+        zc = ext_cols[i]
+        total_ok = np.array_equal(np.asarray(zc[0]), F.EXT_ONE)
+        # wrap: Z[0] must equal Z[n-1] * ratio[n-1]; build_ext computed the
+        # full cyclic product into Z via prefix, so check product == 1
+        c1 = [eval_expr(e, getter, BaseOps, like) for e in gp.c1_tuple]
+        c2 = [eval_expr(e, getter, BaseOps, like) for e in gp.c2_tuple]
+        s1 = eval_expr(gp.sel1, getter, BaseOps, like)
+        s2 = eval_expr(gp.sel2, getter, BaseOps, like)
+        one = jnp.zeros((n, 4), jnp.uint32).at[:, 0].set(1)
+        d1 = F.eadd(jnp.broadcast_to(beta, (n, 4)), compress_tuple(c1, alpha))
+        d2 = F.eadd(jnp.broadcast_to(beta, (n, 4)), compress_tuple(c2, alpha))
+        f1 = F.eadd(F.fmul(d1, s1[:, None]),
+                    F.fmul(one, F.fsub(jnp.full_like(s1, 1), s1)[:, None]))
+        f2 = F.eadd(F.fmul(d2, s2[:, None]),
+                    F.fmul(one, F.fsub(jnp.full_like(s2, 1), s2)[:, None]))
+        prod1 = f1[0]
+        prod2 = f2[0]
+        for r in range(1, n):
+            prod1 = F.emul(prod1, f1[r])
+            prod2 = F.emul(prod2, f2[r])
+        if not (total_ok and np.array_equal(np.asarray(prod1), np.asarray(prod2))):
+            bad.append(f"gp:{gp.name}")
+        i += 1
+    return bad

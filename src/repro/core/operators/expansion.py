@@ -1,0 +1,160 @@
+"""Single-source expansion (paper §IV-A) — edge-list AND CSR circuit designs.
+
+Edge-list: flag column + inverse-trick completeness gates + one multiset
+permutation argument binding the public output table to the flagged edges.
+
+CSR: the paper's comparison design — node-LUT / row-pointer lookups for
+(idx_s, l_s, r_s), a 3-way partition (selected / below / above) with gated
+range checks, and the output multiset argument. Strictly more buses + range
+checks than edge-list: this is what Table I measures.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .. import field as F
+from ..plonkish import Circuit, Const
+from . import common
+from .common import Operator, eq_flag_gadget, fill_eq_flag, pad_col, region_selector
+
+
+# ---------------------------------------------------------------------------
+# edge-list format
+# ---------------------------------------------------------------------------
+def build_edge_list(n_rows: int, m_edges: int, with_prop: bool = False,
+                    reverse: bool = False) -> Operator:
+    """``reverse=True`` expands along incoming edges (flag on B, output
+    (B, A)) over the *same* committed table — used for undirected relations
+    and inverted traversals without re-committing data."""
+    c = Circuit(n_rows, name="expand_el" + ("_rev" if reverse else ""))
+    A = c.add_data("A")
+    B = c.add_data("B")
+    P = c.add_data("Val") if with_prop else None
+    sel_e = region_selector(c, "sel_edge", m_edges)
+    id_s = c.add_instance("id_s")
+    out_sel = c.add_instance("out_sel")
+    C_s = c.add_instance("C_s")
+    C_t = c.add_instance("C_t")
+    C_p = c.add_instance("C_p") if with_prop else None
+    key, other = (B, A) if reverse else (A, B)
+    fl, inv = eq_flag_gadget(c, "flag", key, id_s, sel_e)
+    out_tuple = [C_s, C_t] + ([C_p] if with_prop else [])
+    edge_tuple = [key, other] + ([P] if with_prop else [])
+    c.add_multiset_equal("out_perm", out_tuple, out_sel, edge_tuple, fl)
+    op = Operator(c.name, c)
+    op.handles = dict(A=A, B=B, P=P, sel_e=sel_e, id_s=id_s, out_sel=out_sel,
+                      C_s=C_s, C_t=C_t, C_p=C_p, fl=fl, inv=inv,
+                      m_edges=m_edges, with_prop=with_prop, reverse=reverse)
+    return op
+
+
+def witness_edge_list(op: Operator, src, dst, id_s: int, prop=None):
+    h = op.handles
+    n = op.circuit.n_rows
+    m = h["m_edges"]
+    assert len(src) == m
+    data = op.new_data()
+    advice = op.new_advice()
+    inst = op.new_instance()
+    data[h["A"].index] = pad_col(src, n)
+    data[h["B"].index] = pad_col(dst, n)
+    if h["with_prop"]:
+        data[h["P"].index] = pad_col(prop, n)
+    key_col = data[h["B"].index] if h["reverse"] else data[h["A"].index]
+    other_col = data[h["A"].index] if h["reverse"] else data[h["B"].index]
+    sel = np.zeros(n, np.int64)
+    sel[:m] = 1
+    fill_eq_flag(advice, h["fl"], h["inv"], key_col, np.full(n, id_s), sel)
+    flv = advice[h["fl"].index].astype(bool)
+    k = int(flv.sum())
+    inst[h["id_s"].index] = id_s
+    inst[h["out_sel"].index, :k] = 1
+    inst[h["C_s"].index, :k] = id_s
+    inst[h["C_t"].index, :k] = other_col[flv]
+    if h["with_prop"]:
+        inst[h["C_p"].index, :k] = data[h["P"].index][flv]
+    return advice, inst, data
+
+
+# ---------------------------------------------------------------------------
+# CSR format
+# ---------------------------------------------------------------------------
+def build_csr(n_rows: int, len_col: int, n_nodes: int, id_bits: int) -> Operator:
+    c = Circuit(n_rows, name="expand_csr")
+    Colm = c.add_data("Col")         # concatenated targets
+    RowP = c.add_data("Row")         # row pointers (n_nodes + 1 entries)
+    LUT = c.add_data("NodeLUT")      # node id at each row index
+    cidx = c.add_fixed("C_idx", np.arange(n_rows))
+    sel_c = region_selector(c, "sel_col", len_col)
+    sel_n = region_selector(c, "sel_node", n_nodes)
+    sel_p = region_selector(c, "sel_ptr", n_nodes + 1)
+    id_s = c.add_instance("id_s")
+    out_sel = c.add_instance("out_sel")
+    C_s = c.add_instance("C_s")
+    C_t = c.add_instance("C_t")
+    idx_s = c.add_advice("idx_s")
+    l_s = c.add_advice("l_s")
+    r_s = c.add_advice("r_s")
+    sel = c.add_advice("sel")        # k in [l_s, r_s)
+    b1 = c.add_advice("b1")          # k < l_s
+    b2 = c.add_advice("b2")          # k >= r_s
+    # lookups for idx_s / l_s / r_s correctness (paper: node LUT + Row)
+    c.add_bus("lut", [idx_s, id_s], [cidx, LUT], m_f=sel_c, t_sel=sel_n)
+    c.add_bus("lo", [idx_s, l_s], [cidx, RowP], m_f=sel_c, t_sel=sel_p)
+    c.add_bus("hi", [idx_s + Const(1), r_s], [cidx, RowP], m_f=sel_c, t_sel=sel_p)
+    # 3-way partition with gated range checks
+    for b in (sel, b1, b2):
+        c.add_gate(f"bool_{b.index}", b * (Const(1) - b))
+    c.add_gate("partition", sel_c * (sel + b1 + b2 - Const(1)))
+    c.add_gate("off_region", (Const(1) - sel_c) * (sel + b1 + b2))
+    bits = id_bits
+    rc_in_lo = c.add_range_check("in_lo", cidx - l_s, bits, sel=sel)
+    rc_in_hi = c.add_range_check("in_hi", r_s - Const(1) - cidx, bits, sel=sel)
+    rc_b1 = c.add_range_check("below", l_s - Const(1) - cidx, bits, sel=b1)
+    rc_b2 = c.add_range_check("above", cidx - r_s, bits, sel=b2)
+    # output multiset == selected Col entries
+    c.add_multiset_equal("out_perm", [C_s, C_t], out_sel, [id_s, Colm], sel)
+    op = Operator("expand_csr", c)
+    op.handles = dict(Col=Colm, Row=RowP, LUT=LUT, sel_c=sel_c, sel_n=sel_n,
+                      sel_p=sel_p, id_s=id_s, out_sel=out_sel, C_s=C_s,
+                      C_t=C_t, idx_s=idx_s, l_s=l_s, r_s=r_s, sel=sel, b1=b1,
+                      b2=b2, rcs=(rc_in_lo, rc_in_hi, rc_b1, rc_b2),
+                      len_col=len_col, n_nodes=n_nodes)
+    return op
+
+
+def witness_csr(op: Operator, col, row_ptr, node_lut, id_s: int):
+    from ..plonkish import fill_range_limbs
+    h = op.handles
+    n = op.circuit.n_rows
+    data = op.new_data()
+    advice = op.new_advice()
+    inst = op.new_instance()
+    data[h["Col"].index] = pad_col(col, n)
+    data[h["Row"].index] = pad_col(row_ptr, n)
+    data[h["LUT"].index] = pad_col(node_lut, n)
+    i_s = int(np.nonzero(np.asarray(node_lut) == id_s)[0][0])
+    ls, rs = int(row_ptr[i_s]), int(row_ptr[i_s + 1])
+    advice[h["idx_s"].index] = i_s
+    advice[h["l_s"].index] = ls
+    advice[h["r_s"].index] = rs
+    k_idx = np.arange(n)
+    region = k_idx < h["len_col"]
+    in_rng = region & (k_idx >= ls) & (k_idx < rs)
+    below = region & (k_idx < ls)
+    above = region & (k_idx >= rs)
+    advice[h["sel"].index] = in_rng
+    advice[h["b1"].index] = below
+    advice[h["b2"].index] = above
+    rc_in_lo, rc_in_hi, rc_b1, rc_b2 = h["rcs"]
+    z = np.zeros(n, np.int64)
+    fill_range_limbs(advice, *rc_in_lo, np.where(in_rng, k_idx - ls, z))
+    fill_range_limbs(advice, *rc_in_hi, np.where(in_rng, rs - 1 - k_idx, z))
+    fill_range_limbs(advice, *rc_b1, np.where(below, ls - 1 - k_idx, z))
+    fill_range_limbs(advice, *rc_b2, np.where(above, k_idx - rs, z))
+    k = rs - ls
+    inst[h["id_s"].index] = id_s
+    inst[h["out_sel"].index, :k] = 1
+    inst[h["C_s"].index, :k] = id_s
+    inst[h["C_t"].index, :k] = np.asarray(col[ls:rs]) % F.P
+    return advice, inst, data

@@ -1,0 +1,131 @@
+"""order-by + limit-k (paper §IV-E).
+
+Pivot strategy: val_k = value of the k-th entry after sorting. IS_k marks the
+selected top-k rows; constraints force every marked value to be on the correct
+side of the pivot, the pivot itself to be one of the marked entries, the mark
+count to be exactly k, and the public output to be the multiset of marked
+(value, payload) pairs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..plonkish import Circuit, Const
+from .common import Operator, pad_col, region_selector
+from .set_expansion import _fill_named_range
+
+VAL_BITS = 28
+
+
+def instance_rot(col):
+    return col.rotate(1)
+
+
+def build(n_rows: int, m_in: int, k: int, descending: bool = True) -> Operator:
+    c = Circuit(n_rows, name="orderby")
+    Val = c.add_data("Val")          # input values (from the previous operator)
+    Pay = c.add_data("Payload")      # carried payload (e.g. node id)
+    sel_in = region_selector(c, "sel_in", m_in)
+    boundary = np.zeros(n_rows, np.uint32)
+    boundary[m_in] = 1               # row just after the input region
+    b_end = c.add_fixed("b_end", boundary)
+    row0 = np.zeros(n_rows, np.uint32)
+    row0[0] = 1
+    onehot0 = c.add_fixed("onehot0", row0)
+    val_k = c.add_instance("val_k")  # the pivot (public)
+    out_sel = c.add_instance("out_sel")
+    O_val = c.add_instance("O_val")
+    O_pay = c.add_instance("O_pay")
+    isk = c.add_advice("IS_k")
+    nk = c.add_advice("IS_nk")       # sel_in * (1 - IS_k), materialized
+    R = c.add_advice("count")        # running count of marks
+    c.add_gate("isk_bool", isk * (Const(1) - isk))
+    c.add_gate("isk_region", (Const(1) - sel_in) * isk)
+    c.add_gate("nk_def", nk - sel_in * (Const(1) - isk))
+    # running count: R[0] = 0; R[i+1] = R[i] + IS_k[i]; R[m_in] = k
+    c.add_gate("count0", onehot0 * R)
+    c.add_gate("count_step", sel_in * (R.rotate(1) - R - isk))
+    c.add_gate("count_final", b_end * (R - Const(k)))
+    # pivot originates from a marked entry
+    c.add_bus("pivot_origin", [val_k], [Val], m_f=onehot0, t_sel=isk)
+    # marked entries beat the pivot; unmarked are beaten by it
+    if descending:
+        c.add_range_check("ge_pivot", Val - val_k, VAL_BITS, sel=isk)
+        c.add_range_check("le_pivot", val_k - Val, VAL_BITS, sel=nk)
+    else:
+        c.add_range_check("ge_pivot", val_k - Val, VAL_BITS, sel=isk)
+        c.add_range_check("le_pivot", Val - val_k, VAL_BITS, sel=nk)
+    # public output = multiset of marked rows
+    c.add_multiset_equal("out_perm", [O_val, O_pay], out_sel, [Val, Pay], isk)
+    # the public listing itself is sorted: adjacent-pair order checks
+    adj = c.add_advice("adj")
+    c.add_gate("adj_def", adj - out_sel * instance_rot(out_sel))
+    if descending:
+        c.add_range_check("out_sorted", O_val - instance_rot(O_val), VAL_BITS,
+                          sel=adj)
+    else:
+        c.add_range_check("out_sorted", instance_rot(O_val) - O_val, VAL_BITS,
+                          sel=adj)
+    op = Operator("orderby", c)
+    op.handles = dict(Val=Val, Pay=Pay, sel_in=sel_in, val_k=val_k,
+                      out_sel=out_sel, O_val=O_val, O_pay=O_pay, isk=isk,
+                      nk=nk, R=R, adj=adj, m_in=m_in, k=k,
+                      descending=descending)
+    return op
+
+
+def witness(op: Operator, values, payload):
+    from ...graphdb.engine import top_k
+    h = op.handles
+    n = op.circuit.n_rows
+    m, k = h["m_in"], h["k"]
+    data = op.new_data()
+    advice = op.new_advice()
+    inst = op.new_instance()
+    values = np.asarray(values, np.int64)
+    payload = np.asarray(payload, np.int64)
+    data[h["Val"].index] = pad_col(values, n)
+    data[h["Pay"].index] = pad_col(payload, n)
+    sel_mask, pivot = top_k(values, k, h["descending"])
+    isk = np.zeros(n, np.int64)
+    isk[:m] = sel_mask
+    advice[h["isk"].index] = isk
+    sel_in = np.zeros(n, np.int64)
+    sel_in[:m] = 1
+    advice[h["nk"].index] = sel_in * (1 - isk)
+    advice[h["R"].index] = np.concatenate([[0], np.cumsum(isk)[:-1]])
+    inst[h["val_k"].index] = pivot
+    kk = int(isk.sum())
+    sel_vals = values[sel_mask]
+    sel_pay = payload[sel_mask]
+    order = np.argsort(sel_vals, kind="stable")
+    if h["descending"]:
+        order = order[::-1]
+    inst[h["out_sel"].index, :kk] = 1
+    inst[h["O_val"].index, :kk] = sel_vals[order]
+    inst[h["O_pay"].index, :kk] = sel_pay[order]
+    # adjacent-order witness
+    out_sel_col = inst[h["out_sel"].index].astype(np.int64)
+    adj = out_sel_col * np.roll(out_sel_col, -1)
+    advice[h["adj"].index] = adj
+    oval = inst[h["O_val"].index].astype(np.int64)
+    if h["descending"]:
+        diff = np.where(adj == 1, oval - np.roll(oval, -1), 0)
+    else:
+        diff = np.where(adj == 1, np.roll(oval, -1) - oval, 0)
+    _fill_named_range(op.circuit, advice, "out_sorted", diff)
+    if h["descending"]:
+        ge = np.where(isk == 1, values_pad(values, n) - pivot, 0)
+        le = np.where(advice[h["nk"].index] == 1, pivot - values_pad(values, n), 0)
+    else:
+        ge = np.where(isk == 1, pivot - values_pad(values, n), 0)
+        le = np.where(advice[h["nk"].index] == 1, values_pad(values, n) - pivot, 0)
+    _fill_named_range(op.circuit, advice, "ge_pivot", ge)
+    _fill_named_range(op.circuit, advice, "le_pivot", le)
+    return advice, inst, data
+
+
+def values_pad(values, n):
+    out = np.zeros(n, np.int64)
+    out[: len(values)] = values
+    return out

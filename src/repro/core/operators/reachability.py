@@ -1,0 +1,79 @@
+"""Reachability (paper §IV-E): path-witness verification.
+
+The prover supplies a node sequence; lookups check that both endpoints appear
+in the sequence and that every consecutive pair is an edge. Bidirectional
+tables are handled with the dual-orientation trick (integrated BiRC).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..plonkish import Circuit, Const
+from .common import Operator, pad_col, region_selector
+
+
+def build(n_rows: int, m_edges: int, path_len: int,
+          undirected: bool = True) -> Operator:
+    c = Circuit(n_rows, name="reach")
+    U = c.add_data("U")
+    V = c.add_data("V")
+    sel_e = region_selector(c, "sel_edge", m_edges)
+    sel_path = region_selector(c, "sel_path", path_len)
+    sel_step = region_selector(c, "sel_step", max(path_len - 1, 0))
+    row0 = np.zeros(n_rows, np.uint32)
+    row0[0] = 1
+    onehot0 = c.add_fixed("onehot0", row0)
+    id_s = c.add_instance("id_s")
+    id_t = c.add_instance("id_t")
+    path = c.add_advice("path")
+    # endpoint presence (lookup into the path witness)
+    c.add_bus("s_present", [id_s], [path], m_f=onehot0, t_sel=sel_path)
+    c.add_bus("t_present", [id_t], [path], m_f=onehot0, t_sel=sel_path)
+    handles = dict(U=U, V=V, sel_e=sel_e, sel_path=sel_path,
+                   sel_step=sel_step, id_s=id_s, id_t=id_t, path=path,
+                   m_edges=m_edges, path_len=path_len, undirected=undirected)
+    if not undirected:
+        c.add_bus("steps", [path, path.rotate(1)], [U, V], m_f=sel_step,
+                  t_sel=sel_e)
+    else:
+        df = c.add_advice("dir_f")
+        db = c.add_advice("dir_b")
+        c.add_gate("dir_split", sel_step * (df + db - Const(1)))
+        c.add_gate("df_bool", df * (Const(1) - df))
+        c.add_gate("db_bool", db * (Const(1) - db))
+        c.add_gate("dir_region", (Const(1) - sel_step) * (df + db))
+        c.add_bus("steps_f", [path, path.rotate(1)], [U, V], m_f=df, t_sel=sel_e)
+        c.add_bus("steps_b", [path, path.rotate(1)], [V, U], m_f=db, t_sel=sel_e)
+        handles.update(df=df, db=db)
+    op = Operator("reach", c)
+    op.handles = handles
+    return op
+
+
+def witness(op: Operator, src, dst, path_nodes, id_s: int, id_t: int):
+    h = op.handles
+    n = op.circuit.n_rows
+    data = op.new_data()
+    advice = op.new_advice()
+    inst = op.new_instance()
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    data[h["U"].index] = pad_col(src, n)
+    data[h["V"].index] = pad_col(dst, n)
+    path = np.asarray(path_nodes, np.int64)
+    assert len(path) == h["path_len"]
+    advice[h["path"].index] = pad_col(path, n)
+    inst[h["id_s"].index] = id_s
+    inst[h["id_t"].index] = id_t
+    if h["undirected"]:
+        pair_fwd = {(int(a), int(b)) for a, b in zip(src, dst)}
+        df = np.zeros(n, np.int64)
+        db = np.zeros(n, np.int64)
+        for i in range(len(path) - 1):
+            if (int(path[i]), int(path[i + 1])) in pair_fwd:
+                df[i] = 1
+            else:
+                db[i] = 1
+        advice[h["df"].index] = df
+        advice[h["db"].index] = db
+    return advice, inst, data

@@ -1,0 +1,187 @@
+"""Set-based expansion (paper §IV-B): greatest-lower-bound matching.
+
+The prover provides a sorted copy (A', B') of the committed edge table plus
+bracketing columns C_aux <= A' < C'_aux whose validity is enforced by a lookup
+into the consecutive-pair table (T1, T2) = (IDs, IDs.rot(1)) of the extended
+sorted start set. Selected edges (A' == C_aux) flow to the public output via
+one multiset argument — O(|E|) circuit cost independent of |S| (Fig. 6b).
+
+The *integrated BiRC* variant (paper §IV-D extension, Table IV) adds a second
+bracketing on B' so canonical undirected edges match by either endpoint.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .. import field as F
+from ..plonkish import Circuit, Const, fill_range_limbs
+from .common import Operator, eq_flag_gadget, fill_eq_flag, pad_col, region_selector
+
+SENTINEL_BITS = 24  # ids live in [1, 2^24-2]; 0 / 2^24-1 are the paper's dummies
+ID_MAX = (1 << SENTINEL_BITS) - 1
+
+
+def build(n_rows: int, m_edges: int, set_size: int,
+          bidirectional: bool = False) -> Operator:
+    c = Circuit(n_rows, name="expand_set" + ("_birc" if bidirectional else ""))
+    A = c.add_data("A")
+    B = c.add_data("B")
+    sel_e = region_selector(c, "sel_edge", m_edges)
+    sel_pairs = region_selector(c, "sel_pairs", set_size + 1)  # S' has s+2 rows
+    IDs = c.add_instance("IDs")          # extended sorted start set S'
+    out_sel = c.add_instance("out_sel")
+    C_s = c.add_instance("C_s")
+    C_t = c.add_instance("C_t")
+    Ap = c.add_advice("A_sorted")
+    Bp = c.add_advice("B_sorted")
+    aux = c.add_advice("C_aux")
+    aux2 = c.add_advice("C_aux_next")
+    # sorted table is a permutation of the committed table
+    c.add_multiset_equal("sort_perm", [Ap, Bp], sel_e, [A, B], sel_e)
+    # S' strictly increasing (public, but enforced in-circuit per the paper)
+    c.add_range_check("ids_sorted", IDs.rotate(1) - IDs - Const(1),
+                      SENTINEL_BITS, sel=sel_pairs)
+    # bracketing: (C_aux, C'_aux) must be consecutive in S' ...
+    c.add_bus("glb_pair", [aux, aux2], [IDs, IDs.rotate(1)], m_f=sel_e,
+              t_sel=sel_pairs)
+    # ... and C_aux <= A' < C'_aux
+    c.add_range_check("glb_lo", Ap - aux, SENTINEL_BITS, sel=sel_e)
+    c.add_range_check("glb_hi", aux2 - Const(1) - Ap, SENTINEL_BITS, sel=sel_e)
+    # selection flag: A' == C_aux
+    fl, inv = eq_flag_gadget(c, "flag", Ap, aux, sel_e)
+    handles = dict(A=A, B=B, sel_e=sel_e, sel_pairs=sel_pairs, IDs=IDs,
+                   out_sel=out_sel, C_s=C_s, C_t=C_t, Ap=Ap, Bp=Bp, aux=aux,
+                   aux2=aux2, fl=fl, inv=inv, m_edges=m_edges,
+                   set_size=set_size, bidirectional=bidirectional)
+    if not bidirectional:
+        c.add_multiset_equal("out_perm", [C_s, C_t], out_sel, [Ap, Bp], fl)
+    else:
+        # second bracket on the other endpoint (canonical undirected storage)
+        aux_b = c.add_advice("C_aux_b")
+        aux2_b = c.add_advice("C_aux_next_b")
+        c.add_bus("glb_pair_b", [aux_b, aux2_b], [IDs, IDs.rotate(1)],
+                  m_f=sel_e, t_sel=sel_pairs)
+        c.add_range_check("glb_lo_b", Bp - aux_b, SENTINEL_BITS, sel=sel_e)
+        c.add_range_check("glb_hi_b", aux2_b - Const(1) - Bp, SENTINEL_BITS,
+                          sel=sel_e)
+        fl_b, inv_b = eq_flag_gadget(c, "flag_b", Bp, aux_b, sel_e)
+        # output direction marker partitions the public output between the
+        # two orientations
+        out_dir = c.add_instance("out_dir")
+        m_fwd = c.add_advice("m_out_fwd")
+        m_bwd = c.add_advice("m_out_bwd")
+        c.add_gate("m_fwd_def", m_fwd - out_sel * out_dir)
+        c.add_gate("m_bwd_def", m_bwd - out_sel * (Const(1) - out_dir))
+        c.add_multiset_equal("out_fwd", [C_s, C_t], m_fwd, [Ap, Bp], fl)
+        c.add_multiset_equal("out_bwd", [C_s, C_t], m_bwd, [Bp, Ap], fl_b)
+        handles.update(aux_b=aux_b, aux2_b=aux2_b, fl_b=fl_b, inv_b=inv_b,
+                       out_dir=out_dir, m_fwd=m_fwd, m_bwd=m_bwd)
+    op = Operator(c.name, c)
+    op.handles = handles
+    return op
+
+
+def _extended_sorted(ids, set_size):
+    s = np.sort(np.asarray(ids, np.int64))
+    assert len(s) == set_size
+    return np.concatenate([[0], s, [ID_MAX]])
+
+
+def _glb(sorted_ext: np.ndarray, vals: np.ndarray):
+    """greatest-lower-bound + successor for each value."""
+    pos = np.searchsorted(sorted_ext, vals, side="right") - 1
+    pos = np.clip(pos, 0, len(sorted_ext) - 2)
+    return sorted_ext[pos], sorted_ext[pos + 1]
+
+
+def witness(op: Operator, src, dst, ids):
+    """ids: the start set (unextended). Returns (advice, instance, data)."""
+    h = op.handles
+    c = op.circuit
+    n = c.n_rows
+    m = h["m_edges"]
+    data = op.new_data()
+    advice = op.new_advice()
+    inst = op.new_instance()
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    data[h["A"].index] = pad_col(src, n)
+    data[h["B"].index] = pad_col(dst, n)
+    order = np.argsort(src, kind="stable")
+    Ap = pad_col(src[order], n)
+    Bp = pad_col(dst[order], n)
+    advice[h["Ap"].index] = Ap
+    advice[h["Bp"].index] = Bp
+    s_ext = _extended_sorted(ids, h["set_size"])
+    inst[h["IDs"].index, : len(s_ext)] = s_ext
+    sel = np.zeros(n, np.int64)
+    sel[:m] = 1
+    # sortedness limbs for IDs (instance rotation): diff of consecutive
+    ids_col = inst[h["IDs"].index].astype(np.int64)
+    diff = np.where(np.arange(n) < h["set_size"] + 1,
+                    np.roll(ids_col, -1) - ids_col - 1, 0)
+    _fill_named_range(c, advice, "ids_sorted", diff)
+    # bracketing on A'
+    glb, suc = _glb(s_ext, Ap[:m])
+    aux = pad_col(glb, n)
+    aux2 = pad_col(suc, n)
+    # padding rows: keep aux pair valid-shaped but unselected (sel gates)
+    advice[h["aux"].index] = aux
+    advice[h["aux2"].index] = aux2
+    _fill_named_range(c, advice, "glb_lo", np.where(sel, (Ap - aux) % F.P, 0))
+    _fill_named_range(c, advice, "glb_hi",
+                      np.where(sel, (aux2 - 1 - Ap) % F.P, 0))
+    fill_eq_flag(advice, h["fl"], h["inv"], Ap, aux, sel)
+    flv = advice[h["fl"].index].astype(bool)
+    if not h["bidirectional"]:
+        k = int(flv.sum())
+        inst[h["out_sel"].index, :k] = 1
+        inst[h["C_s"].index, :k] = Ap[flv]
+        inst[h["C_t"].index, :k] = Bp[flv]
+    else:
+        glb_b, suc_b = _glb(s_ext, Bp[:m])
+        aux_b = pad_col(glb_b, n)
+        aux2_b = pad_col(suc_b, n)
+        advice[h["aux_b"].index] = aux_b
+        advice[h["aux2_b"].index] = aux2_b
+        _fill_named_range(c, advice, "glb_lo_b",
+                          np.where(sel, (Bp - aux_b) % F.P, 0))
+        _fill_named_range(c, advice, "glb_hi_b",
+                          np.where(sel, (aux2_b - 1 - Bp) % F.P, 0))
+        fill_eq_flag(advice, h["fl_b"], h["inv_b"], Bp, aux_b, sel)
+        flb = advice[h["fl_b"].index].astype(bool)
+        kf, kb = int(flv.sum()), int(flb.sum())
+        k = kf + kb
+        assert k <= n, f"output ({k}) exceeds circuit rows ({n}): " \
+                       f"size n_rows to the expansion output"
+        inst[h["out_sel"].index, :k] = 1
+        inst[h["out_dir"].index, :kf] = 1
+        inst[h["C_s"].index, :kf] = Ap[flv]
+        inst[h["C_t"].index, :kf] = Bp[flv]
+        inst[h["C_s"].index, kf:k] = Bp[flb]
+        inst[h["C_t"].index, kf:k] = Ap[flb]
+        advice[h["m_fwd"].index] = inst[h["out_sel"].index] * inst[h["out_dir"].index]
+        advice[h["m_bwd"].index] = inst[h["out_sel"].index] * \
+            (1 - inst[h["out_dir"].index])
+    return advice, inst, data
+
+
+def _fill_named_range(c: Circuit, advice, prefix: str, values):
+    """Fill limb columns created by add_range_check under ``prefix``.
+
+    Values that do not fit the declared range are clamped — the recompose
+    gate / limb lookups will then (correctly) reject the witness, which is
+    exactly what a cheating prover faces.
+    """
+    limb_bits = min(16, max(1, int(np.log2(c.n_rows))))
+    v = np.asarray(values, np.int64).copy()
+    v = np.where(v < 0, 0, v)   # unfillable: leave limbs inconsistent
+    j = 0
+    while True:
+        name = f"{prefix}/limb{j}"
+        if name not in c.advice_names:
+            break
+        advice[c.advice_names.index(name)] = v & ((1 << limb_bits) - 1)
+        v >>= limb_bits
+        j += 1
+    assert j > 0, f"no limbs found for {prefix}"

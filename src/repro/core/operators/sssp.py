@@ -1,0 +1,152 @@
+"""Single-source shortest path verification (paper §IV-C).
+
+The prover runs BFS natively (engine.bfs_sssp); the circuit checks
+  node level: source init, distance propagation D = PD + 1 | d_max,
+              predecessor validity via lookups into (N, D) and the edge table;
+  edge level: UD/VD consistency lookups + the Bellman-Ford relaxation
+              VD <= UD + 1 on every edge.
+
+``undirected=True`` is the *integrated BiRC* mode (paper §IV-D extension):
+relaxation is enforced in both orientations and the predecessor edge may be
+matched in either direction — no duplicated edge rows (Table IV).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .. import field as F
+from ..plonkish import Circuit, Const, fill_range_limbs
+from .common import Operator, eq_flag_gadget, fill_eq_flag, pad_col, region_selector
+from .set_expansion import _fill_named_range
+
+
+def build(n_rows: int, m_edges: int, n_nodes: int, d_max: int = None,
+          undirected: bool = True, with_target: bool = False) -> Operator:
+    c = Circuit(n_rows, name="sssp" + ("_birc" if undirected else ""))
+    d_max = d_max if d_max is not None else n_nodes + 1
+    dist_bits = max(2, int(d_max + 2).bit_length())
+    U = c.add_data("U")
+    V = c.add_data("V")
+    N = c.add_data("N")                      # node-id column (node region)
+    sel_e = region_selector(c, "sel_edge", m_edges)
+    sel_n = region_selector(c, "sel_node", n_nodes)
+    id_s = c.add_instance("id_s")
+    D = c.add_instance("D")                  # the public result: distances
+    S, inv_s = eq_flag_gadget(c, "src", N, id_s, sel_n)
+    reach = c.add_advice("reach")
+    P = c.add_advice("P")
+    PD = c.add_advice("PD")
+    UD = c.add_advice("UD")
+    VD = c.add_advice("VD")
+    g = c.add_advice("g")                    # gates predecessor lookups
+    # node-level gates
+    c.add_gate("src_dist", sel_n * S * D)
+    c.add_gate("dist_prop",
+               sel_n * (Const(1) - S) * (D - PD - Const(1)) * (D - Const(d_max)))
+    c.add_gate("reach_bool", reach * (Const(1) - reach))
+    c.add_gate("unreach_dmax", sel_n * (Const(1) - reach) * (D - Const(d_max)))
+    c.add_gate("g_def", g - sel_n * (Const(1) - S) * reach)
+    c.add_range_check("d_range", D, dist_bits, sel=sel_n)
+    # predecessor validity
+    c.add_bus("pred_dist", [P, PD], [N, D], m_f=g, t_sel=sel_n)
+    if not undirected:
+        c.add_bus("pred_edge", [P, N], [U, V], m_f=g, t_sel=sel_e)
+        gf = gb = None
+    else:
+        gf = c.add_advice("g_fwd")
+        gb = c.add_advice("g_bwd")
+        c.add_gate("g_split", g - gf - gb)
+        c.add_gate("gf_bool", gf * (Const(1) - gf))
+        c.add_gate("gb_bool", gb * (Const(1) - gb))
+        c.add_bus("pred_edge_f", [P, N], [U, V], m_f=gf, t_sel=sel_e)
+        c.add_bus("pred_edge_b", [P, N], [V, U], m_f=gb, t_sel=sel_e)
+    # edge-level consistency + relaxation
+    c.add_bus("ud", [U, UD], [N, D], m_f=sel_e, t_sel=sel_n)
+    c.add_bus("vd", [V, VD], [N, D], m_f=sel_e, t_sel=sel_n)
+    c.add_range_check("relax_fwd", UD + Const(1) - VD, dist_bits, sel=sel_e)
+    if undirected:
+        c.add_range_check("relax_bwd", VD + Const(1) - UD, dist_bits, sel=sel_e)
+    id_t = d_t = None
+    if with_target:
+        # IC13-style answer extraction: (id_t, d_t) must be a (N, D) entry
+        row0 = np.zeros(n_rows, np.uint32)
+        row0[0] = 1
+        onehot0 = c.add_fixed("onehot0_t", row0)
+        id_t = c.add_instance("id_t")
+        d_t = c.add_instance("d_t")
+        c.add_bus("target", [id_t, d_t], [N, D], m_f=onehot0, t_sel=sel_n)
+    op = Operator(c.name, c)
+    op.handles = dict(U=U, V=V, N=N, sel_e=sel_e, sel_n=sel_n, id_s=id_s, D=D,
+                      S=S, inv_s=inv_s, reach=reach, P=P, PD=PD, UD=UD, VD=VD,
+                      g=g, gf=gf, gb=gb, m_edges=m_edges, n_nodes=n_nodes,
+                      d_max=d_max, undirected=undirected, id_t=id_t, d_t=d_t)
+    return op
+
+
+def witness(op: Operator, src, dst, node_ids, id_s: int, dist, pred,
+            pred_dist, id_t: int = None):
+    """dist/pred/pred_dist from engine.bfs_sssp aligned with node_ids."""
+    h = op.handles
+    c = op.circuit
+    n = c.n_rows
+    m, nn, d_max = h["m_edges"], h["n_nodes"], h["d_max"]
+    data = op.new_data()
+    advice = op.new_advice()
+    inst = op.new_instance()
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    node_ids = np.asarray(node_ids, np.int64)
+    dist = np.asarray(dist, np.int64)
+    data[h["U"].index] = pad_col(src, n)
+    data[h["V"].index] = pad_col(dst, n)
+    data[h["N"].index] = pad_col(node_ids, n)
+    inst[h["id_s"].index] = id_s
+    inst[h["D"].index, :nn] = dist
+    sel_n = np.zeros(n, np.int64)
+    sel_n[:nn] = 1
+    sel_e = np.zeros(n, np.int64)
+    sel_e[:m] = 1
+    fill_eq_flag(advice, h["S"], h["inv_s"], data[h["N"].index],
+                 np.full(n, id_s), sel_n)
+    reach_v = np.zeros(n, np.int64)
+    reach_v[:nn] = dist < d_max
+    advice[h["reach"].index] = reach_v
+    s_flag = advice[h["S"].index].astype(np.int64)
+    g_v = sel_n * (1 - s_flag) * reach_v
+    advice[h["g"].index] = g_v
+    advice[h["P"].index] = pad_col(np.where(g_v[:nn] == 1, pred, 0), n)
+    advice[h["PD"].index] = pad_col(np.where(g_v[:nn] == 1, pred_dist, 0), n)
+    idx_of = {int(v): i for i, v in enumerate(node_ids.tolist())}
+    ud = np.asarray([dist[idx_of[int(u)]] for u in src], np.int64)
+    vd = np.asarray([dist[idx_of[int(v)]] for v in dst], np.int64)
+    advice[h["UD"].index] = pad_col(ud, n)
+    advice[h["VD"].index] = pad_col(vd, n)
+    if h["undirected"]:
+        # predecessor edge orientation: (P, N) in (U,V) or (V,U)
+        pair_fwd = {(int(a), int(b)) for a, b in zip(src, dst)}
+        gf = np.zeros(n, np.int64)
+        gb = np.zeros(n, np.int64)
+        for i in range(nn):
+            if g_v[i]:
+                p, x = int(advice[h["P"].index][i]), int(node_ids[i])
+                if (p, x) in pair_fwd:
+                    gf[i] = 1
+                else:
+                    gb[i] = 1
+        advice[h["gf"].index] = gf
+        advice[h["gb"].index] = gb
+    if h["id_t"] is not None:
+        assert id_t is not None
+        inst[h["id_t"].index] = id_t
+        t_pos = int(np.nonzero(node_ids == id_t)[0][0])
+        inst[h["d_t"].index] = int(dist[t_pos])
+    dist_col = inst[h["D"].index].astype(np.int64)
+    ud_p, vd_p = np.zeros(n, np.int64), np.zeros(n, np.int64)
+    ud_p[:m], vd_p[:m] = ud, vd
+    _fill_named_range(c, advice, "d_range", np.where(sel_n, dist_col, 0))
+    _fill_named_range(c, advice, "relax_fwd",
+                      np.where(sel_e, ud_p + 1 - vd_p, 0))
+    if h["undirected"]:
+        _fill_named_range(c, advice, "relax_bwd",
+                          np.where(sel_e, vd_p + 1 - ud_p, 0))
+    return advice, inst, data

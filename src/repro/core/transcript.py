@@ -1,0 +1,61 @@
+"""Fiat-Shamir transcript: a sponge over the Poseidon-like permutation.
+
+Prover and verifier run the identical absorb/squeeze schedule; challenges are
+Fp4 elements (4 squeezed lanes, ~124-bit challenge space) or query indices.
+Runs eagerly on small host arrays (numpy) — it is not a jit hot path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import field as F
+from . import hashing as H
+
+
+class Transcript:
+    def __init__(self, label: str = "zkgraph"):
+        self._state = np.zeros(H.WIDTH, np.uint32)
+        self._absorbed: list[int] = []
+        self.absorb_bytes(label.encode())
+
+    # -- absorption ---------------------------------------------------------
+    def absorb_bytes(self, data: bytes):
+        vals = np.frombuffer(data.ljust((len(data) + 3) // 4 * 4, b"\0"), np.uint32)
+        self.absorb(vals % np.uint32(F.P))
+
+    def absorb(self, values):
+        """values: array-like of field elements (flattened)."""
+        vals = np.asarray(values, np.uint64).reshape(-1) % np.uint64(F.P)
+        self._absorbed.extend(int(v) for v in vals)
+        # absorb in RATE-sized blocks with permutation between blocks
+        vals = vals.astype(np.uint32)
+        pos = 0
+        while pos < len(vals):
+            blk = vals[pos:pos + H.RATE]
+            st = self._state.copy()
+            st[:len(blk)] = (st[:len(blk)].astype(np.uint64) + blk) % np.uint64(F.P)
+            self._state = np.asarray(H.permute(st[None])[0])
+            pos += H.RATE
+
+    def absorb_digest(self, digest):
+        self.absorb(np.asarray(digest))
+
+    # -- squeezing ----------------------------------------------------------
+    def _squeeze_lanes(self, k: int) -> np.ndarray:
+        out = []
+        while len(out) < k:
+            out.extend(self._state[:H.RATE].tolist())
+            self._state = np.asarray(H.permute(self._state[None])[0])
+        return np.asarray(out[:k], np.uint32)
+
+    def challenge_ext(self) -> np.ndarray:
+        """One Fp4 challenge, shape (4,) uint32."""
+        return self._squeeze_lanes(4)
+
+    def challenge_fp(self) -> int:
+        return int(self._squeeze_lanes(1)[0])
+
+    def challenge_indices(self, n: int, domain_size: int) -> np.ndarray:
+        """n query indices in [0, domain_size) (power of two)."""
+        lanes = self._squeeze_lanes(n)
+        return (lanes % np.uint32(domain_size)).astype(np.int64)

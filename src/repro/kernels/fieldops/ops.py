@@ -1,0 +1,55 @@
+"""jit'd wrappers for the fieldops Pallas kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import fieldops as K
+
+_U32 = jnp.uint32
+
+
+def _pick_block(n: int) -> int:
+    for b in (1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mulmod(a: jnp.ndarray, b: jnp.ndarray, interpret: bool = True):
+    """Elementwise modular multiply via the 16-bit-limb Pallas kernel.
+
+    a, b: 1-D or 2-D uint32 arrays (same shape)."""
+    shape = a.shape
+    flat = a.reshape(-1)
+    block = _pick_block(flat.shape[0])
+    out = pl.pallas_call(
+        K._mulmod_kernel,
+        grid=(flat.shape[0] // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))] * 2,
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, _U32),
+        interpret=interpret,
+    )(flat, b.reshape(-1))
+    return out.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_mul_add(a, b, c, interpret: bool = True):
+    """(a*b + c) mod P — one kernel, one VMEM round-trip."""
+    shape = a.shape
+    flat_a, flat_b, flat_c = (x.reshape(-1) for x in (a, b, c))
+    block = _pick_block(flat_a.shape[0])
+    out = pl.pallas_call(
+        K._fma_kernel,
+        grid=(flat_a.shape[0] // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))] * 3,
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(flat_a.shape, _U32),
+        interpret=interpret,
+    )(flat_a, flat_b, flat_c)
+    return out.reshape(shape)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the BabyBear field kernels (uint64 fast path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import field as F
+
+P = F.P
+
+
+def mulmod_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise (a*b) mod P via uint64 — the CPU oracle."""
+    return F.fmul(a, b)
+
+
+def addmod_ref(a, b):
+    return F.fadd(a, b)
+
+
+def submod_ref(a, b):
+    return F.fsub(a, b)
+
+
+def fused_mul_add_ref(a, b, c):
+    """(a*b + c) mod P."""
+    return F.fadd(F.fmul(a, b), c)
+
+
+def batch_inv_ref(a):
+    return F.fbatch_inv(a)

@@ -1,0 +1,75 @@
+"""Pallas kernel for the paper's Eq. (2) running-product accumulator.
+
+Two-phase blocked scan (classic Blelloch decomposition adapted to a
+multiplicative monoid over BabyBear):
+  phase 1: each grid step loads a block into VMEM, computes the in-block
+           exclusive prefix products and the block total;
+  host    : tiny exclusive scan over the per-block totals (length n/block);
+  phase 2: each block's prefixes are scaled by its block offset.
+The modular multiply is the shared 16-bit-limb primitive (fieldops).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fieldops.fieldops import mulmod_limb
+
+_U32 = jnp.uint32
+
+
+def _block_scan_kernel(x_ref, prefix_ref, total_ref):
+    """Exclusive prefix products within one block (log-step doubling)."""
+    x = x_ref[...]                       # (block,)
+    n = x.shape[0]
+    # inclusive scan via logarithmic shifts (Hillis-Steele in VMEM)
+    acc = x
+    shift = 1
+    while shift < n:
+        shifted = jnp.concatenate(
+            [jnp.ones((shift,), _U32), acc[:-shift]])
+        acc = mulmod_limb(acc, shifted)
+        shift *= 2
+    total_ref[...] = acc[-1:]
+    # exclusive = inclusive shifted right with leading 1
+    prefix_ref[...] = jnp.concatenate([jnp.ones((1,), _U32), acc[:-1]])
+
+
+def _apply_offset_kernel(prefix_ref, offset_ref, o_ref):
+    off = offset_ref[...]
+    o_ref[...] = mulmod_limb(prefix_ref[...],
+                             jnp.broadcast_to(off, prefix_ref.shape))
+
+
+def grand_product(x: jnp.ndarray, block: int = 256,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Exclusive running product of (n,) BabyBear elements, n % block == 0."""
+    n = x.shape[0]
+    block = min(block, n)
+    assert n % block == 0
+    nb = n // block
+    prefixes, totals = pl.pallas_call(
+        _block_scan_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), _U32),
+                   jax.ShapeDtypeStruct((nb,), _U32)],
+        interpret=interpret,
+    )(x.astype(_U32))
+    # tiny host-side exclusive scan over block totals (nb elements)
+    from ...core import field as F
+    incl = jax.lax.associative_scan(F.fmul, totals)
+    offsets = jnp.concatenate([jnp.ones((1,), _U32), incl[:-1]])
+    out = pl.pallas_call(
+        _apply_offset_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)),
+                  pl.BlockSpec((1,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), _U32),
+        interpret=interpret,
+    )(prefixes, offsets)
+    return out

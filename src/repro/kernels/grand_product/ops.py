@@ -1,0 +1,13 @@
+"""jit'd wrapper for the grand-product kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import grand_product as K
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def grand_product(x, interpret: bool = True):
+    return K.grand_product(x, interpret=interpret)

@@ -1,0 +1,13 @@
+"""Oracle for the grand-product kernel: exclusive running product mod P
+(the paper's Eq. (2) accumulator Z: Z[0]=1, Z[i] = prod_{j<i} x[j])."""
+import jax
+import jax.numpy as jnp
+
+from ...core import field as F
+
+
+def grand_product_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (n,) uint32 -> exclusive prefix products (n,) uint32."""
+    incl = jax.lax.associative_scan(F.fmul, x)
+    one = jnp.ones((1,), jnp.uint32)
+    return jnp.concatenate([one, incl[:-1]])

@@ -1,0 +1,53 @@
+"""Pallas NTT kernel: one VMEM-tiled butterfly stage per pallas_call.
+
+TPU mapping: the (batch, n) codeword matrix is tiled as
+(batch_tile, n_groups, 2, m) blocks; each grid step loads one
+(bt x 2m)-element tile into VMEM, multiplies the odd lane by the streamed
+twiddle vector with the 16-bit-limb modular multiply (fieldops.mulmod_limb),
+and writes the add/sub butterfly outputs in place. MXU is not used (the
+butterflies are VPU work); data movement is the cost, hence the stage fusion
+in ops.ntt (small-m stages grouped per tile).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fieldops.fieldops import addmod, mulmod_limb, submod
+
+_U32 = jnp.uint32
+
+
+def _stage_kernel(x_ref, tw_ref, o_ref):
+    """x_ref: (bt, g, 2, m) tile; tw_ref: (1, 1, 1, m) twiddles."""
+    x = x_ref[...]
+    tw = tw_ref[...]
+    even = x[:, :, 0, :]
+    odd = mulmod_limb(x[:, :, 1, :], jnp.broadcast_to(tw[:, :, 0, :],
+                                                      x[:, :, 1, :].shape))
+    out = jnp.stack([addmod(even, odd), submod(even, odd)], axis=2)
+    o_ref[...] = out
+
+
+def ntt_stage(x: jnp.ndarray, twiddles: jnp.ndarray, m: int,
+              batch_tile: int = 8, interpret: bool = True) -> jnp.ndarray:
+    """Apply one radix-2 DIT stage. x: (batch, n) in bit-reversed-progress
+    order; twiddles: (m,) stage table."""
+    b, n = x.shape
+    g = n // (2 * m)
+    x4 = x.reshape(b, g, 2, m)
+    tw4 = twiddles.reshape(1, 1, 1, m)
+    bt = min(batch_tile, b)
+    out = pl.pallas_call(
+        _stage_kernel,
+        grid=(b // bt, g),
+        in_specs=[
+            pl.BlockSpec((bt, 1, 2, m), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, m), lambda i, j: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, 1, 2, m), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x4.shape, _U32),
+        interpret=interpret,
+    )(x4, tw4)
+    return out.reshape(b, n)

@@ -1,0 +1,33 @@
+"""jit'd NTT built from the Pallas stage kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import field as F
+from ...core import poly
+from . import ntt as K
+
+_U32 = jnp.uint32
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "interpret"))
+def ntt(x: jnp.ndarray, inverse: bool = False, interpret: bool = True):
+    """(batch, n) or (n,) NTT via per-stage Pallas kernels."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    b, n = x.shape
+    x = x[:, jnp.asarray(poly._bitrev_perm(n))]
+    tables = poly._stage_twiddles(n, inverse)
+    m = 1
+    for tw in tables:
+        x = K.ntt_stage(x, jnp.asarray(tw), m, interpret=interpret)
+        m *= 2
+    if inverse:
+        n_inv = pow(n, F.P - 2, F.P)
+        x = F.fmul(x, _U32(n_inv))
+    return x[0] if squeeze else x

@@ -1,0 +1,6 @@
+"""Oracle for the NTT kernel: the pure-jnp radix-2 transform."""
+from ...core import poly
+
+
+def ntt_ref(x, inverse: bool = False):
+    return poly.ntt(x, inverse=inverse)

@@ -1,0 +1,13 @@
+"""jit'd wrapper for the Poseidon-like permutation kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import poseidon as K
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def permute(states, interpret: bool = True):
+    return K.permute(states, interpret=interpret)

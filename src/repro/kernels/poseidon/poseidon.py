@@ -1,0 +1,85 @@
+"""Pallas kernel for the Poseidon2-like permutation over BabyBear.
+
+TPU mapping: a (block, 16) batch of sponge states lives in VMEM; each of the
+22 rounds does (sbox ->) a 16x16 field matmul. The modular matmul is
+elementwise 16-bit-limb products broadcast to (block, 16, 16) followed by a
+log-tree modular reduction — on real TPU the i32 products ride the VPU while
+the data layout matches the MXU tiling for a fused int8/int16 path (see
+EXPERIMENTS.md §Perf for the measured schedule discussion).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core import hashing as H
+from ..fieldops.fieldops import addmod, mulmod_limb
+
+_U32 = jnp.uint32
+
+
+def _sbox(x):
+    x2 = mulmod_limb(x, x)
+    x4 = mulmod_limb(x2, x2)
+    return mulmod_limb(mulmod_limb(x4, x2), x)
+
+
+def _matmul_mod(state, mds):
+    """state (bt, 16) x mds (16, 16) with limb products + tree addmod."""
+    prod = mulmod_limb(
+        jnp.broadcast_to(state[:, :, None], state.shape + (16,)),
+        jnp.broadcast_to(mds[None, :, :], state.shape + (16,)))
+    acc = prod  # (bt, 16, 16); reduce axis=1 in log steps
+    k = 16
+    while k > 1:
+        k //= 2
+        acc = addmod(acc[:, :k, :], acc[:, k:2 * k, :])
+    return acc[:, 0, :]
+
+
+def _permute_kernel(x_ref, rc_ref, mds_ref, o_ref):
+    x = x_ref[...]
+    rc = rc_ref[...]
+    mds = mds_ref[...]
+    half = H.FULL_ROUNDS // 2
+    r = 0
+    for _ in range(half):
+        x = addmod(x, jnp.broadcast_to(rc[r][None], x.shape))
+        x = _sbox(x)
+        x = _matmul_mod(x, mds)
+        r += 1
+    for _ in range(H.PARTIAL_ROUNDS):
+        x = addmod(x, jnp.broadcast_to(rc[r][None], x.shape))
+        lane0 = _sbox(x[:, :1])
+        x = jnp.concatenate([lane0, x[:, 1:]], axis=1)
+        x = _matmul_mod(x, mds)
+        r += 1
+    for _ in range(half):
+        x = addmod(x, jnp.broadcast_to(rc[r][None], x.shape))
+        x = _sbox(x)
+        x = _matmul_mod(x, mds)
+        r += 1
+    o_ref[...] = x
+
+
+def permute(states: jnp.ndarray, block: int = 64,
+            interpret: bool = True) -> jnp.ndarray:
+    """states: (n, 16) -> (n, 16)."""
+    n = states.shape[0]
+    block = min(block, n)
+    assert n % block == 0
+    mds, rc = H._params()
+    out = pl.pallas_call(
+        _permute_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, 16), lambda i: (i, 0)),
+            pl.BlockSpec(rc.shape, lambda i: (0, 0)),
+            pl.BlockSpec((16, 16), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 16), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 16), _U32),
+        interpret=interpret,
+    )(states.astype(_U32), jnp.asarray(rc), jnp.asarray(mds))
+    return out

@@ -1,0 +1,249 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set XLA_FLAGS before any jax import (jax locks the device count at
+first init) — these two lines stay at the very top of this file.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512" + \
+    " " + os.environ.get("XLA_FLAGS", "")
+
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ARCHS, SHAPES, cells, get_config
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as shd
+from repro.models import lm
+from repro.models.config import ModelConfig, active_param_count, param_count
+from repro.train import compression, optimizer as opt, train_step as ts
+
+# hardware model (TPU v5e-like): see ROOFLINE ANALYSIS in EXPERIMENTS.md
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\S+)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+                "s16": 2, "u16": 2}
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective in the (per-device) module."""
+    out = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(shape_str):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + total
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-cell function + abstract inputs
+# ---------------------------------------------------------------------------
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(partial(lm.init_params, cfg,
+                                  jax.random.PRNGKey(0)))
+
+
+def input_specs(arch: str, shape_name: str, mesh):
+    """(callable, arg_structs tuple, in_shardings tuple) for one cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    dp = mesh_lib.dp_axes(mesh)
+    p_struct = abstract_params(cfg)
+    pspecs = shd.param_specs(cfg, p_struct)
+    pshard = shd.shardings_of(pspecs, mesh, p_struct)
+    dt = jnp.dtype(cfg.dtype)
+
+    def batch_structs():
+        tok_len = S - cfg.frontend_len if cfg.frontend == "vlm" else S
+        b = {"tokens": jax.ShapeDtypeStruct((B, tok_len), jnp.int32)}
+        bs = {"tokens": NamedSharding(mesh, P(dp, None))}
+        if cfg.frontend != "none":
+            b["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), jnp.float32)
+            bs["frontend"] = NamedSharding(mesh, P(dp, None, None))
+        return b, bs
+
+    if shape.kind == "train":
+        ocfg = opt.AdamWConfig()
+        step = ts.make_train_step(cfg, ocfg)
+        o_struct = jax.eval_shape(opt.init_state, p_struct)
+        ospecs = {"step": P(), "mu": pspecs, "nu": pspecs}
+        oshard = shd.shardings_of(ospecs, mesh, o_struct)
+        e_struct = jax.eval_shape(compression.init_error, p_struct)
+        eshard = shd.shardings_of(pspecs, mesh, e_struct)
+        b, bs = batch_structs()
+        return step, (p_struct, o_struct, e_struct, b), \
+            (pshard, oshard, eshard, bs)
+    if shape.kind == "prefill":
+        fn = ts.make_prefill(cfg)
+        b, bs = batch_structs()
+        args = (p_struct, b["tokens"])
+        shards = (pshard, bs["tokens"])
+        if cfg.frontend != "none":
+            args += (b["frontend"],)
+            shards += (bs["frontend"],)
+        return fn, args, shards
+    # decode
+    serve = ts.make_serve_step(cfg)
+    c_struct = lm.init_cache_shapes(cfg, B, S)
+    cspecs = shd.cache_specs(cfg, c_struct, B, mesh)
+    cshard = shd.shardings_of(cspecs, mesh, c_struct)
+    b_ax = dp if (B % mesh_lib.data_size(mesh) == 0 and
+                  B >= mesh_lib.data_size(mesh)) else \
+        ("data" if B % mesh.shape["data"] == 0 and B >= mesh.shape["data"]
+         else None)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, P(b_ax, None))
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    rng_sh = NamedSharding(mesh, P(None))
+    return serve, (p_struct, c_struct, tok, rng), \
+        (pshard, cshard, tok_sh, rng_sh)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             want_hlo: bool = False):
+    """Lower + compile one cell; returns the result record."""
+    from repro.models import layers as layers_mod
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    layers_mod.DP_AXES = mesh_lib.dp_axes(mesh)
+    layers_mod.DP_SIZE = mesh_lib.data_size(mesh)
+    rec = dict(arch=arch, shape=shape_name,
+               mesh="2x16x16" if multi_pod else "16x16")
+    cfg = get_config(arch)
+    try:
+        fn, args, shards = input_specs(arch, shape_name, mesh)
+        t0 = time.time()
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=shards).lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+        ca = compiled.cost_analysis()
+        ma = compiled.memory_analysis()
+        chips = int(np.prod(list(mesh.shape.values())))
+        rec["ok"] = True
+        rec["per_device_flops"] = float(ca.get("flops", -1))
+        rec["per_device_bytes"] = float(ca.get("bytes accessed", -1))
+        rec["mem"] = dict(
+            argument=getattr(ma, "argument_size_in_bytes", -1),
+            output=getattr(ma, "output_size_in_bytes", -1),
+            temp=getattr(ma, "temp_size_in_bytes", -1),
+            peak=getattr(ma, "peak_memory_in_bytes", -1) if
+            hasattr(ma, "peak_memory_in_bytes") else -1,
+        )
+        hlo = compiled.as_text()
+        rec["collectives"] = parse_collective_bytes(hlo)
+        rec["n_chips"] = chips
+        rec["model_params"] = param_count(cfg)
+        rec["active_params"] = active_param_count(cfg)
+        if want_hlo:
+            rec["hlo"] = hlo
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug report
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def roofline_terms(rec: dict, shape_kind: str) -> dict:
+    """The three roofline terms in seconds (single-pod records)."""
+    chips = rec["n_chips"]
+    flops = rec["per_device_flops"] * chips
+    bytes_hbm = rec["per_device_bytes"] * chips
+    coll = rec["collectives"]["total"] * chips
+    t_compute = flops / (chips * PEAK_FLOPS)
+    t_memory = bytes_hbm / (chips * HBM_BW)
+    t_coll = coll / (chips * ICI_BW)
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    return dict(t_compute=t_compute, t_memory=t_memory, t_collective=t_coll,
+                dominant=dominant, hlo_flops=flops)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    todo = []
+    for arch, sname, skip in cells():
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and sname != args.shape:
+            continue
+        todo.append((arch, sname, skip))
+
+    results = []
+    if args.append and os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for arch, sname, skip in todo:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            if (arch, sname, mesh_name) in done:
+                continue
+            if skip:
+                results.append(dict(arch=arch, shape=sname, mesh=mesh_name,
+                                    ok=None, skipped=skip))
+                print(f"SKIP {arch} {sname} {mesh_name}: {skip}", flush=True)
+                continue
+            print(f"RUN  {arch} {sname} {mesh_name} ...", flush=True)
+            rec = run_cell(arch, sname, mp)
+            if rec["ok"]:
+                print(f"  ok lower={rec['lower_s']}s "
+                      f"compile={rec['compile_s']}s "
+                      f"flops/dev={rec['per_device_flops']:.3e} "
+                      f"coll/dev={rec['collectives']['total']:.3e}B",
+                      flush=True)
+            else:
+                print(f"  FAIL {rec['error']}", flush=True)
+            results.append(rec)
+            json.dump(results, open(args.out, "w"), indent=1)
+    json.dump(results, open(args.out, "w"), indent=1)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    n_skip = sum(1 for r in results if r.get("ok") is None)
+    n_fail = sum(1 for r in results if r.get("ok") is False)
+    print(f"\n== dry-run summary: {n_ok} ok / {n_skip} skipped / "
+          f"{n_fail} FAILED ==")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

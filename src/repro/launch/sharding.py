@@ -1,0 +1,188 @@
+"""Parameter / activation / cache PartitionSpecs for the assigned archs.
+
+Rules (DESIGN.md §3/§4):
+ * TP over "model": attention heads when divisible (else KV replicated and
+   only Q sharded), MLP hidden dim, vocab (embed/unembed), mamba inner dim.
+ * Experts: EP over "model" when n_experts % model == 0 (dbrx), else TP
+   inside each expert's hidden dim (mixtral).
+ * DP over ("pod","data") on the batch.
+ * Decode caches: batch over "data" when divisible; KV-cache sequence dim
+   over "model" (flash-decoding split — softmax reductions inserted by
+   GSPMD); for batch=1 long-context the sequence is sharded over BOTH axes.
+ * Scanned (stacked) params carry a leading n_layers dim -> spec gets a
+   leading None.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from . import mesh as mesh_lib
+
+
+def _spec_for(path: str, leaf, cfg: ModelConfig, msize: int, stacked: bool):
+    """PartitionSpec for one param leaf, identified by its tree path."""
+    lead = (None,) if stacked and "/layers/" in path else ()
+    name = path.rsplit("/", 1)[-1]
+    ndim = leaf.ndim - len(lead)
+
+    def pspec(*axes):
+        return P(*(lead + tuple(axes)))
+
+    if name in ("embed",):
+        return P("model", None)            # vocab-sharded (never stacked)
+    if name == "unembed":
+        return P(None, "model")
+    if name in ("scale", "bias", "D", "norm_scale"):
+        return pspec(*([None] * ndim))
+    # attention
+    if name == "wq":
+        shard_h = cfg.n_heads % msize == 0
+        return pspec(None, "model" if shard_h else None, None)
+    if name in ("wk", "wv"):
+        shard_kv = cfg.n_kv % msize == 0
+        return pspec(None, "model" if shard_kv else None, None)
+    if name == "wo":
+        shard_h = cfg.n_heads % msize == 0
+        return pspec("model" if shard_h else None, None, None)
+    if name in ("bq", "bk", "bv"):
+        return pspec(None, None)
+    if name == "bo":
+        return pspec(None)
+    # mlp / moe
+    if name in ("wg", "wu"):
+        if ndim == 3:  # (E, d, ff)
+            if cfg.moe_experts % msize == 0:
+                return pspec("model", None, None)
+            return pspec(None, None, "model")
+        return pspec(None, "model")
+    if name == "wd":
+        if ndim == 3:  # (E, ff, d)
+            if cfg.moe_experts % msize == 0:
+                return pspec("model", None, None)
+            return pspec(None, "model", None)
+        return pspec("model", None)
+    if name in ("bu",):
+        return pspec("model") if ndim == 1 else pspec(None, "model")
+    if name in ("bd", "router"):
+        return pspec(*([None] * ndim))
+    # mamba
+    if name == "in_proj":
+        return pspec(None, "model")
+    if name == "conv_w":
+        return pspec(None, "model")
+    if name == "x_proj":
+        return pspec("model", None)
+    if name == "dt_proj":
+        return pspec(None, "model")
+    if name == "A_log":
+        return pspec("model", None) if ndim == 2 else pspec(None)
+    if name == "out_proj":
+        return pspec("model", None)
+    return pspec(*([None] * ndim))
+
+
+def _tree_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _tree_paths(v, f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _tree_paths(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def param_specs(cfg: ModelConfig, params_shape) -> dict:
+    """Same-structure pytree of PartitionSpec for a params pytree (abstract
+    or concrete)."""
+    flat = dict(_tree_paths(params_shape))
+    stacked = isinstance(params_shape.get("layers"), dict)
+    msize = 16  # production model-parallel degree (both meshes)
+    specs = {p: _spec_for(p, l, cfg, msize, stacked) for p, l in flat.items()}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}/{k}") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return [rebuild(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
+        return specs[prefix]
+
+    return rebuild(params_shape)
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop shardings on dims not divisible by their mesh-axis product —
+    jit in_shardings requires exact divisibility on inputs."""
+    out = []
+    for i, axes in enumerate(spec):
+        if axes is None:
+            out.append(None)
+            continue
+        ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+        prod = 1
+        for a in ax_tuple:
+            prod *= mesh.shape[a]
+        out.append(axes if (i < len(shape) and shape[i] % prod == 0) else None)
+    # pad to rank
+    while len(out) < len(shape):
+        out.append(None)
+    return P(*out)
+
+
+def shardings_of(specs, mesh, shapes_tree=None):
+    """NamedShardings for a spec pytree; with ``shapes_tree`` (matching pytree
+    of ShapeDtypeStruct/arrays) non-divisible dims are de-sharded."""
+    if shapes_tree is None:
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(
+        lambda s, leaf: NamedSharding(mesh, sanitize_spec(s, leaf.shape, mesh)),
+        specs, shapes_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh) -> P:
+    return P(mesh_lib.dp_axes(mesh), None)
+
+
+def cache_specs(cfg: ModelConfig, cache_shapes, batch: int, mesh) -> dict:
+    """PartitionSpecs for the decode cache pytree."""
+    dsize = mesh.shape["data"]
+    b_ax = "data" if batch % dsize == 0 and batch >= dsize else None
+    seq_axes = "model" if b_ax else ("data", "model")
+    stacked = isinstance(cache_shapes["layers"], dict)
+    lead = (None,) if stacked else ()
+
+    def spec_leaf(path, leaf):
+        name = path.rsplit("/", 1)[-1]
+        if name == "pos":
+            return P()
+        if name == "memory":
+            return P(b_ax, None, None)
+        if "/shared/" in path:      # (n_shared, B, S, K, hd) carried stack
+            return P(None, b_ax, seq_axes, None, None)
+        if name in ("k", "v", "shared_k", "shared_v"):
+            return P(*(lead + (b_ax, seq_axes, None, None)))
+        if name == "h":      # (B, di, n)
+            return P(*(lead + (b_ax, "model", None)))
+        if name == "S":      # (B, H, n, P)
+            shard_h = cfg.n_heads % mesh.shape["model"] == 0
+            return P(*(lead + (b_ax, "model" if shard_h else None,
+                               None, None)))
+        if name == "conv":
+            return P(*(lead + (b_ax, None, "model")))
+        return P(*([None] * leaf.ndim))
+
+    flat = dict(_tree_paths(cache_shapes))
+    specs = {p: spec_leaf(p, l) for p, l in flat.items()}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}/{k}") for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return [rebuild(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
+        return specs[prefix]
+
+    return rebuild(cache_shapes)

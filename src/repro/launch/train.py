@@ -1,0 +1,90 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--steps N]``.
+
+On this CPU container it runs the reduced config on a 1-device mesh; on real
+hardware the same driver runs the full config on the production mesh (the
+mesh/shardings come from the same code paths the dry-run exercises).
+Fault-tolerant loop: periodic checkpoints, auto-resume, straggler controller.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS, get_config
+from repro.launch import sharding as shd
+from repro.models import lm
+from repro.train import checkpoint, compression, data, fault
+from repro.train import optimizer as opt
+from repro.train import train_step as ts
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (production) config instead of reduced")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                           total_steps=args.steps)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    state = opt.init_state(params)
+    err = compression.init_error(params)
+    dcfg = data.DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                           global_batch=args.batch)
+    stream = data.TokenStream(dcfg)
+
+    ckpt_dir = os.path.join(args.ckpt_dir, cfg.name)
+    os.makedirs(ckpt_dir, exist_ok=True)
+    start = 0
+    last = checkpoint.latest_step(ckpt_dir)
+    if last is not None:
+        params, state, start, extra = checkpoint.restore(
+            ckpt_dir, last, params, state)
+        stream.load_state_dict(extra.get("data", {"step": start}))
+        print(f"resumed from step {start}")
+
+    step_fn = jax.jit(ts.make_train_step(cfg, ocfg, args.grad_accum,
+                                         args.compress_grads))
+    ctrl = fault.FaultController([f"host{i}" for i in
+                                  range(jax.process_count())])
+    for step in range(start, args.steps):
+        t0 = time.time()
+        batch = next(stream)
+        if cfg.frontend != "none":
+            batch["frontend"] = jnp.zeros(
+                (args.batch, cfg.frontend_len, cfg.d_model), jnp.float32)
+        params, state, err, metrics = step_fn(params, state, err, batch)
+        dt = time.time() - t0
+        ctrl.heartbeat(f"host{jax.process_index()}", dt)
+        ctrl.sweep()
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms", flush=True)
+        if (step + 1) % args.ckpt_every == 0 or step == args.steps - 1:
+            checkpoint.save(ckpt_dir, step + 1, params, state,
+                            extra={"data": stream.state_dict()})
+    print("done")
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Model configuration covering the 10 assigned architecture families."""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    mlp: str = "swiglu"               # swiglu | gelu
+    qkv_bias: bool = False
+    proj_bias: bool = False           # out-proj / mlp biases (starcoder2)
+    rope_theta: float = 1e4
+    sliding_window: int = 0           # 0 = full attention
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    block_type: str = "attn"          # attn | mamba1 | mamba2
+    shared_attn_every: int = 0        # zamba2: shared attn block cadence
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    enc_dec: bool = False
+    enc_layers: int = 0
+    frontend: str = "none"            # none | audio | vlm (stub embeddings)
+    frontend_len: int = 0
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def is_ssm(self) -> bool:
+        return self.block_type in ("mamba1", "mamba2")
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for the long_500k decode shape."""
+        return self.is_ssm or self.sliding_window > 0
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        n_heads = 4
+        n_kv = max(1, min(self.n_kv * 4 // max(self.n_heads, 1), 4)) \
+            if self.n_kv else 4
+        return replace(
+            self, n_layers=2, d_model=64, n_heads=n_heads, n_kv=n_kv or 4,
+            d_ff=128 if self.d_ff else 0, vocab=128, head_dim=16,
+            sliding_window=min(self.sliding_window, 8) if self.sliding_window
+            else 0,
+            moe_experts=4 if self.moe_experts else 0,
+            moe_top_k=2 if self.moe_top_k else 0,
+            shared_attn_every=2 if self.shared_attn_every else 0,
+            ssm_state=8 if self.ssm_state else 0,
+            enc_layers=2 if self.enc_dec else 0,
+            frontend_len=8 if self.frontend != "none" else 0,
+            dtype="float32", remat=False)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Approximate parameter count (embedding + blocks + head)."""
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    total = v * d * 2  # embed + unembed
+    per_layer = 0
+    if cfg.block_type == "attn" or cfg.shared_attn_every:
+        qkv = d * (cfg.n_heads + 2 * cfg.n_kv) * cfg.hd
+        per_layer += qkv + cfg.n_heads * cfg.hd * d
+    if cfg.block_type == "mamba1":
+        di = cfg.d_inner
+        per_layer += d * 2 * di + di * d + di * (2 * cfg.ssm_state + 2)
+    if cfg.block_type == "mamba2":
+        di = cfg.d_inner
+        per_layer += d * 2 * di + di * d + di * cfg.ssm_state
+    if ff:
+        n_mat = 3 if cfg.mlp == "swiglu" else 2
+        ff_params = n_mat * d * ff
+        if cfg.moe_experts:
+            per_layer += cfg.moe_experts * ff_params + d * cfg.moe_experts
+        else:
+            per_layer += ff_params
+    return total + cfg.n_layers * per_layer
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active (per-token) parameters — MoE counts top_k experts only."""
+    if not cfg.moe_experts:
+        return param_count(cfg)
+    dense = param_count(cfg)
+    n_mat = 3 if cfg.mlp == "swiglu" else 2
+    ff_params = n_mat * cfg.d_model * cfg.d_ff
+    inactive = cfg.n_layers * (cfg.moe_experts - cfg.moe_top_k) * ff_params
+    return dense - inactive

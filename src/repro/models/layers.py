@@ -1,0 +1,565 @@
+"""Model layers: GQA attention (sliding-window, bias options), RoPE, norms,
+SwiGLU/GELU MLP, capacity-based MoE, Mamba1 selective scan, Mamba2 SSD.
+
+All functions are pure; params are nested dicts of arrays. Static shapes
+throughout (argsort/top_k are fine — XLA needs static shapes, not values).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+# Data-parallel mesh axes for in-graph sharding constraints (set by the
+# launcher/dry-run before tracing; None = no constraints, e.g. smoke tests).
+# Needed because GSPMD loses the batch sharding through the MoE dispatch
+# scatter/gather chain and replicates token buffers onto every device
+# (EXPERIMENTS.md §Perf iteration 2).
+DP_AXES = None
+DP_SIZE = 1
+
+
+def _dp_constraint(x, *rest):
+    if DP_AXES is None or x.shape[0] % max(DP_SIZE, 1) != 0:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(DP_AXES, *rest))
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def norm_params(cfg, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.dtype(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def apply_norm(p, cfg, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+        return (xf * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+    return (xf * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(cfg, positions):
+    """positions: (...,) int -> cos/sin (..., hd/2) f32.
+
+    All arithmetic pinned to f32: the ZK core enables jax x64 globally, and
+    un-pinned numpy f64 constants would silently promote the rope (and then
+    q/k) to f64 in one code path but not the other."""
+    hd = cfg.hd
+    inv = jnp.asarray(1.0 / (cfg.rope_theta ** (np.arange(0, hd, 2) / hd)),
+                      jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (S, hd/2) or (B, S, hd/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def attn_params(key, cfg):
+    d, hd, H, K = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), pd),
+        "wk": dense_init(ks[1], (d, K, hd), pd),
+        "wv": dense_init(ks[2], (d, K, hd), pd),
+        "wo": dense_init(ks[3], (H, hd, d), pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), pd)
+        p["bk"] = jnp.zeros((K, hd), pd)
+        p["bv"] = jnp.zeros((K, hd), pd)
+    if cfg.proj_bias:
+        p["bo"] = jnp.zeros((d,), pd)
+    return p
+
+
+def _qkv(p, cfg, x, positions=None, use_rope=True):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        cos, sin = rope_freqs(cfg, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)) \
+        .reshape(b, s, h * n_rep, d)
+
+
+def sdpa(q, k, v, causal=True, window=0, kv_offset=0):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,H,hd). Mask built from iotas (never
+    materialized at rest — XLA fuses it)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhk,bshk->bhqs", q, k) * scale
+    qpos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2) + kv_offset
+    kpos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 3)
+    mask = jnp.ones_like(logits, dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshk->bqhk", probs, v)
+
+
+def sdpa_banded(q, k, v, window):
+    """Sliding-window attention computed on the band only (§Perf iter. 6).
+
+    Queries in blocks of W attend keys of blocks (i-1, i): score tensor is
+    (B, nb, H, W, 2W) instead of (B, H, S, S) — a S/(2W) reduction in score
+    FLOPs/bytes (4x at S=32k, W=4k). Exactly equals masked full attention
+    (tested in test_models_smoke.py::test_banded_swa_matches_masked_full)."""
+    B, S, H, hd = q.shape
+    W = window
+    nb = S // W
+    scale = 1.0 / math.sqrt(hd)
+    qb = q.reshape(B, nb, W, H, hd)
+    kb = k.reshape(B, nb, W, H, hd)
+    vb = v.reshape(B, nb, W, H, hd)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k_ctx = jnp.concatenate([k_prev, kb], axis=2)     # (B, nb, 2W, H, hd)
+    v_ctx = jnp.concatenate([v_prev, vb], axis=2)
+    logits = jnp.einsum("bnqhk,bnshk->bnhqs", qb, k_ctx) * scale
+    qi = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 3)   # in-block q
+    kj = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 4)   # ctx key idx
+    bi = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    qpos = bi * W + qi
+    kpos = (bi - 1) * W + kj                                    # ctx starts at block i-1
+    mask = (kpos <= qpos) & (kpos > qpos - W) & (kpos >= 0)
+    logits = jnp.where(mask, logits.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    ob = jnp.einsum("bnhqs,bnshk->bnqhk", probs, v_ctx)
+    return ob.reshape(B, S, H, hd)
+
+
+def self_attention(p, cfg, x, causal=True, use_rope=True):
+    q, k, v = _qkv(p, cfg, x, use_rope=use_rope)
+    k = _repeat_kv(k, cfg.n_heads // cfg.n_kv)
+    v = _repeat_kv(v, cfg.n_heads // cfg.n_kv)
+    W = cfg.sliding_window
+    if causal and W and x.shape[1] % W == 0 and x.shape[1] >= 2 * W:
+        o = sdpa_banded(q, k, v, W)
+    else:
+        o = sdpa(q, k, v, causal=causal, window=W)
+    out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"].astype(x.dtype))
+    if cfg.proj_bias:
+        out = out + p["bo"].astype(x.dtype)
+    return out
+
+
+def decode_attention(p, cfg, x, cache_k, cache_v, pos, use_rope=True):
+    """One-token decode. cache_k/v: (B, S, K, hd); pos: scalar int32 —
+    current write position. Returns (out, new_k, new_v).
+
+    GQA is computed in *grouped* form — queries reshaped to (B,1,K,G,hd) and
+    contracted against the (B,S,K,hd) cache directly. Materializing the
+    repeated KV (the naive path) forces GSPMD to re-shard the entire cache
+    (a ~GB-scale all-gather per step at 32k context); grouped form keeps the
+    cache layout untouched (EXPERIMENTS.md §Perf iteration 1)."""
+    B = x.shape[0]
+    q, k, v = _qkv(p, cfg, x, positions=jnp.full((1,), pos, jnp.int32),
+                   use_rope=use_rope)
+    pos = pos.astype(jnp.int32) if hasattr(pos, "astype") else jnp.int32(pos)
+    zero = jnp.zeros((), jnp.int32)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (zero, pos, zero, zero))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (zero, pos, zero, zero))
+    K, G = cfg.n_kv, cfg.n_heads // cfg.n_kv
+    q4 = q.reshape(B, 1, K, G, cfg.hd)
+    scale = 1.0 / math.sqrt(cfg.hd)
+    kk = cache_k.astype(x.dtype)
+    vv = cache_v.astype(x.dtype)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q4, kk) * scale
+    kpos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 4)
+    mask = kpos <= pos
+    if cfg.sliding_window:
+        mask &= kpos > pos - cfg.sliding_window
+    logits = jnp.where(mask, logits.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", probs, vv)
+    o = o.reshape(B, 1, cfg.n_heads, cfg.hd)
+    out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"].astype(x.dtype))
+    if cfg.proj_bias:
+        out = out + p["bo"].astype(x.dtype)
+    return out, cache_k, cache_v
+
+
+def cross_attention(p, cfg, x, memory):
+    """Encoder-decoder cross attention (whisper); no RoPE, no mask."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"].astype(dt))
+    o = sdpa(q, _repeat_kv(k, cfg.n_heads // cfg.n_kv),
+             _repeat_kv(v, cfg.n_heads // cfg.n_kv), causal=False)
+    return jnp.einsum("bqhk,hkd->bqd", o, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+def mlp_params(key, cfg, n_experts=0):
+    d, ff = cfg.d_model, cfg.d_ff
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    lead = (n_experts,) if n_experts else ()
+    if cfg.mlp == "swiglu":
+        p = {"wg": dense_init(ks[0], lead + (d, ff), pd),
+             "wu": dense_init(ks[1], lead + (d, ff), pd),
+             "wd": dense_init(ks[2], lead + (ff, d), pd)}
+    else:
+        p = {"wu": dense_init(ks[1], lead + (d, ff), pd),
+             "wd": dense_init(ks[2], lead + (ff, d), pd)}
+        if cfg.proj_bias:
+            p["bu"] = jnp.zeros(lead + (ff,), pd)
+            p["bd"] = jnp.zeros(lead + (d,), pd)
+    if n_experts:
+        p["router"] = dense_init(ks[3], (d, n_experts), pd, scale=0.02)
+    return p
+
+
+def apply_mlp(p, cfg, x):
+    dt = x.dtype
+    if cfg.mlp == "swiglu":
+        g = jax.nn.silu(x @ p["wg"].astype(dt))
+        u = x @ p["wu"].astype(dt)
+        return (g * u) @ p["wd"].astype(dt)
+    h = x @ p["wu"].astype(dt)
+    if cfg.proj_bias:
+        h = h + p["bu"].astype(dt)
+    h = jax.nn.gelu(h)
+    out = h @ p["wd"].astype(dt)
+    if cfg.proj_bias:
+        out = out + p["bd"].astype(dt)
+    return out
+
+
+def apply_moe(p, cfg, x, group_size: int = 4096):
+    """Capacity-based token-dropping MoE (GShard-style, fully static shapes).
+
+    x: (B, S, d). Tokens are flattened, grouped, routed top-k, dispatched to
+    per-expert capacity buffers by scatter, processed with a grouped einsum
+    (the expert dim maps onto the MXU), and combined by gather.
+    """
+    B, S, d = x.shape
+    E, K = cfg.moe_experts, cfg.moe_top_k
+    dt = x.dtype
+    T = B * S
+    g = min(group_size, T)
+    G = T // g
+    xs = _dp_constraint(x.reshape(G, g, d), None, None)
+    logits = xs @ p["router"].astype(dt)                     # (G, g, E)
+    gate, eidx = jax.lax.top_k(logits, K)                    # (G, g, K)
+    gate = jax.nn.softmax(gate.astype(jnp.float32), axis=-1).astype(dt)
+    cap = int(math.ceil(g * K / E * cfg.moe_capacity_factor))
+    cap = max(8, min(g, ((cap + 7) // 8) * 8))
+    # position of each (token, k) within its expert: cumsum over flat (g*K)
+    onehot = jax.nn.one_hot(eidx.reshape(G, g * K), E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) - 1                     # (G, g*K, E)
+    pos = jnp.take_along_axis(
+        pos, eidx.reshape(G, g * K)[..., None], axis=2)[..., 0]  # (G, g*K)
+    keep = pos < cap
+    # scatter token indices into (G, E, cap) buffers (int32-pinned: the ZK
+    # core enables x64 and arange would default to int64)
+    tok_idx = jnp.broadcast_to(
+        jnp.arange(g, dtype=jnp.int32)[None, :, None], (G, g, K)) \
+        .reshape(G, g * K)
+    flat_e = eidx.reshape(G, g * K).astype(jnp.int32)
+    buf = jnp.full((G, E, cap), g, jnp.int32)                # g = OOB sentinel
+    scatter_pos = jnp.where(keep, pos, cap).astype(jnp.int32)  # dropped -> OOB
+    buf = jax.vmap(lambda b, e, pp, t: b.at[e, pp].set(t, mode="drop"))(
+        buf, flat_e, scatter_pos, tok_idx)
+    # gather expert inputs; OOB sentinel rows read zeros via padding
+    xs_pad = jnp.concatenate([xs, jnp.zeros((G, 1, d), dt)], axis=1)
+    exp_in = jnp.take_along_axis(
+        xs_pad[:, None, :, :], buf[..., None].clip(0, g), axis=2)  # (G,E,cap,d)
+    exp_in = _dp_constraint(exp_in, None, None, None)
+    # expert matmuls: TP over the hidden dim; the down-projection's cross-
+    # shard reduce runs in the model dtype (half the wire bytes of f32)
+    if cfg.mlp == "swiglu":
+        gh = jax.nn.silu(jnp.einsum("gecd,edf->gecf", exp_in,
+                                    p["wg"].astype(dt),
+                                    preferred_element_type=dt))
+        uh = jnp.einsum("gecd,edf->gecf", exp_in, p["wu"].astype(dt),
+                        preferred_element_type=dt)
+        exp_out = jnp.einsum("gecf,efd->gecd", gh * uh, p["wd"].astype(dt),
+                             preferred_element_type=dt)
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", exp_in,
+                                   p["wu"].astype(dt),
+                                   preferred_element_type=dt))
+        exp_out = jnp.einsum("gecf,efd->gecd", h, p["wd"].astype(dt),
+                             preferred_element_type=dt)
+    exp_out = _dp_constraint(exp_out, None, None, None)
+    # combine: for each (token, k), read its (e, pos) slot
+    flat_out = exp_out.reshape(G, E * cap, d)
+    slot = flat_e * cap + scatter_pos.clip(0, cap - 1)       # (G, g*K)
+    gathered = jnp.take_along_axis(flat_out, slot[..., None], axis=1)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    y = (gathered.reshape(G, g, K, d) *
+         gate[..., None]).sum(axis=2)                        # (G, g, d)
+    return y.reshape(B, S, d)
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 (falcon-mamba): selective scan, chunked
+# ---------------------------------------------------------------------------
+def mamba1_params(key, cfg):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    dt_rank = max(16, d // 16)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), pd),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, di), pd, scale=0.5),
+        "x_proj": dense_init(ks[2], (di, dt_rank + 2 * n), pd),
+        "dt_proj": dense_init(ks[3], (dt_rank, di), pd),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)).copy()).astype(pd),
+        "D": jnp.ones((di,), pd),
+        "out_proj": dense_init(ks[4], (di, d), pd),
+    }
+
+
+def _causal_conv(x, w):
+    """x: (B, L, di); w: (k, di) depthwise causal conv."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out
+
+
+def mamba1_block(p, cfg, x, chunk=64):
+    """x: (B, L, d) -> (B, L, d); L % chunk == 0 assumed (pad upstream)."""
+    B, L, d = x.shape
+    chunk = min(chunk, L)
+    assert L % chunk == 0, f"seq {L} not divisible by chunk {chunk}"
+    dt_ = x.dtype
+    n = cfg.ssm_state
+    di = cfg.d_inner
+    xz = x @ p["in_proj"].astype(dt_)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = jax.nn.silu(_causal_conv(xi, p["conv_w"].astype(dt_)))
+    proj = xi @ p["x_proj"].astype(dt_)
+    dt_rank = p["dt_proj"].shape[0]
+    dtv, Bv, Cv = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(dtv @ p["dt_proj"].astype(dt_))   # (B, L, di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (di, n)
+
+    nc = L // chunk
+    xi_c = xi.reshape(B, nc, chunk, di)
+    delta_c = delta.reshape(B, nc, chunk, di).astype(jnp.float32)
+    B_c = Bv.reshape(B, nc, chunk, n).astype(jnp.float32)
+    C_c = Cv.reshape(B, nc, chunk, n).astype(jnp.float32)
+
+    def chunk_step(h, inputs):
+        xc, dc, bc, cc = inputs  # (B, chunk, di), ..., (B, chunk, n)
+        dA = jnp.exp(dc[..., None] * A[None, None])            # (B,c,di,n)
+        dBx = dc[..., None] * bc[:, :, None, :] * \
+            xc.astype(jnp.float32)[..., None]                  # (B,c,di,n)
+        # within-chunk associative scan (cumulative state)
+        def comb(a, b):
+            return (a[0] * b[0], b[0] * a[1] + b[1])
+        dAs, hs = jax.lax.associative_scan(comb, (dA, dBx), axis=1)
+        hs = hs + dAs * h[:, None]                             # carry in
+        y = jnp.einsum("bcdn,bcn->bcd", hs, cc)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, di, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        lambda h, inp: chunk_step(h, inp),
+        h0, (xi_c.transpose(1, 0, 2, 3), delta_c.transpose(1, 0, 2, 3),
+             B_c.transpose(1, 0, 2, 3), C_c.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, L, di).astype(dt_)
+    y = y + xi * p["D"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dt_)
+
+
+def mamba1_decode(p, cfg, x, h, conv_buf):
+    """Single-token decode: x (B,1,d), h (B,di,n), conv_buf (B,k-1,di)."""
+    dt_ = x.dtype
+    n = cfg.ssm_state
+    xz = x @ p["in_proj"].astype(dt_)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    w = p["conv_w"].astype(dt_)
+    window = jnp.concatenate([conv_buf, xi], axis=1)          # (B, k, di)
+    conv_out = jnp.einsum("bkd,kd->bd", window, w)[:, None, :]
+    new_buf = window[:, 1:, :]
+    xi = jax.nn.silu(conv_out)
+    proj = xi @ p["x_proj"].astype(dt_)
+    dt_rank = p["dt_proj"].shape[0]
+    dtv, Bv, Cv = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(dtv @ p["dt_proj"].astype(dt_)).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(delta[:, 0, :, None] * A[None])              # (B, di, n)
+    dBx = (delta[:, 0, :, None] * Bv.astype(jnp.float32)[:, 0, None, :] *
+           xi.astype(jnp.float32)[:, 0, :, None])
+    h = dA * h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cv.astype(jnp.float32)[:, 0])[:, None, :]
+    y = y.astype(dt_) + xi * p["D"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dt_), h, new_buf
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD (zamba2): chunked state-space duality form
+# ---------------------------------------------------------------------------
+def mamba2_params(key, cfg):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    pd = jnp.dtype(cfg.param_dtype)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + H), pd),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, di + 2 * n), pd, scale=0.5),
+        "A_log": jnp.zeros((H,), pd),
+        "D": jnp.ones((H,), pd),
+        "norm_scale": jnp.ones((di,), pd),
+        "out_proj": dense_init(ks[2], (di, d), pd),
+    }
+
+
+def mamba2_block(p, cfg, x, chunk=64):
+    """SSD (Mamba-2) with scalar-per-head decay; chunked parallel form."""
+    B, L, d = x.shape
+    chunk = min(chunk, L)
+    assert L % chunk == 0, f"seq {L} not divisible by chunk {chunk}"
+    dt_ = x.dtype
+    n = cfg.ssm_state
+    di = cfg.d_inner
+    H = cfg.n_heads
+    P = di // H
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z, xbc, dtv = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    # xbc: (B, L, di + 2n) -> conv -> x, B, C
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(dt_)))
+    xi, Bv, Cv = jnp.split(xbc, [di, di + n], axis=-1)
+    delta = jax.nn.softplus(dtv.astype(jnp.float32))           # (B, L, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+    la = delta * A[None, None]                                 # log decay
+    xh = xi.reshape(B, L, H, P).astype(jnp.float32)
+    xh = xh * delta[..., None]
+    nc = L // chunk
+    xc = xh.reshape(B, nc, chunk, H, P)
+    lac = la.reshape(B, nc, chunk, H)
+    Bc = Bv.reshape(B, nc, chunk, n).astype(jnp.float32)
+    Cc = Cv.reshape(B, nc, chunk, n).astype(jnp.float32)
+    cum = jnp.cumsum(lac, axis=2)                              # (B,nc,c,H)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,c,c,H)
+    iota_q = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 2)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 3)
+    Lmat = jnp.where(iota_k <= iota_q, jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bgqn,bgkn->bgqk", Cc, Bc)
+    intra = jnp.einsum("bgqk,bgqkh,bgkhp->bgqhp", scores, Lmat, xc)
+    # inter-chunk: carried state
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)            # (B,nc,c,H)
+    chunk_state = jnp.einsum("bgkn,bgkh,bgkhp->bghnp",
+                             Bc, decay_to_end, xc)             # per-chunk contrib
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (B,nc,H)
+
+    def carry_step(S, inp):
+        cs, cd = inp                                           # (B,H,n,P),(B,H)
+        out = S
+        S = S * cd[..., None, None] + cs
+        return S, out
+    S0 = jnp.zeros((B, H, n, P), jnp.float32)
+    _, S_in = jax.lax.scan(carry_step, S0,
+                           (chunk_state.transpose(1, 0, 2, 3, 4),
+                            chunk_decay.transpose(1, 0, 2)))
+    S_in = S_in.transpose(1, 0, 2, 3, 4)                       # (B,nc,H,n,P)
+    inter = jnp.einsum("bgqn,bgqh,bghnp->bgqhp", Cc, jnp.exp(cum), S_in)
+    y = (intra + inter).reshape(B, L, H, P)
+    y = y + xh.reshape(B, L, H, P) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, L, di).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = y * p["norm_scale"].astype(dt_)
+    return y @ p["out_proj"].astype(dt_)
+
+
+def mamba2_decode(p, cfg, x, S, conv_buf):
+    """One-token SSD decode: S (B,H,n,P), conv_buf (B,k-1,di+2n)."""
+    B = x.shape[0]
+    dt_ = x.dtype
+    n, di, H = cfg.ssm_state, cfg.d_inner, cfg.n_heads
+    P = di // H
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z, xbc, dtv = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    w = p["conv_w"].astype(dt_)
+    window = jnp.concatenate([conv_buf, xbc], axis=1)
+    conv_out = jnp.einsum("bkd,kd->bd", window, w)[:, None, :]
+    new_buf = window[:, 1:, :]
+    xbc = jax.nn.silu(conv_out)
+    xi, Bv, Cv = jnp.split(xbc, [di, di + n], axis=-1)
+    delta = jax.nn.softplus(dtv.astype(jnp.float32))[:, 0]     # (B, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dec = jnp.exp(delta * A[None])                             # (B, H)
+    xh = xi.reshape(B, H, P).astype(jnp.float32) * delta[..., None]
+    Bf = Bv.astype(jnp.float32)[:, 0]
+    Cf = Cv.astype(jnp.float32)[:, 0]
+    S = S * dec[..., None, None] + jnp.einsum("bn,bhp->bhnp", Bf, xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cf, S)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, di).astype(dt_)
+    y = y * jax.nn.silu(z) * p["norm_scale"].astype(dt_)
+    return y @ p["out_proj"].astype(dt_), S, new_buf

@@ -1,0 +1,387 @@
+"""Model assembly: decoder LMs (dense/MoE/SWA), hybrid Mamba2+shared-attn
+(zamba2), pure SSM (falcon-mamba), encoder-decoder (whisper), and VLM stub
+(internvl2). One forward for train/prefill, one step for decode.
+
+Params are nested dicts; abstract shapes via jax.eval_shape(init_params, ...)
+feed the multi-pod dry-run without allocation.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _block_params(key, cfg: ModelConfig, enc=False):
+    ks = jax.random.split(key, 6)
+    p = {"norm1": L.norm_params(cfg)}
+    if cfg.block_type == "attn" or enc:
+        p["attn"] = L.attn_params(ks[0], cfg)
+        p["norm2"] = L.norm_params(cfg)
+        if cfg.moe_experts and not enc:
+            p["moe"] = L.mlp_params(ks[1], cfg, n_experts=cfg.moe_experts)
+        elif cfg.d_ff:
+            p["mlp"] = L.mlp_params(ks[1], cfg)
+        if cfg.enc_dec and not enc:
+            p["cross"] = L.attn_params(ks[2], cfg)
+            p["norm3"] = L.norm_params(cfg)
+    elif cfg.block_type == "mamba1":
+        p["mamba"] = L.mamba1_params(ks[0], cfg)
+    elif cfg.block_type == "mamba2":
+        p["mamba"] = L.mamba2_params(ks[0], cfg)
+    return p
+
+
+def can_scan(cfg: ModelConfig) -> bool:
+    """Decoder stacks are scanned over a stacked param pytree (compile time
+    stays O(1) in depth at 512-way SPMD). zamba2's shared attention block is
+    handled inside the scan via a per-layer flag + lax.cond (+ a carried
+    shared-KV stack at decode). Only enc-dec (whisper, 6 layers) unrolls."""
+    return not cfg.enc_dec
+
+
+def init_params(cfg: ModelConfig, key=None, scan_layers: bool = None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    scan_layers = can_scan(cfg) if scan_layers is None else scan_layers
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    if scan_layers and can_scan(cfg):
+        layer_keys = jax.random.split(ks[2], cfg.n_layers)
+        layers = jax.vmap(lambda k: _block_params(k, cfg))(layer_keys)
+    else:
+        layers = [_block_params(ks[2 + i], cfg) for i in range(cfg.n_layers)]
+    params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02
+                  ).astype(pd),
+        "unembed": L.dense_init(ks[1], (cfg.d_model, cfg.vocab), pd),
+        "norm_f": L.norm_params(cfg),
+        "layers": layers,
+    }
+    if cfg.shared_attn_every:
+        shared_key = jax.random.split(ks[-1], 2)
+        params["shared_attn"] = {
+            "norm1": L.norm_params(cfg),
+            "attn": L.attn_params(shared_key[0], cfg),
+            "norm2": L.norm_params(cfg),
+            "mlp": L.mlp_params(shared_key[1], cfg),
+        }
+    if cfg.enc_dec:
+        eks = jax.random.split(ks[-2], cfg.enc_layers + 1)
+        params["encoder"] = {
+            "layers": [_block_params(eks[i], cfg, enc=True)
+                       for i in range(cfg.enc_layers)],
+            "norm_f": L.norm_params(cfg),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _pos_embed_sinusoidal(length, d, dtype):
+    pos = np.arange(length)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    pe = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(pe, dtype)
+
+
+def _encoder_forward(params, cfg: ModelConfig, frames):
+    """frames: (B, T, d) precomputed stub embeddings (conv frontend stubbed)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + _pos_embed_sinusoidal(x.shape[1], cfg.d_model, x.dtype)[None]
+    for blk in params["encoder"]["layers"]:
+        h = L.apply_norm(blk["norm1"], cfg, x)
+        x = x + L.self_attention(blk["attn"], cfg, h, causal=False,
+                                 use_rope=False)
+        h = L.apply_norm(blk["norm2"], cfg, x)
+        x = x + L.apply_mlp(blk["mlp"], cfg, h)
+    return L.apply_norm(params["encoder"]["norm_f"], cfg, x)
+
+
+def _decoder_block(blk, cfg: ModelConfig, x, memory=None, shared=None,
+                   layer_idx=0):
+    if cfg.block_type == "attn":
+        h = L.apply_norm(blk["norm1"], cfg, x)
+        x = x + L.self_attention(blk["attn"], cfg, h,
+                                 use_rope=not cfg.enc_dec)
+        if cfg.enc_dec and memory is not None:
+            h = L.apply_norm(blk["norm3"], cfg, x)
+            x = x + L.cross_attention(blk["cross"], cfg, h, memory)
+        h = L.apply_norm(blk["norm2"], cfg, x)
+        if cfg.moe_experts:
+            x = x + L.apply_moe(blk["moe"], cfg, h)
+        else:
+            x = x + L.apply_mlp(blk["mlp"], cfg, h)
+    else:
+        h = L.apply_norm(blk["norm1"], cfg, x)
+        if cfg.block_type == "mamba1":
+            x = x + L.mamba1_block(blk["mamba"], cfg, h)
+        else:
+            x = x + L.mamba2_block(blk["mamba"], cfg, h)
+    if shared is not None and cfg.shared_attn_every and \
+            (layer_idx + 1) % cfg.shared_attn_every == 0:
+        h = L.apply_norm(shared["norm1"], cfg, x)
+        x = x + L.self_attention(shared["attn"], cfg, h)
+        h = L.apply_norm(shared["norm2"], cfg, x)
+        x = x + L.apply_mlp(shared["mlp"], cfg, h)
+    return x
+
+
+def forward(params, cfg: ModelConfig, tokens, frontend_embeds=None):
+    """tokens: (B, S_tok). With a frontend, ``frontend_embeds`` (B, F, d) is
+    prepended (VLM patches / audio goes to the encoder instead). Returns
+    logits (B, S, vocab)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dt)
+    memory = None
+    if cfg.frontend == "vlm" and frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(dt), x], axis=1)
+    if cfg.enc_dec:
+        memory = _encoder_forward(params, cfg, frontend_embeds)
+        x = x + _pos_embed_sinusoidal(x.shape[1], cfg.d_model, dt)[None]
+    shared = params.get("shared_attn")
+
+    if isinstance(params["layers"], dict):
+        # stacked params: scan over the layer dimension
+        flags = _shared_flags(cfg)
+
+        def body(x, xs):
+            blk, flag = xs
+            y = _decoder_block(blk, cfg, x, memory, None, 0)
+            if cfg.shared_attn_every:
+                def with_shared(xx):
+                    h = L.apply_norm(shared["norm1"], cfg, xx)
+                    xx = xx + L.self_attention(shared["attn"], cfg, h)
+                    h = L.apply_norm(shared["norm2"], cfg, xx)
+                    return xx + L.apply_mlp(shared["mlp"], cfg, h)
+                y = jax.lax.cond(flag, with_shared, lambda xx: xx, y)
+            return y, None
+        scan_body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(scan_body, x, (params["layers"], flags))
+    else:
+        for i, blk in enumerate(params["layers"]):
+            body = lambda xx: _decoder_block(blk, cfg, xx, memory, shared, i)
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x = body(x)
+    x = L.apply_norm(params["norm_f"], cfg, x)
+    return x @ params["unembed"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, cache-carrying)
+# ---------------------------------------------------------------------------
+def _shared_flags(cfg: ModelConfig):
+    if not cfg.shared_attn_every:
+        return jnp.zeros(cfg.n_layers, bool)
+    return (jnp.arange(cfg.n_layers) + 1) % cfg.shared_attn_every == 0
+
+
+def n_shared_blocks(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every if cfg.shared_attn_every \
+        else 0
+
+
+def _layer_cache_shapes(cfg: ModelConfig, batch: int, max_seq: int, i: int,
+                        lead=()):
+    dt = jnp.dtype(cfg.dtype)
+    lc = {}
+    if cfg.block_type == "attn":
+        kv = lead + (batch, max_seq, cfg.n_kv, cfg.hd)
+        lc["k"] = jax.ShapeDtypeStruct(kv, dt)
+        lc["v"] = jax.ShapeDtypeStruct(kv, dt)
+    elif cfg.block_type == "mamba1":
+        lc["h"] = jax.ShapeDtypeStruct(
+            lead + (batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+        lc["conv"] = jax.ShapeDtypeStruct(
+            lead + (batch, cfg.ssm_conv - 1, cfg.d_inner), dt)
+    else:  # mamba2
+        lc["S"] = jax.ShapeDtypeStruct(
+            lead + (batch, cfg.n_heads, cfg.ssm_state,
+                    cfg.d_inner // cfg.n_heads), jnp.float32)
+        lc["conv"] = jax.ShapeDtypeStruct(
+            lead + (batch, cfg.ssm_conv - 1,
+                    cfg.d_inner + 2 * cfg.ssm_state), dt)
+    if lead == () and cfg.shared_attn_every and \
+            (i + 1) % cfg.shared_attn_every == 0:
+        kv = (batch, max_seq, cfg.n_kv, cfg.hd)
+        lc["shared_k"] = jax.ShapeDtypeStruct(kv, dt)
+        lc["shared_v"] = jax.ShapeDtypeStruct(kv, dt)
+    return lc
+
+
+def init_cache_shapes(cfg: ModelConfig, batch: int, max_seq: int,
+                      scan_layers: bool = None):
+    """ShapeDtypeStructs for the decode cache (used by the dry-run).
+
+    Scanned stacks get one stacked cache dict (n_layers leading dim); the
+    zamba2 shared-attention KV stack is a separate (n_shared, ...) entry
+    carried through the scan."""
+    dt = jnp.dtype(cfg.dtype)
+    scan_layers = can_scan(cfg) if scan_layers is None else scan_layers
+    c = {"pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    if scan_layers and can_scan(cfg):
+        c["layers"] = _layer_cache_shapes(cfg, batch, max_seq, 0,
+                                          lead=(cfg.n_layers,))
+        if cfg.shared_attn_every:
+            ns = n_shared_blocks(cfg)
+            kv = (ns, batch, max_seq, cfg.n_kv, cfg.hd)
+            c["shared"] = {"k": jax.ShapeDtypeStruct(kv, dt),
+                           "v": jax.ShapeDtypeStruct(kv, dt)}
+    else:
+        c["layers"] = [_layer_cache_shapes(cfg, batch, max_seq, i)
+                       for i in range(cfg.n_layers)]
+    if cfg.enc_dec:
+        c["memory"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_len, cfg.d_model), dt)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               scan_layers: bool = None):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_cache_shapes(cfg, batch, max_seq, scan_layers))
+
+
+def _decode_layer(blk, cfg: ModelConfig, x, lc, pos, memory=None):
+    """One decoder layer of single-token decode; returns (x, new layer cache)."""
+    lc = dict(lc)
+    if cfg.block_type == "attn":
+        h = L.apply_norm(blk["norm1"], cfg, x)
+        o, lc["k"], lc["v"] = L.decode_attention(
+            blk["attn"], cfg, h, lc["k"], lc["v"], pos,
+            use_rope=not cfg.enc_dec)
+        x = x + o
+        if cfg.enc_dec:
+            h = L.apply_norm(blk["norm3"], cfg, x)
+            x = x + L.cross_attention(blk["cross"], cfg, h, memory)
+        h = L.apply_norm(blk["norm2"], cfg, x)
+        if cfg.moe_experts:
+            x = x + L.apply_moe(blk["moe"], cfg, h, group_size=64)
+        else:
+            x = x + L.apply_mlp(blk["mlp"], cfg, h)
+    elif cfg.block_type == "mamba1":
+        h = L.apply_norm(blk["norm1"], cfg, x)
+        o, lc["h"], lc["conv"] = L.mamba1_decode(blk["mamba"], cfg, h,
+                                                 lc["h"], lc["conv"])
+        x = x + o
+    else:
+        h = L.apply_norm(blk["norm1"], cfg, x)
+        o, lc["S"], lc["conv"] = L.mamba2_decode(blk["mamba"], cfg, h,
+                                                 lc["S"], lc["conv"])
+        x = x + o
+    return x, lc
+
+
+def decode_step(params, cfg: ModelConfig, cache, token):
+    """token: (B, 1) int32. Returns (logits (B,1,V), new_cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"][token].astype(dt)
+    pos = cache["pos"]
+    if isinstance(params["layers"], dict):
+        # scanned stack; shared-attn KV stack is carried with a counter
+        shared = params.get("shared_attn")
+        flags = _shared_flags(cfg)
+
+        def body(carry, xs):
+            xx, sk, sv, cnt = carry
+            blk, lc, flag = xs
+            xx, lc = _decode_layer(blk, cfg, xx, lc, pos)
+            if cfg.shared_attn_every:
+                def do_shared(op):
+                    xx, sk, sv, cnt = op
+                    k_i = jax.lax.dynamic_index_in_dim(sk, cnt, 0,
+                                                       keepdims=False)
+                    v_i = jax.lax.dynamic_index_in_dim(sv, cnt, 0,
+                                                       keepdims=False)
+                    h = L.apply_norm(shared["norm1"], cfg, xx)
+                    o, k_i, v_i = L.decode_attention(shared["attn"], cfg, h,
+                                                     k_i, v_i, pos)
+                    xx = xx + o
+                    h = L.apply_norm(shared["norm2"], cfg, xx)
+                    xx = xx + L.apply_mlp(shared["mlp"], cfg, h)
+                    sk = jax.lax.dynamic_update_index_in_dim(sk, k_i, cnt, 0)
+                    sv = jax.lax.dynamic_update_index_in_dim(sv, v_i, cnt, 0)
+                    return (xx, sk, sv, cnt + 1)
+                xx, sk, sv, cnt = jax.lax.cond(flag, do_shared,
+                                               lambda op: op,
+                                               (xx, sk, sv, cnt))
+            return (xx, sk, sv, cnt), lc
+
+        if cfg.shared_attn_every:
+            sk0, sv0 = cache["shared"]["k"], cache["shared"]["v"]
+        else:
+            sk0 = jnp.zeros((1, 1, 1, 1, 1), dt)
+            sv0 = sk0
+        (x, sk, sv, _), new_layers = jax.lax.scan(
+            body, (x, sk0, sv0, jnp.zeros((), jnp.int32)),
+            (params["layers"], cache["layers"], flags))
+        x = L.apply_norm(params["norm_f"], cfg, x)
+        logits = x @ params["unembed"].astype(dt)
+        out = {"pos": pos + 1, "layers": new_layers}
+        if cfg.shared_attn_every:
+            out["shared"] = {"k": sk, "v": sv}
+        if cfg.enc_dec:
+            out["memory"] = cache["memory"]
+        return logits, out
+    if cfg.enc_dec:
+        # sinusoidal position at the dynamic decode index (f32-pinned)
+        i = jnp.arange(cfg.d_model // 2, dtype=jnp.float32)
+        ang = pos.astype(jnp.float32) / jnp.power(
+            jnp.float32(10000.0), 2.0 * i / cfg.d_model)
+        pe_dyn = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None]
+        x = x + pe_dyn.astype(dt)
+    shared = params.get("shared_attn")
+    new_layers = []
+    for i, blk in enumerate(params["layers"]):
+        lc = dict(cache["layers"][i])
+        if cfg.block_type == "attn":
+            h = L.apply_norm(blk["norm1"], cfg, x)
+            o, lc["k"], lc["v"] = L.decode_attention(
+                blk["attn"], cfg, h, lc["k"], lc["v"], pos,
+                use_rope=not cfg.enc_dec)
+            x = x + o
+            if cfg.enc_dec:
+                h = L.apply_norm(blk["norm3"], cfg, x)
+                x = x + L.cross_attention(blk["cross"], cfg, h,
+                                          cache["memory"])
+            h = L.apply_norm(blk["norm2"], cfg, x)
+            if cfg.moe_experts:
+                x = x + L.apply_moe(blk["moe"], cfg, h, group_size=64)
+            else:
+                x = x + L.apply_mlp(blk["mlp"], cfg, h)
+        elif cfg.block_type == "mamba1":
+            h = L.apply_norm(blk["norm1"], cfg, x)
+            o, lc["h"], lc["conv"] = L.mamba1_decode(blk["mamba"], cfg, h,
+                                                     lc["h"], lc["conv"])
+            x = x + o
+        else:
+            h = L.apply_norm(blk["norm1"], cfg, x)
+            o, lc["S"], lc["conv"] = L.mamba2_decode(blk["mamba"], cfg, h,
+                                                     lc["S"], lc["conv"])
+            x = x + o
+        if shared is not None and cfg.shared_attn_every and \
+                (i + 1) % cfg.shared_attn_every == 0:
+            h = L.apply_norm(shared["norm1"], cfg, x)
+            o, lc["shared_k"], lc["shared_v"] = L.decode_attention(
+                shared["attn"], cfg, h, lc["shared_k"], lc["shared_v"], pos)
+            x = x + o
+            h = L.apply_norm(shared["norm2"], cfg, x)
+            x = x + L.apply_mlp(shared["mlp"], cfg, h)
+        new_layers.append(lc)
+    x = L.apply_norm(params["norm_f"], cfg, x)
+    logits = x @ params["unembed"].astype(dt)
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layers
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,60 @@
+"""Synthetic deterministic data pipeline with exact-resume semantics.
+
+Every batch is a pure function of (seed, step, host) — after a restart the
+pipeline continues from the checkpointed step with bit-identical batches
+(the fault-tolerance story depends on this)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+
+
+class TokenStream:
+    """Markov-ish synthetic token stream (learnable structure so training
+    loss decreases measurably)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self.step = 0
+        rng = np.random.default_rng(cfg.seed)
+        # fixed bigram transition structure
+        self._next = rng.integers(0, cfg.vocab,
+                                  size=(cfg.vocab,)).astype(np.int32)
+
+    def state_dict(self):
+        return {"step": self.step}
+
+    def load_state_dict(self, st):
+        self.step = int(st["step"])
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        cfg = self.cfg
+        per_host = cfg.global_batch // cfg.n_hosts
+        rng = np.random.default_rng(
+            (cfg.seed * 1_000_003 + self.step) * 31 + cfg.host_id)
+        b = np.empty((per_host, cfg.seq_len), np.int32)
+        start = rng.integers(0, cfg.vocab, size=per_host).astype(np.int32)
+        b[:, 0] = start
+        noise = rng.random((per_host, cfg.seq_len)) < 0.1
+        for t in range(1, cfg.seq_len):
+            nxt = self._next[b[:, t - 1]]
+            rand = rng.integers(0, cfg.vocab, size=per_host)
+            b[:, t] = np.where(noise[:, t], rand, nxt)
+        self.step += 1
+        return {"tokens": jnp.asarray(b)}

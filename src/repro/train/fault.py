@@ -1,0 +1,86 @@
+"""Fault-tolerance controller (simulated multi-host): heartbeats, straggler
+detection, and elastic remesh decisions.
+
+On a real cluster the controller runs on the coordinator; workers heartbeat
+each step with their step time. Here the same logic is driven by simulated
+timings so the policy is testable: a node that misses ``dead_after`` beats is
+declared failed -> elastic restart on the surviving nodes from the last
+checkpoint; a node slower than ``straggle_factor`` x median is flagged and
+its shard re-balanced (or it is evicted after repeated flags)."""
+from __future__ import annotations
+
+import time
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class FaultConfig:
+    heartbeat_interval_s: float = 10.0
+    dead_after: int = 3                # missed beats before declared dead
+    straggle_factor: float = 1.5
+    straggle_strikes: int = 3          # flags before eviction
+
+
+@dataclass
+class NodeState:
+    last_beat: float = 0.0
+    missed: int = 0
+    strikes: int = 0
+    step_times: deque = field(default_factory=lambda: deque(maxlen=16))
+
+
+class FaultController:
+    def __init__(self, node_ids, cfg: FaultConfig = FaultConfig(),
+                 clock=time.monotonic):
+        self.cfg = cfg
+        self.clock = clock
+        self.nodes = {n: NodeState(last_beat=clock()) for n in node_ids}
+        self.events = []
+
+    # -- worker-side signals -------------------------------------------------
+    def heartbeat(self, node, step_time_s: float):
+        st = self.nodes[node]
+        st.last_beat = self.clock()
+        st.missed = 0
+        st.step_times.append(step_time_s)
+
+    # -- coordinator sweep ---------------------------------------------------
+    def sweep(self):
+        """Returns dict of decisions: {"dead": [...], "stragglers": [...],
+        "evict": [...]}; caller triggers checkpoint-restore/elastic remesh."""
+        now = self.clock()
+        dead, stragglers, evict = [], [], []
+        alive_times = [list(s.step_times)[-1] for s in self.nodes.values()
+                       if s.step_times]
+        median = sorted(alive_times)[len(alive_times) // 2] if alive_times \
+            else None
+        for n, st in list(self.nodes.items()):
+            missed = int((now - st.last_beat) // self.cfg.heartbeat_interval_s)
+            if missed >= self.cfg.dead_after:
+                dead.append(n)
+                del self.nodes[n]
+                continue
+            if median and st.step_times and \
+                    st.step_times[-1] > self.cfg.straggle_factor * median:
+                st.strikes += 1
+                stragglers.append(n)
+                if st.strikes >= self.cfg.straggle_strikes:
+                    evict.append(n)
+                    del self.nodes[n]
+            elif st.step_times:
+                st.strikes = max(0, st.strikes - 1)
+        out = {"dead": dead, "stragglers": stragglers, "evict": evict}
+        if dead or evict:
+            self.events.append(out)
+        return out
+
+    def surviving(self):
+        return sorted(self.nodes)
+
+
+def elastic_mesh_shape(n_devices: int, model_parallel: int):
+    """Largest (data, model) grid on the surviving devices: keep the model
+    axis (params must fit), shrink data parallelism."""
+    data = max(1, n_devices // model_parallel)
+    return (data, model_parallel)

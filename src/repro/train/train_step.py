@@ -1,0 +1,107 @@
+"""Train / serve step builders: LM cross-entropy, grad accumulation via
+lax.scan microbatching (compute/comm overlap comes from XLA latency hiding
+over the scan), optional int8-compressed gradient exchange."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..models import lm
+from ..models.config import ModelConfig
+from . import compression, optimizer as opt
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, frontend=None):
+    """Next-token cross entropy. tokens: (B, S) int32."""
+    logits = lm.forward(params, cfg, tokens, frontend)
+    tgt = tokens[:, 1:]
+    lg = logits[:, -tokens.shape[1]:-1, :]
+    logp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def make_train_step(cfg: ModelConfig, ocfg: opt.AdamWConfig,
+                    grad_accum: int = 1, compress_grads: bool = False,
+                    data_axis: str = None):
+    """Returns train_step(params, opt_state, err, batch) -> (...)
+
+    ``batch``: dict with tokens (B, S) [+ frontend]. With grad_accum > 1 the
+    batch leading dim is split into microbatches scanned sequentially.
+    ``data_axis``: if set, gradients go through an explicit (optionally
+    compressed) psum over that mesh axis — for use under shard_map; under
+    plain pjit the reduction is implicit in the sharding and this stays None.
+    """
+
+    def grads_of(params, tokens, frontend):
+        return jax.value_and_grad(lm_loss)(params, cfg, tokens, frontend)
+
+    def train_step(params, opt_state, err, batch):
+        tokens = batch["tokens"]
+        frontend = batch.get("frontend")
+        if grad_accum > 1:
+            B = tokens.shape[0]
+            mb = B // grad_accum
+            tok_mb = tokens.reshape(grad_accum, mb, *tokens.shape[1:])
+            fe_mb = (frontend.reshape(grad_accum, mb, *frontend.shape[1:])
+                     if frontend is not None else None)
+
+            def body(acc, xs):
+                tok = xs[0]
+                fe = xs[1] if fe_mb is not None else None
+                loss, g = grads_of(params, tok, fe)
+                acc = (acc[0] + loss,
+                       jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    acc[1], g))
+                return acc, None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            xs = (tok_mb, fe_mb) if fe_mb is not None else (tok_mb,)
+            (loss_sum, gsum), _ = jax.lax.scan(body, (0.0, zero), xs)
+            loss = loss_sum / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+        else:
+            loss, grads = grads_of(params, tokens, frontend)
+
+        if data_axis is not None:
+            if compress_grads:
+                grads, err = compression.compressed_psum(grads, err, data_axis)
+            else:
+                grads = jax.tree.map(
+                    lambda g: jax.lax.pmean(g, data_axis), grads)
+        elif compress_grads:
+            grads, err = compression.compress(grads, err)
+        params, opt_state, metrics = opt.apply_updates(params, grads,
+                                                       opt_state, ocfg)
+        metrics["loss"] = loss
+        return params, opt_state, err, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, temperature: float = 0.0):
+    """serve_step(params, cache, token, rng) -> (next_token, cache)."""
+
+    def serve_step(params, cache, token, rng):
+        logits, cache = lm.decode_step(params, cfg, cache, token)
+        lg = logits[:, -1, :].astype(jnp.float32)
+        if temperature > 0:
+            nxt = jax.random.categorical(rng, lg / temperature)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        return nxt.astype(jnp.int32)[:, None], cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig):
+    """prefill(params, tokens[, frontend]) -> logits (compiled separately —
+    its cost profile differs from both train and decode)."""
+
+    def prefill(params, tokens, frontend=None):
+        return lm.forward(params, cfg, tokens, frontend)
+
+    return prefill

@@ -1,0 +1,103 @@
+"""Hash permutation sanity, Merkle commit/open/verify, FRI accept/reject."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import field as F
+from repro.core import fri, hashing, merkle, poly
+from repro.core.transcript import Transcript
+
+
+def test_permute_deterministic_and_bijective_shape():
+    x = jnp.arange(32, dtype=jnp.uint32).reshape(2, 16) % F.P
+    y1 = hashing.permute(x)
+    y2 = hashing.permute(x)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert y1.shape == (2, 16)
+    # different inputs -> different outputs
+    assert not np.array_equal(np.asarray(y1[0]), np.asarray(y1[1]))
+
+
+def test_hash_rows_collision_resistance_smoke():
+    rng = np.random.default_rng(0)
+    rows = jnp.asarray(rng.integers(0, F.P, size=(64, 5)).astype(np.uint32))
+    d = np.asarray(hashing.hash_rows(rows))
+    assert d.shape == (64, 8)
+    assert len({tuple(r) for r in d}) == 64  # no collisions among 64 rows
+    # flipping one cell changes the digest
+    rows2 = rows.at[3, 2].set((rows[3, 2] + 1) % F.P)
+    d2 = np.asarray(hashing.hash_rows(rows2))
+    assert not np.array_equal(d[3], d2[3])
+    np.testing.assert_array_equal(d[4], d2[4])
+
+
+@pytest.mark.parametrize("n,width", [(8, 3), (64, 8), (128, 1)])
+def test_merkle_roundtrip(n, width):
+    rng = np.random.default_rng(n)
+    rows = jnp.asarray(rng.integers(0, F.P, size=(n, width)).astype(np.uint32))
+    tree = merkle.commit(rows)
+    idx = jnp.asarray(rng.integers(0, n, size=5))
+    opened, path = merkle.open_at(tree, idx)
+    assert bool(merkle.verify_open(tree.root, idx, opened, path))
+    # tampered row must fail
+    bad = opened.at[0, 0].set((opened[0, 0] + 1) % F.P)
+    assert not bool(merkle.verify_open(tree.root, idx, bad, path))
+    # wrong index must fail
+    bad_idx = idx.at[0].set((idx[0] + 1) % n)
+    assert not bool(merkle.verify_open(tree.root, bad_idx, opened, path))
+
+
+def _random_low_degree_codeword(n, blowup, rng):
+    """Fp4 codeword of a degree < n/blowup polynomial on shift*H_n."""
+    deg = n // blowup
+    coeffs = rng.integers(0, F.P, size=(4, deg)).astype(np.uint32)
+    ext_evals = []
+    for c in coeffs:  # evaluate each Fp4 coefficient-component separately
+        padded = jnp.asarray(np.pad(c, (0, n - deg)))
+        ext_evals.append(poly.ntt(F.fmul(padded, jnp.asarray(
+            np.array([pow(poly.COSET_SHIFT, i, F.P) for i in range(n)], np.uint32)))))
+    return jnp.stack(ext_evals, axis=-1)  # (n, 4)
+
+
+def test_fri_accepts_low_degree():
+    n = 256
+    cfg = fri.FriConfig(blowup=4, n_queries=16, final_size=16)
+    rng = np.random.default_rng(42)
+    cw = _random_low_degree_codeword(n, cfg.blowup, rng)
+    proof = fri.fri_prove(cw, Transcript("t"), cfg)
+    ok, q, layer0, _ = fri.fri_verify(proof, Transcript("t"), cfg, n)
+    assert ok
+    # layer-0 openings are the codeword itself at the query points
+    lo, hi, idx = layer0
+    np.testing.assert_array_equal(lo, np.asarray(cw)[idx])
+    np.testing.assert_array_equal(hi, np.asarray(cw)[idx + n // 2])
+
+
+def test_fri_rejects_high_degree():
+    n = 256
+    cfg = fri.FriConfig(blowup=4, n_queries=16, final_size=16)
+    rng = np.random.default_rng(43)
+    cw = jnp.asarray(rng.integers(0, F.P, size=(n, 4)).astype(np.uint32))  # random => high degree
+    proof = fri.fri_prove(cw, Transcript("t"), cfg)
+    ok, *_ = fri.fri_verify(proof, Transcript("t"), cfg, n)
+    assert not ok
+
+
+def test_fri_rejects_tampered_final_codeword():
+    n = 256
+    cfg = fri.FriConfig(blowup=4, n_queries=16, final_size=16)
+    rng = np.random.default_rng(44)
+    cw = _random_low_degree_codeword(n, cfg.blowup, rng)
+    proof = fri.fri_prove(cw, Transcript("t"), cfg)
+    proof.final_codeword = proof.final_codeword.copy()
+    proof.final_codeword[0, 0] = (proof.final_codeword[0, 0] + 1) % F.P
+    ok, *_ = fri.fri_verify(proof, Transcript("t"), cfg, n)
+    assert not ok
+
+
+def test_transcript_determinism_and_divergence():
+    t1, t2 = Transcript("a"), Transcript("a")
+    t1.absorb([1, 2, 3]); t2.absorb([1, 2, 3])
+    assert np.array_equal(t1.challenge_ext(), t2.challenge_ext())
+    t3 = Transcript("a"); t3.absorb([1, 2, 4])
+    assert not np.array_equal(t1.challenge_ext(), t3.challenge_ext())

@@ -1,0 +1,124 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): shape sweeps, edge
+values, and the uint32 16-bit-limb mulmod path vs the uint64 oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field as F
+from repro.core import hashing, poly
+from repro.kernels.fieldops import ops as fops
+from repro.kernels.fieldops import ref as fref
+from repro.kernels.fieldops.fieldops import mulmod_limb
+from repro.kernels.ntt import ops as ntt_ops
+from repro.kernels.ntt import ref as ntt_ref
+from repro.kernels.poseidon import ops as pos_ops
+from repro.kernels.poseidon import ref as pos_ref
+
+
+# ---------------------------------------------------------------------------
+# fieldops: limb mulmod
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [8, 256, 4096])
+def test_mulmod_kernel_matches_oracle(n):
+    rng = np.random.default_rng(n)
+    a = jnp.asarray(rng.integers(0, F.P, size=n).astype(np.uint32))
+    b = jnp.asarray(rng.integers(0, F.P, size=n).astype(np.uint32))
+    np.testing.assert_array_equal(np.asarray(fops.mulmod(a, b)),
+                                  np.asarray(fref.mulmod_ref(a, b)))
+
+
+def test_mulmod_edge_values():
+    edge = np.asarray([0, 1, 2, 3, F.P - 1, F.P - 2, (1 << 16) - 1, 1 << 16,
+                       (1 << 16) + 1, (1 << 27), (1 << 27) - 1, F.P // 2,
+                       (1 << 30), 1234567, F.P - (1 << 16)], np.uint64)
+    a, b = np.meshgrid(edge, edge)
+    a, b = a.ravel(), b.ravel()
+    # pad to kernel block multiple
+    pad = (-len(a)) % 8
+    a = np.concatenate([a, np.zeros(pad, np.uint64)])
+    b = np.concatenate([b, np.zeros(pad, np.uint64)])
+    got = np.asarray(fops.mulmod(jnp.asarray(a.astype(np.uint32)),
+                                 jnp.asarray(b.astype(np.uint32))))
+    want = ((a * b) % F.P).astype(np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(0, F.P - 1), st.integers(0, F.P - 1))
+@settings(max_examples=50, deadline=None)
+def test_mulmod_limb_property(a, b):
+    got = int(mulmod_limb(jnp.full((8,), a, jnp.uint32),
+                          jnp.full((8,), b, jnp.uint32))[0])
+    assert got == (a * b) % F.P
+
+
+@pytest.mark.parametrize("shape", [(64,), (8, 32), (4, 4, 16)])
+def test_fused_mul_add(shape):
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.integers(0, F.P, size=shape).astype(np.uint32))
+    b = jnp.asarray(rng.integers(0, F.P, size=shape).astype(np.uint32))
+    c = jnp.asarray(rng.integers(0, F.P, size=shape).astype(np.uint32))
+    np.testing.assert_array_equal(np.asarray(fops.fused_mul_add(a, b, c)),
+                                  np.asarray(fref.fused_mul_add_ref(a, b, c)))
+
+
+# ---------------------------------------------------------------------------
+# NTT kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [2, 16, 64, 512])
+@pytest.mark.parametrize("batch", [1, 4])
+@pytest.mark.parametrize("inverse", [False, True])
+def test_ntt_kernel_matches_oracle(n, batch, inverse):
+    rng = np.random.default_rng(n + batch)
+    x = jnp.asarray(rng.integers(0, F.P, size=(batch, n)).astype(np.uint32))
+    got = np.asarray(ntt_ops.ntt(x, inverse=inverse))
+    want = np.asarray(ntt_ref.ntt_ref(x, inverse=inverse))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ntt_kernel_roundtrip():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.integers(0, F.P, size=(2, 128)).astype(np.uint32))
+    back = ntt_ops.ntt(ntt_ops.ntt(x), inverse=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# Poseidon kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [1, 8, 64, 128])
+def test_poseidon_kernel_matches_oracle(n):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.integers(0, F.P, size=(n, 16)).astype(np.uint32))
+    got = np.asarray(pos_ops.permute(x))
+    want = np.asarray(pos_ref.permute_ref(x))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_grand_product_kernel_matches_oracle():
+    from repro.kernels.grand_product import ops as gp_ops
+    from repro.kernels.grand_product import ref as gp_ref
+    rng = np.random.default_rng(0)
+    for n in (8, 256, 1024):
+        x = jnp.asarray(rng.integers(1, F.P, size=n).astype(np.uint32))
+        got = np.asarray(gp_ops.grand_product(x))
+        want = np.asarray(gp_ref.grand_product_ref(x))
+        np.testing.assert_array_equal(got, want)
+    # paper Eq. (2): a true permutation ratio telescopes back to 1
+    vals = rng.integers(1, F.P, size=255).astype(np.uint64)
+    one = np.ones(1, np.uint64)
+    num = np.concatenate([vals, one])
+    den = np.concatenate([one, vals])
+    inv_den = np.asarray([pow(int(d), F.P - 2, F.P) for d in den], np.uint64)
+    ratios = (num * inv_den % F.P).astype(np.uint32)
+    z = np.asarray(gp_ops.grand_product(jnp.asarray(ratios)))
+    total = int(z[-1]) * int(ratios[-1]) % F.P
+    assert total == 1
+
+
+def test_poseidon_kernel_zero_state():
+    x = jnp.zeros((8, 16), jnp.uint32)
+    got = np.asarray(pos_ops.permute(x))
+    want = np.asarray(pos_ref.permute_ref(x))
+    np.testing.assert_array_equal(got, want)
+    assert not np.array_equal(got[0], np.zeros(16))  # permutation moves zero

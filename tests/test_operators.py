@@ -1,0 +1,311 @@
+"""Graph operator tests (paper §IV): witness-level constraint satisfaction
+(fast, exact) for completeness/soundness, plus full prove+verify round trips
+on representative operators."""
+import numpy as np
+import pytest
+
+from repro.core import field as F
+from repro.core import prover as pv
+from repro.core.operators import (all_shortest, birc, expansion, orderby,
+                                  reachability, set_expansion, sssp)
+from repro.core.operators.common import check_constraints
+from repro.graphdb import engine, ldbc
+from repro.graphdb.storage import pad_pow2
+
+FAST = pv.ProverConfig(blowup=4, n_queries=8, fri_final_size=16)
+
+
+@pytest.fixture(scope="module")
+def db():
+    return ldbc.generate(n_knows=100, n_persons=24, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# single-source expansion, edge-list
+# ---------------------------------------------------------------------------
+def test_expand_edge_list_complete_and_prove(db):
+    t = db.tables["person_knows_person"]
+    src_id = int(t.src[0])
+    op = expansion.build_edge_list(pad_pow2(len(t)), len(t))
+    advice, inst, data = expansion.witness_edge_list(op, t.src, t.dst, src_id)
+    assert check_constraints(op, advice, inst, data) == []
+    # oracle agreement
+    want, _ = engine.expand(t, src_id)
+    got = inst[op.handles["C_t"].index][inst[op.handles["out_sel"].index] == 1]
+    assert sorted(got.tolist()) == sorted(want.tolist())
+    # full round trip incl. dataset-root binding
+    op.keygen(FAST)
+    proof = op.prove(advice, inst, data)
+    assert op.verify(inst, proof, expected_data_root=proof.data_root)
+    assert not op.verify(inst, proof, expected_data_root=np.zeros(8, np.uint32))
+
+
+def test_expand_edge_list_soundness(db):
+    t = db.tables["person_knows_person"]
+    src_id = int(t.src[0])
+    op = expansion.build_edge_list(pad_pow2(len(t)), len(t))
+    advice, inst, data = expansion.witness_edge_list(op, t.src, t.dst, src_id)
+    # (a) forged neighbour in the output
+    bad_inst = inst.copy()
+    col = op.handles["C_t"].index
+    bad_inst[col, 0] = (int(bad_inst[col, 0]) + 1) % F.P
+    assert any(b.startswith("bus:out_perm") for b in
+               check_constraints(op, advice, bad_inst, data))
+    # (b) omitted edge: flip a flag off
+    bad_adv = advice.copy()
+    fl = op.handles["fl"].index
+    row = int(np.nonzero(advice[fl])[0][0])
+    bad_adv[fl, row] = 0
+    assert check_constraints(op, bad_adv, inst, data) != []
+    # (c) full-proof rejection for (a)
+    op.keygen(FAST)
+    proof = op.prove(advice, bad_inst, data)
+    assert not op.verify(bad_inst, proof)
+
+
+# ---------------------------------------------------------------------------
+# single-source expansion, CSR (Table I comparison partner)
+# ---------------------------------------------------------------------------
+def test_expand_csr_complete(db):
+    t = db.tables["person_knows_person"]
+    col, row_ptr, lut = t.to_csr(db.node_ids)
+    src_id = int(t.src[5])
+    n_rows = pad_pow2(max(len(col), len(lut) + 1))
+    op = expansion.build_csr(n_rows, len(col), len(lut),
+                             id_bits=max(db.id_bits, n_rows.bit_length()))
+    advice, inst, data = expansion.witness_csr(op, col, row_ptr, lut, src_id)
+    assert check_constraints(op, advice, inst, data) == []
+    want, _ = engine.expand(t, src_id)
+    got = inst[op.handles["C_t"].index][inst[op.handles["out_sel"].index] == 1]
+    assert sorted(got.tolist()) == sorted(want.tolist())
+
+
+def test_expand_csr_soundness(db):
+    t = db.tables["person_knows_person"]
+    col, row_ptr, lut = t.to_csr(db.node_ids)
+    src_id = int(t.src[5])
+    n_rows = pad_pow2(max(len(col), len(lut) + 1))
+    op = expansion.build_csr(n_rows, len(col), len(lut),
+                             id_bits=max(db.id_bits, n_rows.bit_length()))
+    advice, inst, data = expansion.witness_csr(op, col, row_ptr, lut, src_id)
+    # widen the claimed range by one: extra spurious neighbour
+    bad = advice.copy()
+    r_s = op.handles["r_s"].index
+    bad[r_s] = (bad[r_s].astype(np.int64) + 1) % F.P
+    assert check_constraints(op, bad, inst, data) != []
+
+
+# ---------------------------------------------------------------------------
+# set-based expansion
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bidir", [False, True])
+def test_set_expansion_complete(db, bidir):
+    t = db.tables["person_knows_person"]
+    ids = np.unique(t.src[:6])
+    op = set_expansion.build(pad_pow2(len(t)), len(t), len(ids),
+                             bidirectional=bidir)
+    advice, inst, data = set_expansion.witness(op, t.src, t.dst, ids)
+    assert check_constraints(op, advice, inst, data) == []
+    out_sel = inst[op.handles["out_sel"].index] == 1
+    got = set(zip(inst[op.handles["C_s"].index][out_sel].tolist(),
+                  inst[op.handles["C_t"].index][out_sel].tolist()))
+    if not bidir:
+        s, d, _ = engine.expand_set(t, ids)
+        assert got == set(zip(s.tolist(), d.tolist()))
+    else:
+        s, d, _ = engine.expand_set(t, ids)
+        s2 = t.dst[np.isin(t.dst, ids)]
+        d2 = t.src[np.isin(t.dst, ids)]
+        assert got == set(zip(s.tolist(), d.tolist())) | \
+            set(zip(s2.tolist(), d2.tolist()))
+
+
+def test_set_expansion_soundness(db):
+    t = db.tables["person_knows_person"]
+    ids = np.unique(t.src[:6])
+    op = set_expansion.build(pad_pow2(len(t)), len(t), len(ids))
+    advice, inst, data = set_expansion.witness(op, t.src, t.dst, ids)
+    # drop one output edge
+    bad = inst.copy()
+    sel = op.handles["out_sel"].index
+    row = int(np.nonzero(inst[sel])[0][-1])
+    bad[sel, row] = 0
+    assert check_constraints(op, advice, bad, data) != []
+    # tamper the sorted copy (breaks permutation to committed data)
+    bad_adv = advice.copy()
+    ap = op.handles["Ap"].index
+    bad_adv[ap, 0] = (int(bad_adv[ap, 0]) + 1) % F.P
+    assert check_constraints(op, bad_adv, inst, data) != []
+
+
+def test_set_expansion_prove_verify(db):
+    t = db.tables["person_knows_person"]
+    ids = np.unique(t.src[:4])
+    op = set_expansion.build(pad_pow2(len(t)), len(t), len(ids)).keygen(FAST)
+    advice, inst, data = set_expansion.witness(op, t.src, t.dst, ids)
+    proof = op.prove(advice, inst, data)
+    assert op.verify(inst, proof)
+
+
+# ---------------------------------------------------------------------------
+# SSSP
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("undirected", [True, False])
+def test_sssp_complete(db, undirected):
+    t = db.tables["person_knows_person"]
+    src_id = int(db.node_ids[0])
+    dist, pred, pd = engine.bfs_sssp(t, db.node_ids, src_id, undirected)
+    n_rows = pad_pow2(max(len(t), db.n_nodes))
+    op = sssp.build(n_rows, len(t), db.n_nodes, undirected=undirected)
+    advice, inst, data = sssp.witness(op, t.src, t.dst, db.node_ids, src_id,
+                                      dist, pred, pd)
+    assert check_constraints(op, advice, inst, data) == []
+
+
+def test_sssp_soundness_short_and_long(db):
+    t = db.tables["person_knows_person"]
+    src_id = int(db.node_ids[0])
+    dist, pred, pd = engine.bfs_sssp(t, db.node_ids, src_id, True)
+    n_rows = pad_pow2(max(len(t), db.n_nodes))
+    op = sssp.build(n_rows, len(t), db.n_nodes, undirected=True)
+    reachable = np.nonzero((dist > 0) & (dist < db.n_nodes + 1))[0]
+    v = int(reachable[0])
+    # claim shorter than truth -> path-validity constraints break
+    d_short = dist.copy()
+    d_short[v] -= 1
+    advice, inst, data = sssp.witness(op, t.src, t.dst, db.node_ids, src_id,
+                                      d_short, pred, pd)
+    assert check_constraints(op, advice, inst, data) != []
+    # claim longer than truth -> relaxation breaks
+    d_long = dist.copy()
+    d_long[v] += 1
+    advice, inst, data = sssp.witness(op, t.src, t.dst, db.node_ids, src_id,
+                                      d_long, pred, pd)
+    assert check_constraints(op, advice, inst, data) != []
+    # falsely claim unreachable -> relaxation breaks
+    d_unr = dist.copy()
+    d_unr[v] = db.n_nodes + 1
+    advice, inst, data = sssp.witness(op, t.src, t.dst, db.node_ids, src_id,
+                                      d_unr, pred, pd)
+    assert check_constraints(op, advice, inst, data) != []
+
+
+def test_sssp_prove_verify(db):
+    t = db.tables["person_knows_person"]
+    src_id = int(db.node_ids[0])
+    dist, pred, pd = engine.bfs_sssp(t, db.node_ids, src_id, True)
+    n_rows = pad_pow2(max(len(t), db.n_nodes))
+    op = sssp.build(n_rows, len(t), db.n_nodes, undirected=True).keygen(FAST)
+    advice, inst, data = sssp.witness(op, t.src, t.dst, db.node_ids, src_id,
+                                      dist, pred, pd)
+    proof = op.prove(advice, inst, data)
+    assert op.verify(inst, proof)
+
+
+# ---------------------------------------------------------------------------
+# BiRC
+# ---------------------------------------------------------------------------
+def test_birc_complete_and_sound(db):
+    t = db.tables["person_knows_person"]
+    op = birc.build(pad_pow2(len(t)), len(t))
+    advice, inst, data = birc.witness(op, t.src, t.dst)
+    assert check_constraints(op, advice, inst, data) == []
+    lo = inst[op.handles["L"].index][: len(t)]
+    hi = inst[op.handles["H"].index][: len(t)]
+    assert (lo <= hi).all()
+    assert ((lo == t.src) | (lo == t.dst)).all()
+    # non-canonical (swapped) output must fail the order range check
+    row = int(np.nonzero(t.src != t.dst)[0][0])
+    bad = inst.copy()
+    bad[op.handles["L"].index, row], bad[op.handles["H"].index, row] = \
+        bad[op.handles["H"].index, row], bad[op.handles["L"].index, row]
+    assert check_constraints(op, advice, bad, data) != []
+    # sum ok but product wrong
+    bad2 = inst.copy()
+    L, H = op.handles["L"].index, op.handles["H"].index
+    bad2[L, row] = (int(bad2[L, row]) + 1) % F.P
+    bad2[H, row] = (int(bad2[H, row]) - 1) % F.P
+    assert any("prod" in b or "order" in b
+               for b in check_constraints(op, advice, bad2, data))
+
+
+# ---------------------------------------------------------------------------
+# order-by / limit-k
+# ---------------------------------------------------------------------------
+def test_orderby_complete_and_sound(db):
+    t = db.tables["comment_hasCreator_person"]
+    vals = t.props["creationDate"][:50]
+    pay = t.src[:50]
+    k = 10
+    op = orderby.build(pad_pow2(50), 50, k)
+    advice, inst, data = orderby.witness(op, vals, pay)
+    assert check_constraints(op, advice, inst, data) == []
+    sel, pivot = engine.top_k(vals, k)
+    got = inst[op.handles["O_val"].index][
+        inst[op.handles["out_sel"].index] == 1]
+    assert sorted(got.tolist()) == sorted(vals[sel].tolist())
+    # swap a top-k entry for a non-top-k one
+    bad = advice.copy()
+    isk = op.handles["isk"].index
+    on = int(np.nonzero(advice[isk])[0][0])
+    off = int(np.nonzero((advice[isk] == 0) & (np.arange(len(advice[isk])) < 50))[0][0])
+    bad[isk, on], bad[isk, off] = 0, 1
+    assert check_constraints(op, bad, inst, data) != []
+
+
+# ---------------------------------------------------------------------------
+# reachability
+# ---------------------------------------------------------------------------
+def test_reachability_complete_and_sound(db):
+    t = db.tables["person_knows_person"]
+    dist, _, _ = engine.bfs_sssp(t, db.node_ids, int(db.node_ids[0]), True)
+    far = np.nonzero((dist >= 2) & (dist < db.n_nodes + 1))[0]
+    s, tt = int(db.node_ids[0]), int(db.node_ids[int(far[0])])
+    path = engine.find_path(t, db.node_ids, s, tt)
+    assert path is not None
+    op = reachability.build(pad_pow2(len(t)), len(t), len(path))
+    advice, inst, data = reachability.witness(op, t.src, t.dst, path, s, tt)
+    assert check_constraints(op, advice, inst, data) == []
+    # corrupt an interior path node -> a step stops being an edge
+    bad = advice.copy()
+    pcol = op.handles["path"].index
+    bad[pcol, 1] = (int(bad[pcol, 1]) + 1) % F.P
+    assert check_constraints(op, bad, inst, data) != []
+    # claim reachability of a node not on the path
+    bad_inst = inst.copy()
+    bad_inst[op.handles["id_t"].index] = 999999
+    assert check_constraints(op, advice, bad_inst, data) != []
+
+
+# ---------------------------------------------------------------------------
+# all-shortest-paths frontier
+# ---------------------------------------------------------------------------
+def test_all_shortest_complete_and_sound(db):
+    t = db.tables["person_knows_person"]
+    s = int(db.node_ids[0])
+    dist, _, _ = engine.bfs_sssp(t, db.node_ids, s, True)
+    cand = np.nonzero((dist >= 2) & (dist < db.n_nodes + 1))[0]
+    tt = int(db.node_ids[int(cand[0])])
+    d = int(dist[int(cand[0])])
+    n_rows = pad_pow2(max(len(t), db.n_nodes))
+    op = all_shortest.build(n_rows, len(t), db.n_nodes, undirected=True)
+    advice, inst, data = all_shortest.witness(op, t.src, t.dst, db.node_ids,
+                                              dist, tt, d)
+    assert check_constraints(op, advice, inst, data) == []
+    # oracle: frontier = {p : dist[p]=d-1, (p,tt) canonical edge either way}
+    idx_of = {int(v): i for i, v in enumerate(db.node_ids.tolist())}
+    want = []
+    for a, b in zip(t.src.tolist(), t.dst.tolist()):
+        if b == tt and dist[idx_of[a]] == d - 1:
+            want.append(a)
+        if a == tt and dist[idx_of[b]] == d - 1:
+            want.append(b)
+    out_sel = inst[op.handles["out_sel"].index] == 1
+    got = inst[op.handles["C_out"].index][out_sel].tolist()
+    assert sorted(got) == sorted(want)
+    assert len(got) > 0
+    # omitting one frontier member must break the multiset argument
+    bad = inst.copy()
+    row = int(np.nonzero(inst[op.handles["out_sel"].index])[0][0])
+    bad[op.handles["out_sel"].index, row] = 0
+    assert check_constraints(op, advice, bad, data) != []

@@ -1,0 +1,66 @@
+"""Query-plan tests: every LDBC plan's steps satisfy their circuits, results
+match the plain engine, and one full chain round-trips prove+verify."""
+import numpy as np
+import pytest
+
+from repro.core import prover as pv
+from repro.core import planner
+from repro.core.operators.common import check_constraints
+from repro.graphdb import engine, ldbc
+
+FAST = pv.ProverConfig(blowup=4, n_queries=8, fri_final_size=16)
+
+
+@pytest.fixture(scope="module")
+def db():
+    return ldbc.generate(n_knows=96, n_persons=24, n_comments=64, seed=11)
+
+
+@pytest.mark.parametrize("qname,params", [
+    ("IS3", dict(person=3)),
+    ("IS4", dict(message=(1 << 20) + 5)),
+    ("IS5", dict(message=(1 << 20) + 7)),
+    ("IC1", dict(person=2, firstName=None)),   # name filled in test
+    ("IC2", dict(person=4, k=10)),
+    ("IC8", dict(person=5, k=10)),
+    ("IC9", dict(person=6, k=10)),
+    ("IC13", dict(person1=1, person2=9)),
+])
+def test_plan_constraints_hold(db, qname, params):
+    if qname == "IC1":
+        params = dict(params)
+        params["firstName"] = int(db.node_props["person"]["firstName"][0])
+    run = planner.plan_query(db, qname, params)
+    assert len(run.steps) >= 1
+    for st in run.steps:
+        bad = check_constraints(st.op, st.advice, st.instance, st.data)
+        assert bad == [], f"{qname}/{st.op.name}: {bad}"
+
+
+def test_is3_result_matches_engine(db):
+    run = planner.plan_query(db, "IS3", dict(person=3))
+    t = db.tables["person_knows_person"]
+    want, *_ = engine.expand_undirected(t, 3)
+    assert sorted(run.result["friends"].tolist()) == sorted(want.tolist())
+    d = run.result["dates"]
+    assert (np.diff(d) <= 0).all()  # descending
+
+
+def test_ic13_distance_matches_engine(db):
+    t = db.tables["person_knows_person"]
+    dist, _, _ = engine.bfs_sssp(t, db.node_ids, 1, True)
+    idx = int(np.nonzero(db.node_ids == 9)[0][0])
+    want = int(dist[idx]) if dist[idx] <= db.n_nodes else -1
+    run = planner.plan_query(db, "IC13", dict(person1=1, person2=9))
+    assert run.result["distance"] == want
+
+
+def test_full_chain_prove_verify(db):
+    run = planner.plan_query(db, "IS5", dict(message=(1 << 20) + 7))
+    proofs = planner.prove_query(run, FAST)
+    commitments = planner.publish_commitments(db, FAST)
+    assert planner.verify_query(run, proofs, commitments, FAST)
+    # a proof against a different dataset must be rejected
+    db2 = ldbc.generate(n_knows=96, n_persons=24, n_comments=64, seed=99)
+    bad_commitments = planner.publish_commitments(db2, FAST)
+    assert not planner.verify_query(run, proofs, bad_commitments, FAST)

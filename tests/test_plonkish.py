@@ -1,0 +1,178 @@
+"""End-to-end PLONKish proof system tests: completeness + soundness.
+
+The Fibonacci circuit mirrors the paper's Fig. 1 example; the bus and
+grand-product circuits exercise the argument machinery the graph operators
+(paper §IV) are built from.
+"""
+import numpy as np
+import pytest
+
+from repro.core import field as F
+from repro.core import plonkish as pk
+from repro.core import prover as pv
+from repro.core import verifier as vf
+
+CFG = pv.ProverConfig(blowup=4, n_queries=16, fri_final_size=16)
+
+
+def _fib_circuit(n_rows=32):
+    """Paper Fig. 1: S[i] * (A[i] + B[i] - C[i]) = 0 with wiring via rotation
+    gates A[i+1]=B[i], B[i+1]=C[i]; claimed f(8)=21 lives in an instance col."""
+    c = pk.Circuit(n_rows, name="fib")
+    steps = 8
+    sel = c.add_fixed("s_add", np.array([1] * steps + [0] * (n_rows - steps)))
+    sel_w = c.add_fixed("s_wire", np.array([1] * (steps - 1) + [0] * (n_rows - steps + 1)))
+    a = c.add_advice("A")
+    b = c.add_advice("B")
+    cc = c.add_advice("C")
+    out = c.add_instance("claimed")
+    one_hot_last = np.zeros(n_rows)
+    one_hot_last[steps - 1] = 1
+    sel_out = c.add_fixed("s_out", one_hot_last)
+    c.add_gate("add", sel * (a + b - cc))
+    c.add_gate("wireA", sel_w * (a.rotate(1) - b))
+    c.add_gate("wireB", sel_w * (b.rotate(1) - cc))
+    c.add_gate("output", sel_out * (cc - out))
+    return c, steps
+
+
+def _fib_witness(c, steps, tamper=False):
+    n = c.n_rows
+    advice = np.zeros((c.n_advice, n), np.uint32)
+    fa, fb = 1, 1
+    for i in range(steps):
+        advice[0, i], advice[1, i] = fa, fb
+        advice[2, i] = fa + fb
+        fa, fb = fb, fa + fb
+    claimed = advice[2, steps - 1]
+    if tamper:
+        claimed = claimed + 1
+    instance = np.full((1, n), claimed, np.uint32)
+    return advice, instance
+
+
+def test_fibonacci_completeness():
+    c, steps = _fib_circuit()
+    keys = pv.keygen(c, CFG)
+    advice, instance = _fib_witness(c, steps)
+    proof = pv.prove(keys, advice, instance)
+    assert vf.verify(keys, instance, proof)
+
+
+def test_fibonacci_soundness_wrong_claim():
+    c, steps = _fib_circuit()
+    keys = pv.keygen(c, CFG)
+    advice, instance = _fib_witness(c, steps, tamper=True)
+    proof = pv.prove(keys, advice, instance)
+    assert not vf.verify(keys, instance, proof)
+
+
+def test_fibonacci_soundness_tampered_witness():
+    c, steps = _fib_circuit()
+    keys = pv.keygen(c, CFG)
+    advice, instance = _fib_witness(c, steps)
+    advice[2, 3] = (int(advice[2, 3]) + 5) % F.P
+    proof = pv.prove(keys, advice, instance)
+    assert not vf.verify(keys, instance, proof)
+
+
+def test_fibonacci_rejects_instance_swap():
+    """Proof generated for one claim must not verify against another."""
+    c, steps = _fib_circuit()
+    keys = pv.keygen(c, CFG)
+    advice, instance = _fib_witness(c, steps)
+    proof = pv.prove(keys, advice, instance)
+    other = instance.copy()
+    other[0, :] = 99
+    assert not vf.verify(keys, other, proof)
+
+
+def _lookup_circuit(n_rows=64, bad=False):
+    """f-column values must all appear in a fixed table (logUp bus)."""
+    c = pk.Circuit(n_rows, name="lookup")
+    table = c.add_fixed("table", np.arange(0, 2 * n_rows, 2))  # even numbers
+    f = c.add_advice("f")
+    sel = c.add_fixed("sel", np.ones(n_rows))
+    c.add_bus("f_in_table", [f], [table], m_f=sel)
+    advice = np.zeros((c.n_advice, n_rows), np.uint32)
+    rng = np.random.default_rng(5)
+    advice[0] = rng.integers(0, n_rows, size=n_rows) * 2
+    if bad:
+        advice[0, 17] = 3  # odd: not in table
+    return c, advice
+
+
+def test_lookup_bus_completeness():
+    c, advice = _lookup_circuit()
+    keys = pv.keygen(c, CFG)
+    proof = pv.prove(keys, advice, np.zeros((0, c.n_rows), np.uint32))
+    assert vf.verify(keys, np.zeros((0, c.n_rows), np.uint32), proof)
+
+
+def test_lookup_bus_soundness():
+    c, advice = _lookup_circuit(bad=True)
+    keys = pv.keygen(c, CFG)
+    proof = pv.prove(keys, advice, np.zeros((0, c.n_rows), np.uint32))
+    assert not vf.verify(keys, np.zeros((0, c.n_rows), np.uint32), proof)
+
+
+def _permutation_circuit(n_rows=64, mode="gp", bad=False):
+    """Paper Eq. (1)+(2): two column pairs must be multiset-equal."""
+    c = pk.Circuit(n_rows, name="perm")
+    a1 = c.add_advice("a1")
+    a2 = c.add_advice("a2")
+    b1 = c.add_advice("b1")
+    b2 = c.add_advice("b2")
+    if mode == "gp":
+        c.add_grand_product("perm", [a1, a2], [b1, b2])
+    else:
+        one = c.add_fixed("one", np.ones(n_rows))
+        c.add_multiset_equal("perm", [a1, a2], one, [b1, b2], one)
+    rng = np.random.default_rng(7)
+    advice = np.zeros((c.n_advice, n_rows), np.uint32)
+    pairs = rng.integers(0, F.P, size=(n_rows, 2)).astype(np.uint32)
+    perm = rng.permutation(n_rows)
+    advice[0], advice[1] = pairs[:, 0], pairs[:, 1]
+    advice[2], advice[3] = pairs[perm, 0], pairs[perm, 1]
+    if bad:
+        advice[2, 5] = (int(advice[2, 5]) + 1) % F.P
+    return c, advice
+
+
+@pytest.mark.parametrize("mode", ["gp", "bus"])
+def test_permutation_argument_completeness(mode):
+    c, advice = _permutation_circuit(mode=mode)
+    keys = pv.keygen(c, CFG)
+    inst = np.zeros((0, c.n_rows), np.uint32)
+    proof = pv.prove(keys, advice, inst)
+    assert vf.verify(keys, inst, proof)
+
+
+@pytest.mark.parametrize("mode", ["gp", "bus"])
+def test_permutation_argument_soundness(mode):
+    c, advice = _permutation_circuit(mode=mode, bad=True)
+    keys = pv.keygen(c, CFG)
+    inst = np.zeros((0, c.n_rows), np.uint32)
+    proof = pv.prove(keys, advice, inst)
+    assert not vf.verify(keys, inst, proof)
+
+
+def test_range_check():
+    n_rows = 256
+    c = pk.Circuit(n_rows, name="range")
+    v = c.add_advice("v")
+    limbs, lb = c.add_range_check("v_range", v, bits=16)
+    keys = pv.keygen(c, CFG)
+    advice = np.zeros((c.n_advice, n_rows), np.uint32)
+    rng = np.random.default_rng(11)
+    vals = rng.integers(0, 2 ** 16, size=n_rows)
+    advice[0] = vals
+    pk.fill_range_limbs(advice, limbs, lb, vals)
+    inst = np.zeros((0, n_rows), np.uint32)
+    proof = pv.prove(keys, advice, inst)
+    assert vf.verify(keys, inst, proof)
+    # out-of-range value with forged limbs must fail
+    advice2 = advice.copy()
+    advice2[0, 3] = F.P - 5  # "negative" value, not representable in 16 bits
+    proof2 = pv.prove(keys, advice2, inst)
+    assert not vf.verify(keys, inst, proof2)

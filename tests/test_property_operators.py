@@ -1,0 +1,77 @@
+"""Hypothesis property tests: operator circuits are complete (accept honest
+witnesses) on random graphs, and the engine oracles agree with brute force.
+Uses check_constraints (exact, no proof) so many cases stay fast."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.operators import expansion, set_expansion, sssp
+from repro.core.operators.common import check_constraints
+from repro.graphdb import engine
+from repro.graphdb.storage import EdgeTable, pad_pow2
+
+
+@st.composite
+def small_graph(draw):
+    n_nodes = draw(st.integers(4, 12))
+    m = draw(st.integers(3, 24))
+    src = draw(st.lists(st.integers(1, n_nodes), min_size=m, max_size=m))
+    dst = draw(st.lists(st.integers(1, n_nodes), min_size=m, max_size=m))
+    return (np.asarray(src, np.int64), np.asarray(dst, np.int64), n_nodes)
+
+
+@given(small_graph(), st.integers(1, 12))
+@settings(max_examples=8, deadline=None)
+def test_expansion_complete_on_random_graphs(g, src_id):
+    src, dst, n_nodes = g
+    src_id = (src_id % n_nodes) + 1
+    op = expansion.build_edge_list(pad_pow2(len(src)), len(src))
+    advice, inst, data = expansion.witness_edge_list(op, src, dst, src_id)
+    assert check_constraints(op, advice, inst, data) == []
+    out_sel = inst[op.handles["out_sel"].index] == 1
+    got = sorted(inst[op.handles["C_t"].index][out_sel].tolist())
+    want = sorted(dst[src == src_id].tolist())
+    assert got == want
+
+
+@given(small_graph(), st.integers(1, 3))
+@settings(max_examples=8, deadline=None)
+def test_set_expansion_complete_on_random_graphs(g, k):
+    src, dst, n_nodes = g
+    ids = np.unique(src)[:k]
+    out_count = int(np.isin(src, ids).sum())
+    n_rows = pad_pow2(max(len(src), len(ids) + 2, out_count))
+    op = set_expansion.build(n_rows, len(src), len(ids))
+    advice, inst, data = set_expansion.witness(op, src, dst, ids)
+    assert check_constraints(op, advice, inst, data) == []
+    out_sel = inst[op.handles["out_sel"].index] == 1
+    got = sorted(zip(inst[op.handles["C_s"].index][out_sel].tolist(),
+                     inst[op.handles["C_t"].index][out_sel].tolist()))
+    mask = np.isin(src, ids)
+    want = sorted(zip(src[mask].tolist(), dst[mask].tolist()))
+    assert got == want
+
+
+@given(small_graph())
+@settings(max_examples=6, deadline=None)
+def test_sssp_complete_on_random_graphs(g):
+    src, dst, n_nodes = g
+    node_ids = np.arange(1, n_nodes + 1, dtype=np.int64)
+    t = EdgeTable(src, dst)
+    s = int(node_ids[0])
+    dist, pred, pd = engine.bfs_sssp(t, node_ids, s, undirected=True)
+    # oracle: Floyd-Warshall-ish brute force on the undirected graph
+    INF = n_nodes + 1
+    d = np.full((n_nodes + 1,), INF)
+    d[s] = 0
+    for _ in range(n_nodes):
+        for a, b in zip(src, dst):
+            if d[a] + 1 < d[b]:
+                d[b] = d[a] + 1
+            if d[b] + 1 < d[a]:
+                d[a] = d[b] + 1
+    np.testing.assert_array_equal(dist, d[1:])
+    n_rows = pad_pow2(max(len(src), n_nodes))
+    op = sssp.build(n_rows, len(src), n_nodes, undirected=True)
+    advice, inst, data = sssp.witness(op, src, dst, node_ids, s, dist, pred,
+                                      pd)
+    assert check_constraints(op, advice, inst, data) == []

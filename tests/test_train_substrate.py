@@ -1,0 +1,170 @@
+"""Training substrate: optimizer descends, grad-accum equivalence, int8
+compression w/ error feedback, checkpoint save/restore/elastic, deterministic
+data resume, straggler/failure policy."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import lm
+from repro.train import checkpoint, compression, data, fault
+from repro.train import optimizer as opt
+from repro.train import train_step as ts
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("internlm2-1.8b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _batch(cfg, dcfg=None, step=0):
+    dc = data.DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8)
+    stream = data.TokenStream(dc)
+    stream.step = step
+    return next(stream)
+
+
+def test_loss_decreases(tiny):
+    cfg, params = tiny
+    ocfg = opt.AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=60)
+    step_fn = jax.jit(ts.make_train_step(cfg, ocfg))
+    state = opt.init_state(params)
+    err = compression.init_error(params)
+    dc = data.DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=1)
+    stream = data.TokenStream(dc)
+    losses = []
+    for _ in range(30):
+        params, state, err, m = step_fn(params, state, err, next(stream))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::6]
+
+
+def test_grad_accum_equivalence(tiny):
+    cfg, params = tiny
+    ocfg = opt.AdamWConfig(lr=1e-3)
+    batch = _batch(cfg)
+    s1 = jax.jit(ts.make_train_step(cfg, ocfg, grad_accum=1))
+    s4 = jax.jit(ts.make_train_step(cfg, ocfg, grad_accum=4))
+    st = opt.init_state(params)
+    err = compression.init_error(params)
+    p1, *_ , m1 = s1(params, st, err, batch)
+    p4, *_ , m4 = s4(params, st, err, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+    l1, l4 = jax.tree.leaves(p1), jax.tree.leaves(p4)
+    for a, b in zip(l1, l4):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-3, atol=5e-5)
+
+
+def test_compression_error_feedback():
+    """EF compensates quantization: the running sum of compressed grads
+    tracks the true sum much better than memoryless quantization."""
+    rng = np.random.default_rng(0)
+    g_true = [jnp.asarray(rng.normal(size=(64,)) * 0.01, jnp.float32)
+              for _ in range(50)]
+    err = jnp.zeros((64,), jnp.float32)
+    acc_ef = jnp.zeros((64,))
+    acc_nq = jnp.zeros((64,))
+    for g in g_true:
+        (dq,), (err,) = jax.tree.flatten(
+            compression.compress((g,), (err,)))[0][0:1], \
+            (compression.compress((g,), (err,))[1][0],)
+        acc_ef = acc_ef + dq
+        acc_nq = acc_nq + g
+    true_sum = sum(g_true)
+    # EF accumulates to within one quantization step of the truth
+    assert float(jnp.max(jnp.abs(acc_ef - true_sum))) < 2e-3
+
+
+def test_compressed_psum_matches_mean():
+    """shard_map int8 psum-with-EF approximates the plain pmean."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    devs = jax.devices()
+    mesh = Mesh(np.asarray(devs[:1]), ("data",))
+    g = jnp.linspace(-1, 1, 32).astype(jnp.float32)
+    err = jnp.zeros_like(g)
+
+    def f(g, e):
+        out, ne = compression.compressed_psum((g,), (e,), "data")
+        return out[0], ne[0]
+
+    fm = shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()))
+    out, ne = fm(g, err)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g), atol=2e-2)
+
+
+def test_checkpoint_roundtrip_and_elastic(tiny, tmp_path):
+    cfg, params = tiny
+    state = opt.init_state(params)
+    path = str(tmp_path / "ckpt")
+    os.makedirs(path, exist_ok=True)
+    checkpoint.save(path, 7, params, state, extra={"data_step": 7})
+    checkpoint.save(path, 9, params, state, extra={"data_step": 9})
+    assert checkpoint.latest_step(path) == 9
+    p2, s2, step, extra = checkpoint.restore(path, 9, params, state)
+    assert step == 9 and extra["data_step"] == 9
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # elastic: restore with explicit shardings onto the current (1-dev) mesh
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
+    p3, *_ = checkpoint.restore(path, 9, params, state, shardings)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p3)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_last(tiny, tmp_path):
+    cfg, params = tiny
+    state = opt.init_state(params)
+    path = str(tmp_path / "ckpt")
+    os.makedirs(path, exist_ok=True)
+    for s in range(6):
+        checkpoint.save(path, s, params, state, keep_last=2)
+    kept = sorted(d for d in os.listdir(path) if d.startswith("step_"))
+    assert kept == ["step_4", "step_5"]
+
+
+def test_data_deterministic_resume():
+    dc = data.DataConfig(vocab=100, seq_len=16, global_batch=4, seed=5)
+    s1 = data.TokenStream(dc)
+    batches = [next(s1) for _ in range(5)]
+    s2 = data.TokenStream(dc)
+    s2.load_state_dict({"step": 3})
+    np.testing.assert_array_equal(np.asarray(next(s2)["tokens"]),
+                                  np.asarray(batches[3]["tokens"]))
+
+
+def test_fault_controller_detects_dead_and_stragglers():
+    t = [0.0]
+    clock = lambda: t[0]
+    fc = fault.FaultController(
+        ["n0", "n1", "n2", "n3"],
+        fault.FaultConfig(heartbeat_interval_s=1.0, dead_after=3,
+                          straggle_factor=1.5, straggle_strikes=2),
+        clock=clock)
+    # normal beats
+    for step in range(3):
+        t[0] += 1.0
+        for n in ["n0", "n1", "n2"]:
+            fc.heartbeat(n, 1.0)
+        fc.heartbeat("n3", 1.0 if step == 0 else 2.5)  # n3 straggles
+        out = fc.sweep()
+    assert "n3" in out["evict"] or any("n3" in e["evict"] for e in fc.events)
+    # n1 stops beating entirely
+    for _ in range(4):
+        t[0] += 1.0
+        for n in ["n0", "n2"]:
+            fc.heartbeat(n, 1.0)
+        out = fc.sweep()
+    assert "n1" not in fc.surviving()
+    assert fc.surviving() == ["n0", "n2"]
+    assert fault.elastic_mesh_shape(len(fc.surviving()) * 8, 8) == (2, 8)
