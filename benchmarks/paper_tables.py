@@ -5,7 +5,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import prover as pv
-from repro.core import planner
+from repro.core.session import ZKGraphSession
 from repro.core.operators import birc, expansion, set_expansion, sssp
 from repro.graphdb import engine
 from repro.graphdb.storage import expand_bidirectional, pad_pow2
@@ -94,6 +94,7 @@ def _fixed_circuit(n):
 # ---------------------------------------------------------------------------
 def table3(rows: int = 1024):
     db = db_with_rows(rows)
+    session = ZKGraphSession(db, BENCH_CFG)
     params = {"IS3": dict(person=3), "IS4": dict(message=(1 << 20) + 5),
               "IS5": dict(message=(1 << 20) + 7),
               "IC1": dict(person=2, firstName=int(
@@ -101,13 +102,35 @@ def table3(rows: int = 1024):
               "IC2": dict(person=4, k=10), "IC8": dict(person=5, k=10),
               "IC13": dict(person1=1, person2=9)}
     for q, p in params.items():
-        run = planner.plan_query(db, q, p)
+        run = session.run_query(q, p)
 
         def keygen_all():
             for st in run.steps:
-                st.op.keygen(BENCH_CFG)
+                st.op.keygen(BENCH_CFG)     # raw keygen, no session cache
         _, t_us = timed(keygen_all)
         yield (f"table3/keygen/{q}", t_us, f"steps={len(run.steps)}")
+
+
+# ---------------------------------------------------------------------------
+# keygen cache: cold vs warm session (the ZKGraphSession hot-path win)
+# ---------------------------------------------------------------------------
+def cachewin(rows: int = 1024):
+    """Before/after for the session keygen cache on repeated queries: a warm
+    session skips every per-step keygen (fixed-column intt + LDE + device
+    transfer), which the seed paid on each prove_query call."""
+    db = db_with_rows(rows)
+    p = dict(person=3)
+    ZKGraphSession(db, BENCH_CFG).prove("IS3", p)       # warm jit caches
+    session = ZKGraphSession(db, BENCH_CFG)
+    _, cold_us = timed(session.prove, "IS3", p)         # cold keygen cache
+    after_cold = session.cache.stats()
+    _, warm_us = timed(session.prove, "IS3", p)         # warm keygen cache
+    after_warm = session.cache.stats()
+    yield ("cachewin/IS3/cold_session", cold_us,
+           f"keygens={after_cold['misses']}")
+    yield ("cachewin/IS3/warm_session", warm_us,
+           f"keygen_hits={after_warm['hits']};"
+           f"speedup={cold_us / warm_us:.2f}x")
 
 
 # ---------------------------------------------------------------------------
@@ -215,19 +238,20 @@ def table4(rows: int = 1024):
 # ---------------------------------------------------------------------------
 def fig7(rows: int = 1024):
     db = db_with_rows(rows)
+    session = ZKGraphSession(db, BENCH_CFG)
     for q, p in (("IC1", dict(person=2, firstName=int(
             db.node_props["person"]["firstName"][0]))),
             ("IC9", dict(person=6, k=10))):
-        run = planner.plan_query(db, q, p)
-        proofs = planner.prove_query(run, BENCH_CFG)
+        bundle = session.prove(q, p)
         total = 0.0
-        for st, pr in zip(run.steps, proofs):
-            t_us = pr.timings["total"] * 1e6
+        for rec in bundle.steps:
+            t_us = rec.proof.timings["total"] * 1e6
             total += t_us
-            yield (f"fig7/{q}/{st.op.name}", t_us,
-                   ";".join(f"{k}={v:.2f}s" for k, v in pr.timings.items()
+            yield (f"fig7/{q}/{rec.kind}", t_us,
+                   ";".join(f"{k}={v:.2f}s"
+                            for k, v in rec.proof.timings.items()
                             if k != "total"))
-        yield (f"fig7/{q}/TOTAL", total, f"steps={len(run.steps)}")
+        yield (f"fig7/{q}/TOTAL", total, f"steps={len(bundle.steps)}")
 
 
 # ---------------------------------------------------------------------------
@@ -236,21 +260,20 @@ def fig7(rows: int = 1024):
 def fig8():
     for rows in (1024, 2048, 4096):
         db = db_with_rows(rows)
+        session = ZKGraphSession(db, BENCH_CFG)
+        verifier = ZKGraphSession.verifier(session.commitments, BENCH_CFG)
         for q, p in (("IS3", dict(person=3)),
                      ("IS5", dict(message=(1 << 20) + 7)),
                      ("IC13", dict(person1=1, person2=9))):
-            run = planner.plan_query(db, q, p)
-            proofs = planner.prove_query(run, BENCH_CFG)
-            commitments = planner.publish_commitments(db, BENCH_CFG)
-            prove_us = sum(pr.timings["total"] for pr in proofs) * 1e6
-            ok, verify_us = timed(planner.verify_query, run, proofs,
-                                  commitments, BENCH_CFG)
+            bundle = session.prove(q, p)
+            prove_us = bundle.prove_seconds() * 1e6
+            ok, verify_us = timed(verifier.verify, bundle)
             assert ok
-            size = sum(pr.size_fields() for pr in proofs)
             yield (f"fig8/{q}/rows{rows}/prove", prove_us,
-                   f"proof_fields={size}")
+                   f"proof_fields={bundle.size_fields()}")
             yield (f"fig8/{q}/rows{rows}/verify", verify_us, "")
 
 
 ALL = {"table1": table1, "table2": table2, "table3": table3, "fig6a": fig6a,
-       "fig6b": fig6b, "table4": table4, "fig7": fig7, "fig8": fig8}
+       "fig6b": fig6b, "table4": table4, "fig7": fig7, "fig8": fig8,
+       "cachewin": cachewin}

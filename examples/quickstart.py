@@ -1,9 +1,11 @@
-"""Quickstart: prove one single-source expansion over a private graph.
+"""Quickstart: prove one LDBC query over a private graph via the session API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Walks the paper's full workflow (§III-C): the owner commits the dataset, the
-verifier submits a query, the owner proves, the verifier checks — then a
+Walks the paper's full workflow (§III-C) through the three layers
+(ir -> operator registry -> session, see docs/architecture.md): the owner
+commits the dataset, proves a query as a chained bundle of operator proofs,
+the verifier — holding only the published commitments — checks it; then a
 tampered result is shown to be rejected.
 """
 import sys
@@ -12,51 +14,52 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.core import prover as pv
-from repro.core import planner
-from repro.core.operators import expansion
+from repro.core.operators import registry
+from repro.core.session import ProofBundle, ZKGraphSession
 from repro.graphdb import engine, ldbc
-from repro.graphdb.storage import pad_pow2
 
 CFG = pv.ProverConfig(blowup=4, n_queries=16, fri_final_size=16)
 
 
-def main():
-    # ---- data owner: private social graph + published commitment ---------
-    db = ldbc.generate(n_knows=200, n_persons=32, seed=7)
+def main(n_knows=200, n_persons=32, cfg=CFG, seed=7):
+    # ---- data owner: private social graph + published commitments ---------
+    db = ldbc.generate(n_knows=n_knows, n_persons=n_persons, seed=seed)
     t = db.tables["person_knows_person"]
     print(f"private graph: {db.n_nodes} persons, {len(t)} friendships")
 
-    n_rows = pad_pow2(len(t))
-    op = expansion.build_edge_list(n_rows, len(t)).keygen(CFG)
-    cols = np.stack([t.src, t.dst])
-    published_root = planner.data_root(cols, n_rows, CFG)
-    print(f"published dataset commitment: {published_root[:4]}...")
+    owner = ZKGraphSession(db, cfg)
+    commitments = owner.commitments
+    print(f"published {len(commitments)} dataset commitments")
 
     # ---- verifier asks: who are the friends of this person? ---------------
-    src_id = int(t.src[0])   # guaranteed to have outgoing edges
-    advice, instance, data = expansion.witness_edge_list(op, t.src, t.dst,
-                                                         src_id)
-    proof = op.prove(advice, instance, data)
-    out_sel = instance[op.handles["out_sel"].index] == 1
-    friends = instance[op.handles["C_t"].index][out_sel]
-    print(f"claimed friends of {src_id}: {sorted(friends.tolist())}")
-    print(f"proof size: {proof.size_fields()} field elements "
-          f"({proof.size_fields() * 4 / 1024:.1f} KB), "
-          f"prover {proof.timings['total']:.1f}s")
+    src_id = int(t.src[0])   # guaranteed to have edges
+    bundle = owner.prove("IS3", dict(person=src_id))
+    friends = bundle.result["friends"]
+    print(f"claimed friends of {src_id} (newest first): {friends.tolist()}")
+    print(f"chain: {len(bundle.steps)} operator proofs, "
+          f"{bundle.size_fields()} field elements "
+          f"({bundle.size_fields() * 4 / 1024:.1f} KB), "
+          f"prover {bundle.prove_seconds():.1f}s")
 
-    ok = op.verify(instance, proof, expected_data_root=published_root)
+    # ---- verifier: only the commitments + the (serialized) bundle ---------
+    verifier = ZKGraphSession.verifier(commitments, cfg)
+    received = ProofBundle.from_bytes(bundle.to_bytes())
+    ok = verifier.verify(received)
     print(f"verifier accepts: {ok}")
     assert ok
-    want, _ = engine.expand(t, src_id)
+    want, *_ = engine.expand_undirected(t, src_id)
     assert sorted(friends.tolist()) == sorted(want.tolist())
 
     # ---- a cheating prover: claim one extra 'friend' ----------------------
-    bad = instance.copy()
-    row = int(np.nonzero(out_sel)[0][0])
-    bad[op.handles["C_t"].index, row] = 999
-    bad_proof = op.prove(advice, bad, data)
-    print(f"tampered result rejected: {not op.verify(bad, bad_proof, published_root)}")
-    assert not op.verify(bad, bad_proof, published_root)
+    bad = ProofBundle.from_bytes(bundle.to_bytes())
+    rec = bad.steps[0]
+    op = registry.build_operator(rec.kind, rec.shape)
+    sel = np.nonzero(rec.instance[op.handles["out_sel"].index] == 1)[0]
+    row = int(sel[0]) if len(sel) else 0
+    rec.instance[op.handles["C_t"].index, row] = 999
+    rejected = not verifier.verify(bad)
+    print(f"tampered chain rejected: {rejected}")
+    assert rejected
     print("quickstart OK")
 
 

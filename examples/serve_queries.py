@@ -4,6 +4,8 @@ mid-run and restart: it resumes at the first unproven query.
 
     PYTHONPATH=src python examples/serve_queries.py [--queries 8] [--restart-demo]
 
+One ZKGraphSession serves the whole queue, so its keygen cache turns repeated
+query shapes into cache hits — the steady-state cost a proving service pays.
 At production scale each query's proof is independent, so the batch fans out
 across the ('pod','data') mesh axes — this driver is the single-host cell of
 that fleet (see launch/dryrun.py for the multi-pod lowering of the LM cells).
@@ -19,7 +21,7 @@ import time
 import numpy as np
 
 from repro.core import prover as pv
-from repro.core import planner
+from repro.core.session import ZKGraphSession
 from repro.graphdb import ldbc
 from repro.train.fault import FaultController, FaultConfig
 
@@ -43,18 +45,19 @@ def query_queue(db, n):
     return qs
 
 
-def main():
+def main(argv=None, n_knows=128, n_persons=24, cfg=CFG):
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", type=int, default=6)
     ap.add_argument("--reset", action="store_true")
     ap.add_argument("--restart-demo", action="store_true",
                     help="simulate a crash after 2 queries, then resume")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.reset and os.path.exists(STATE):
         os.remove(STATE)
 
-    db = ldbc.generate(n_knows=128, n_persons=24, seed=3)
-    commitments = planner.publish_commitments(db, CFG)
+    db = ldbc.generate(n_knows=n_knows, n_persons=n_persons, seed=3)
+    session = ZKGraphSession(db, cfg)
+    verifier = ZKGraphSession.verifier(session.commitments, cfg)
     queue = query_queue(db, args.queries)
     done = {}
     if os.path.exists(STATE):
@@ -68,25 +71,27 @@ def main():
         if key in done:
             continue
         ts = time.time()
-        run = planner.plan_query(db, kind, params)
-        proofs = planner.prove_query(run, CFG)
-        ok = planner.verify_query(run, proofs, commitments, CFG)
+        bundle = session.prove(kind, params)
+        ok = verifier.verify(bundle)
         assert ok, f"{key} failed verification"
         dt = time.time() - ts
         ctrl.heartbeat("prover0", dt)
         ctrl.sweep()
-        done[key] = dict(kind=kind, params=params, steps=len(run.steps),
+        done[key] = dict(kind=kind, params=params, steps=len(bundle.steps),
                          prove_s=round(dt, 2),
-                         proof_fields=sum(p.size_fields() for p in proofs))
+                         proof_fields=bundle.size_fields())
         json.dump(done, open(STATE, "w"))   # checkpoint after each query
-        print(f"{key} {kind:5s} {len(run.steps)} ops proven+verified "
+        print(f"{key} {kind:5s} {len(bundle.steps)} ops proven+verified "
               f"in {dt:.1f}s")
         if args.restart_demo and i == 1:
             print("-- simulated crash (state checkpointed); rerun to resume --")
             return
     wall = time.time() - t0
-    print(f"served {len(done)} verified queries, batch wall {wall:.1f}s")
-    os.remove(STATE)
+    stats = session.cache.stats()
+    print(f"served {len(done)} verified queries, batch wall {wall:.1f}s; "
+          f"keygen cache: {stats['misses']} keygens, {stats['hits']} reuses")
+    if os.path.exists(STATE):
+        os.remove(STATE)
 
 
 if __name__ == "__main__":

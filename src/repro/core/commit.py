@@ -1,0 +1,58 @@
+"""Dataset commitments: the owner's one-time publication (paper §III-C).
+
+``data_root`` must match exactly what ``prover.prove`` computes for the data
+tree of a circuit with ``n_rows`` rows; ``publish_commitments`` produces the
+root of every registered base table at its canonical circuit size.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import field as F
+from . import merkle
+from . import prover as pv
+from ..graphdb import tables
+from ..graphdb.storage import GraphDB, pad_pow2
+
+
+def data_root(data_np: np.ndarray, n_rows: int,
+              cfg: pv.ProverConfig) -> np.ndarray:
+    """Commitment to a data-column matrix at a given circuit size."""
+    raw = np.asarray(data_np, np.int64) % F.P
+    padded = np.zeros((raw.shape[0], n_rows), np.int64)
+    padded[:, : raw.shape[1]] = raw
+    data = jnp.asarray(padded).astype(jnp.uint32)
+    lde = pv._lde(data, cfg.blowup, cfg.shift)
+    return np.asarray(merkle.commit(lde.T).root)
+
+
+def table_sizes(db: GraphDB, n_cols: int) -> list:
+    """Circuit sizes a base table of width ``n_cols`` must be published at.
+
+    Operators may size their circuit above the table width: set-based
+    expansion needs pad_pow2(max(m, |S|+2, out_count)) rows, where the
+    output count is at most 2m (bidirectional) and the start set is at most
+    the node universe.  Publishing every power of two from pad_pow2(m) up to
+    max(pad_pow2(2m), pad_pow2(n_nodes + 2)) covers every size an honest
+    plan can request — the verifier never recomputes a base-table root.
+    """
+    lo = pad_pow2(n_cols)
+    hi = max(pad_pow2(2 * n_cols), pad_pow2(db.n_nodes + 2), lo)
+    sizes = []
+    n = lo
+    while n <= hi:
+        sizes.append(n)
+        n *= 2
+    return sizes
+
+
+def publish_commitments(db: GraphDB, cfg: pv.ProverConfig = None) -> dict:
+    """Owner-side: dataset roots per (table descriptor, circuit size)."""
+    cfg = cfg or pv.ProverConfig()
+    roots = {}
+    for desc in tables.all_table_descs():
+        cols = tables.base_table_cols(db, desc)
+        for n_rows in table_sizes(db, cols.shape[1]):
+            roots[(desc, n_rows)] = data_root(cols, n_rows, cfg)
+    return roots

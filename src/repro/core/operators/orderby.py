@@ -22,6 +22,7 @@ def instance_rot(col):
 
 
 def build(n_rows: int, m_in: int, k: int, descending: bool = True) -> Operator:
+    assert m_in < n_rows, "need the boundary row just after the input region"
     c = Circuit(n_rows, name="orderby")
     Val = c.add_data("Val")          # input values (from the previous operator)
     Pay = c.add_data("Payload")      # carried payload (e.g. node id)

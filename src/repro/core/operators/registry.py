@@ -1,0 +1,337 @@
+"""Operator registry: plan-node types -> circuit adapters.
+
+Each adapter knows how to lower one IR node kind to a primitive operator
+circuit:
+
+* ``shape(db, node, env)``   — serializable build kwargs (circuit geometry)
+* ``build(shape)``           — construct the circuit (no data needed, so the
+                               *verifier* can rebuild it from a proof bundle)
+* ``witness(db, op, node, env)`` — run the untrusted engine + fill columns
+* ``extract_outputs(op, instance)`` — public outputs for chaining, read from
+                               the instance only (so the verifier can extract
+                               them from a *verified* proof)
+* ``chained_cols(node, env)`` — recompute a chained intermediate table from
+                               earlier outputs (prover and verifier must
+                               agree bit-for-bit; this is the chain glue)
+
+Registering a new operator is ``register(MyAdapter())`` — the planner,
+session, and verifier pick it up without modification.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ...graphdb import engine, tables
+from ...graphdb.storage import pad_pow2
+from .. import field as F
+from .. import ir
+from . import expansion, orderby, set_expansion, sssp
+from .common import Operator
+
+_BY_KIND: dict = {}    # node type -> adapter instance
+_BY_NAME: dict = {}    # adapter name -> adapter instance
+
+
+def register(adapter):
+    """Register an adapter for its node type. Later registrations for the
+    same node type override earlier ones (so projects can swap circuits)."""
+    _BY_KIND[adapter.kind] = adapter
+    _BY_NAME[adapter.name] = adapter
+    return adapter
+
+
+def adapter_for(node):
+    try:
+        return _BY_KIND[type(node)]
+    except KeyError:
+        raise KeyError(f"no adapter registered for node type "
+                       f"{type(node).__name__}") from None
+
+
+def adapter_named(name: str):
+    try:
+        return _BY_NAME[name]
+    except KeyError:
+        raise KeyError(f"no adapter named {name!r}; "
+                       f"known: {sorted(_BY_NAME)}") from None
+
+
+def build_operator(name: str, shape: dict) -> Operator:
+    """Verifier-side circuit reconstruction from a bundle's step record."""
+    return adapter_named(name).build(shape)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+def _table_cols(db, table, env: ir.Env) -> np.ndarray:
+    # memoized per execution: shape() and witness() share the resolution
+    key = ("cols", table)
+    cols = env.memo.get(key)
+    if cols is None:
+        if isinstance(table, ir.BaseTable):
+            cols = tables.base_table_cols(db, table.desc)
+        elif isinstance(table, ir.Chained):
+            cols = table.resolve_cols(env)
+        else:
+            raise TypeError(f"unsupported table ref {table!r}")
+        env.memo[key] = cols
+    return cols
+
+
+def _desc_of(table) -> str:
+    return table.desc if isinstance(table, ir.BaseTable) else "chained"
+
+
+def _selected(op: Operator, instance, col: str) -> np.ndarray:
+    sel = instance[op.handles["out_sel"].index] == 1
+    return instance[op.handles[col].index][sel].astype(np.int64)
+
+
+class Adapter:
+    kind: type = None
+    name: str = ""
+
+    def data_desc(self, node) -> str:
+        return _desc_of(node.table)
+
+    def shape_flags(self, node) -> dict:
+        """The shape fields derivable from the plan node alone (no db, no
+        outputs). The verifier pins these against a bundle's declared shape
+        — a prover cannot flip semantic circuit flags (reverse, bidirectional,
+        …) on a base-table step. Geometry fields (n_rows, m_edges, n_nodes)
+        stay a documented gap until row counts are published."""
+        return {}
+
+    def check_instance(self, op: Operator, instance, node, env: ir.Env) -> bool:
+        """Verifier-side: the public inputs embedded in the instance must
+        equal the plan-resolved bindings — otherwise a prover could answer a
+        *different* query (other source id, other id set) than the one the
+        bundle claims in ``params``."""
+        return True
+
+    def chained_cols(self, node, env: ir.Env) -> np.ndarray:
+        assert isinstance(node.table, ir.Chained), \
+            f"{self.name} step is bound to a base table, not chained"
+        return _table_cols(None, node.table, env)   # shares the env memo
+
+
+def _col_equals(op: Operator, instance, handle: str, value: int) -> bool:
+    col = np.asarray(instance[op.handles[handle].index], np.int64)
+    return bool((col == int(value) % F.P).all())
+
+
+# ---------------------------------------------------------------------------
+# Expand (§IV-A edge-list) — also the base for NameFilter
+# ---------------------------------------------------------------------------
+class ExpandAdapter(Adapter):
+    kind = ir.Expand
+    name = "expand"
+
+    def _source(self, node, env):
+        return int(ir.resolve(node.source, env))
+
+    def _flags(self, node):
+        return node.with_prop, node.reverse
+
+    def shape_flags(self, node) -> dict:
+        with_prop, reverse = self._flags(node)
+        return dict(with_prop=with_prop, reverse=reverse)
+
+    def shape(self, db, node, env: ir.Env) -> dict:
+        cols = _table_cols(db, node.table, env)
+        return dict(n_rows=pad_pow2(cols.shape[1]), m_edges=int(cols.shape[1]),
+                    **self.shape_flags(node))
+
+    def build(self, shape: dict) -> Operator:
+        return expansion.build_edge_list(**shape)
+
+    def witness(self, db, op: Operator, node, env: ir.Env):
+        cols = _table_cols(db, node.table, env)
+        with_prop, _ = self._flags(node)
+        return expansion.witness_edge_list(
+            op, cols[0], cols[1], self._source(node, env),
+            cols[2] if with_prop else None)
+
+    def extract_outputs(self, op: Operator, instance) -> dict:
+        out = dict(src=_selected(op, instance, "C_s"),
+                   dst=_selected(op, instance, "C_t"))
+        if op.handles["with_prop"]:
+            out["prop"] = _selected(op, instance, "C_p")
+        return out
+
+    def check_instance(self, op, instance, node, env: ir.Env) -> bool:
+        return _col_equals(op, instance, "id_s", self._source(node, env))
+
+
+class NameFilterAdapter(ExpandAdapter):
+    """Attribute filter = reversed expansion over a chained (id, attr) table:
+    flag rows whose attr equals the public name, emit the matching ids."""
+    kind = ir.NameFilter
+    name = "name_filter"
+
+    def _source(self, node, env):
+        return int(ir.resolve(node.name, env))
+
+    def _flags(self, node):
+        return False, True     # reversed expansion, no property column
+
+
+# ---------------------------------------------------------------------------
+# SetExpand (§IV-B, integrated BiRC per §IV-D)
+# ---------------------------------------------------------------------------
+class SetExpandAdapter(Adapter):
+    kind = ir.SetExpand
+    name = "set_expand"
+
+    def _ids(self, db, node, env: ir.Env) -> np.ndarray:
+        key = ("ids", node)
+        ids = env.memo.get(key)
+        if ids is None:
+            ids = np.unique(np.asarray(ir.resolve(node.ids, env), np.int64))
+            if len(ids) == 0:
+                # the circuit needs a non-empty set; use the reserved public
+                # sentinel (never a valid id), so an empty start set expands
+                # to nothing — and the verifier re-derives it without the db
+                ids = np.asarray([set_expansion.EMPTY_SET_ID], np.int64)
+            else:
+                assert int(ids.max()) < set_expansion.EMPTY_SET_ID, \
+                    "ids collide with the reserved empty-set sentinel"
+            env.memo[key] = ids
+        return ids
+
+    def shape(self, db, node, env: ir.Env) -> dict:
+        cols = _table_cols(db, node.table, env)
+        src, dst = cols[0], cols[1]
+        ids = self._ids(db, node, env)
+        # output rows can exceed the edge region (bidirectional doubles
+        # matches), so size the circuit to the actual output count
+        out_count = int(np.isin(src, ids).sum())
+        if node.bidirectional:
+            out_count += int(np.isin(dst, ids).sum())
+        n_rows = pad_pow2(max(len(src), len(ids) + 2, out_count))
+        return dict(n_rows=n_rows, m_edges=int(len(src)),
+                    set_size=int(len(ids)), **self.shape_flags(node))
+
+    def shape_flags(self, node) -> dict:
+        return dict(bidirectional=node.bidirectional)
+
+    def build(self, shape: dict) -> Operator:
+        return set_expansion.build(**shape)
+
+    def witness(self, db, op: Operator, node, env: ir.Env):
+        cols = _table_cols(db, node.table, env)
+        return set_expansion.witness(op, cols[0], cols[1],
+                                     self._ids(db, node, env))
+
+    def extract_outputs(self, op: Operator, instance) -> dict:
+        return dict(src=_selected(op, instance, "C_s"),
+                    dst=_selected(op, instance, "C_t"))
+
+    def check_instance(self, op, instance, node, env: ir.Env) -> bool:
+        ids = self._ids(None, node, env)    # db-free (public bindings only)
+        s_ext = np.concatenate([[0], np.sort(ids),
+                                [set_expansion.ID_MAX]]).astype(np.int64)
+        col = np.asarray(instance[op.handles["IDs"].index], np.int64)
+        want = np.zeros(op.circuit.n_rows, np.int64)
+        if len(s_ext) > len(want):
+            return False
+        want[: len(s_ext)] = s_ext
+        return bool((col == want).all())
+
+
+# ---------------------------------------------------------------------------
+# OrderBy (§IV-E) — always chained: its table is earlier nodes' outputs
+# ---------------------------------------------------------------------------
+class OrderByAdapter(Adapter):
+    kind = ir.OrderBy
+    name = "orderby"
+
+    def _vals_pay(self, node, env: ir.Env):
+        vals = np.asarray(ir.resolve(node.values, env), np.int64)
+        pay = np.asarray(ir.resolve(node.payload, env), np.int64)
+        if len(vals) == 0:
+            vals, pay = np.asarray([0]), np.asarray([0])
+        return vals, pay
+
+    def data_desc(self, node) -> str:
+        return "chained"
+
+    def chained_cols(self, node, env: ir.Env) -> np.ndarray:
+        vals, pay = self._vals_pay(node, env)
+        return np.stack([vals, pay])
+
+    def shape(self, db, node, env: ir.Env) -> dict:
+        vals, _ = self._vals_pay(node, env)
+        k = int(ir.resolve(node.k, env))
+        # +1: the circuit needs the boundary row just after the input region
+        return dict(n_rows=pad_pow2(max(len(vals) + 1, 2)),
+                    m_in=int(len(vals)), k=min(k, len(vals)),
+                    **self.shape_flags(node))
+
+    def shape_flags(self, node) -> dict:
+        return dict(descending=node.descending)
+
+    def build(self, shape: dict) -> Operator:
+        return orderby.build(**shape)
+
+    def witness(self, db, op: Operator, node, env: ir.Env):
+        vals, pay = self._vals_pay(node, env)
+        return orderby.witness(op, vals, pay)
+
+    def extract_outputs(self, op: Operator, instance) -> dict:
+        return dict(vals=_selected(op, instance, "O_val"),
+                    pay=_selected(op, instance, "O_pay"))
+
+
+# ---------------------------------------------------------------------------
+# SSSP (§IV-C, integrated BiRC)
+# ---------------------------------------------------------------------------
+class SSSPAdapter(Adapter):
+    kind = ir.SSSP
+    name = "sssp"
+
+    def shape(self, db, node, env: ir.Env) -> dict:
+        cols = _table_cols(db, node.table, env)
+        t = db.tables[node.edge_table]
+        return dict(n_rows=pad_pow2(cols.shape[1]), m_edges=len(t),
+                    n_nodes=db.n_nodes, **self.shape_flags(node))
+
+    def shape_flags(self, node) -> dict:
+        return dict(undirected=True, with_target=node.target is not None)
+
+    def build(self, shape: dict) -> Operator:
+        return sssp.build(**shape)
+
+    def witness(self, db, op: Operator, node, env: ir.Env):
+        t = db.tables[node.edge_table]
+        id_s = int(ir.resolve(node.source, env))
+        id_t = None if node.target is None else int(ir.resolve(node.target, env))
+        dist, pred, pd = engine.bfs_sssp(t, db.node_ids, id_s, True)
+        return sssp.witness(op, t.src, t.dst, db.node_ids, id_s, dist, pred,
+                            pd, id_t=id_t)
+
+    def extract_outputs(self, op: Operator, instance) -> dict:
+        h = op.handles
+        out = dict(distances=np.asarray(
+            instance[h["D"].index][: h["n_nodes"]], np.int64))
+        if h["id_t"] is not None:
+            d = int(instance[h["d_t"].index][0])
+            out.update(dist=d, distance=d if d <= h["n_nodes"] else -1)
+        return out
+
+    def check_instance(self, op, instance, node, env: ir.Env) -> bool:
+        if not _col_equals(op, instance, "id_s",
+                           int(ir.resolve(node.source, env))):
+            return False
+        if node.target is not None:
+            return _col_equals(op, instance, "id_t",
+                               int(ir.resolve(node.target, env)))
+        return True
+
+
+register(ExpandAdapter())
+register(NameFilterAdapter())
+register(SetExpandAdapter())
+register(OrderByAdapter())
+register(SSSPAdapter())

@@ -17,8 +17,9 @@ from .. import field as F
 from ..plonkish import Circuit, Const, fill_range_limbs
 from .common import Operator, eq_flag_gadget, fill_eq_flag, pad_col, region_selector
 
-SENTINEL_BITS = 24  # ids live in [1, 2^24-2]; 0 / 2^24-1 are the paper's dummies
-ID_MAX = (1 << SENTINEL_BITS) - 1
+SENTINEL_BITS = 24  # ids live in [1, 2^24-3]; 0 / 2^24-1 are the paper's
+ID_MAX = (1 << SENTINEL_BITS) - 1   # dummies, and 2^24-2 is reserved as the
+EMPTY_SET_ID = ID_MAX - 1           # empty-start-set sentinel (matches no id)
 
 
 def build(n_rows: int, m_edges: int, set_size: int,

@@ -1,304 +1,68 @@
-"""Expansion-centric query planner (paper §III-D).
+"""DEPRECATED compatibility shims over the plan-IR / session layers.
 
-A query is decomposed into a chain of attribute-laden expansion steps; each
-step gets its own circuit + proof, and the chain is glued by *public*
-intermediate tables: step k's public output becomes step k+1's committed data
-table, so the verifier recomputes the expected data root itself. Base tables
-are bound to the owner's published dataset commitments.
+The monolithic planner was replaced by three layers (see
+``docs/architecture.md``):
 
-Implemented LDBC SNB interactive plans (paper §V): IS3, IS4, IS5, IC1, IC2,
-IC8, IC9, IC13.
+* :mod:`repro.core.ir` — declarative plan IR + the generic executor
+* :mod:`repro.core.operators.registry` — node-type -> circuit adapters
+* :mod:`repro.core.session` — ``ZKGraphSession`` with published commitments,
+  a keygen cache, and serializable proof bundles
+
+New code should use::
+
+    from repro.core.session import ZKGraphSession
+    session = ZKGraphSession(db)
+    bundle = session.prove("IC1", dict(person=2, firstName=name))
+    assert ZKGraphSession.verifier(session.commitments).verify(bundle)
+
+The functions below keep the seed API alive for existing callers; they run
+through the same IR executor and share one module-level keygen cache.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field as dc_field
+import warnings
 
-import jax.numpy as jnp
-import numpy as np
+from . import commit, ir
+from . import prover as pv
+from .session import KeygenCache
+from ..graphdb import tables
 
-from . import field as F
-from . import merkle, prover as pv
-from .operators import (all_shortest, birc, expansion, orderby, reachability,
-                        set_expansion, sssp)
-from .operators.common import Operator
-from ..graphdb import engine
-from ..graphdb.storage import GraphDB, pad_pow2
+# legacy names, now canonical elsewhere
+QUERIES = ir.QUERIES
+Step = ir.Step
+QueryRun = ir.QueryRun
+data_root = commit.data_root
+publish_commitments = commit.publish_commitments
+base_table_cols = tables.base_table_cols
 
-QUERIES = ["IS3", "IS4", "IS5", "IC1", "IC2", "IC8", "IC9", "IC13"]
-
-
-# ---------------------------------------------------------------------------
-# dataset commitments (the owner's one-time publication)
-# ---------------------------------------------------------------------------
-def data_root(data_np: np.ndarray, n_rows: int,
-              cfg: pv.ProverConfig) -> np.ndarray:
-    """Commitment to a data-column matrix at a given circuit size: must match
-    exactly what prover.prove computes for the data tree."""
-    raw = np.asarray(data_np, np.int64) % F.P
-    padded = np.zeros((raw.shape[0], n_rows), np.int64)
-    padded[:, : raw.shape[1]] = raw
-    data = jnp.asarray(padded).astype(jnp.uint32)
-    lde = pv._lde(data, cfg.blowup, cfg.shift)
-    return np.asarray(merkle.commit(lde.T).root)
+_CACHE = KeygenCache()     # shared by all legacy prove/verify calls
 
 
-def base_table_cols(db: GraphDB, desc: str) -> np.ndarray:
-    """Canonical data-column layouts for base tables, keyed by descriptor."""
-    if desc == "knows":
-        t = db.tables["person_knows_person"]
-        return np.stack([t.src, t.dst])
-    if desc == "knows_date":
-        t = db.tables["person_knows_person"]
-        return np.stack([t.src, t.dst, t.props["creationDate"]])
-    if desc == "hasCreator":
-        t = db.tables["comment_hasCreator_person"]
-        return np.stack([t.src, t.dst])
-    if desc == "hasCreator_date":
-        t = db.tables["comment_hasCreator_person"]
-        return np.stack([t.src, t.dst, t.props["creationDate"]])
-    if desc == "replyOf":
-        t = db.tables["comment_replyOf_comment"]
-        return np.stack([t.src, t.dst])
-    if desc == "hasCreator_rev":
-        t = db.tables["comment_hasCreator_person"]
-        return np.stack([t.dst, t.src])
-    if desc == "replyOf_rev":
-        t = db.tables["comment_replyOf_comment"]
-        return np.stack([t.dst, t.src])
-    if desc == "comment_date":
-        ids = np.arange(len(db.node_props["comment"]["creationDate"])) + \
-            (1 << 20)
-        return np.stack([ids, db.node_props["comment"]["creationDate"]])
-    if desc == "comment_content_date":
-        cp = db.node_props["comment"]
-        ids = np.arange(len(cp["creationDate"])) + (1 << 20)
-        return np.stack([ids, cp["content"], cp["creationDate"]])
-    if desc == "person_firstName":
-        return np.stack([db.node_ids, db.node_props["person"]["firstName"]])
-    if desc == "knows_nodes":
-        t = db.tables["person_knows_person"]
-        cols = np.zeros((3, max(len(t), db.n_nodes)), np.int64)
-        cols[0, : len(t)] = t.src
-        cols[1, : len(t)] = t.dst
-        cols[2, : db.n_nodes] = db.node_ids
-        return cols
-    raise KeyError(desc)
+def _deprecated(name: str):
+    warnings.warn(f"repro.core.planner.{name} is deprecated; use "
+                  f"repro.core.session.ZKGraphSession", DeprecationWarning,
+                  stacklevel=3)
 
 
-def publish_commitments(db: GraphDB, cfg: pv.ProverConfig = None) -> dict:
-    """Owner-side: dataset roots per (table descriptor, circuit size)."""
-    cfg = cfg or pv.ProverConfig()
-    roots = {}
-    for desc in ("knows", "knows_date", "hasCreator", "hasCreator_date",
-                 "replyOf", "hasCreator_rev", "replyOf_rev", "comment_date",
-                 "comment_content_date", "person_firstName", "knows_nodes"):
-        cols = base_table_cols(db, desc)
-        n_rows = pad_pow2(cols.shape[1])
-        roots[(desc, n_rows)] = data_root(cols, n_rows, cfg)
-    return roots
+def plan_query(db, qname: str, params: dict) -> QueryRun:
+    """Execute + build all step circuits/witnesses for a query.
+
+    .. deprecated:: use ``ZKGraphSession.run_query``.
+    """
+    _deprecated("plan_query")
+    return ir.execute(db, ir.build_plan(qname), params)
 
 
-# ---------------------------------------------------------------------------
-# steps + chains
-# ---------------------------------------------------------------------------
-@dataclass
-class Step:
-    op: Operator
-    advice: np.ndarray
-    instance: np.ndarray
-    data: np.ndarray
-    data_desc: str          # base-table descriptor or "chained"
-    outputs: dict = dc_field(default_factory=dict)  # public outputs for chaining
-
-
-@dataclass
-class QueryRun:
-    name: str
-    steps: list
-    result: dict
-
-
-def _mk(op_builder, witness_fn, data_desc, out_extract):
-    return dict(build=op_builder, witness=witness_fn, desc=data_desc,
-                extract=out_extract)
-
-
-def _pairs_out(op, inst):
-    h = op.handles
-    sel = inst[h["out_sel"].index] == 1
-    return (inst[h["C_s"].index][sel].astype(np.int64),
-            inst[h["C_t"].index][sel].astype(np.int64))
-
-
-def _step_set_expand(db, table_desc, src_arr, dst_arr, ids, bidir):
-    ids = np.unique(np.asarray(ids, np.int64))
-    if len(ids) == 0:
-        ids = np.asarray([db.node_ids[0]])
-    # output rows can exceed the edge region (bidirectional doubles matches)
-    out_count = int(np.isin(src_arr, ids).sum())
-    if bidir:
-        out_count += int(np.isin(dst_arr, ids).sum())
-    n_rows = pad_pow2(max(len(src_arr), len(ids) + 2, out_count))
-    op = set_expansion.build(n_rows, len(src_arr), len(ids),
-                             bidirectional=bidir)
-    advice, inst, data = set_expansion.witness(op, src_arr, dst_arr, ids)
-    s, t = _pairs_out(op, inst)
-    return Step(op, advice, inst, data, table_desc,
-                outputs=dict(src=s, dst=t))
-
-
-def _step_expand(db, table_desc, cols, id_s, with_prop=False, reverse=False):
-    n_rows = pad_pow2(cols.shape[1])
-    op = expansion.build_edge_list(n_rows, cols.shape[1], with_prop=with_prop,
-                                   reverse=reverse)
-    advice, inst, data = expansion.witness_edge_list(
-        op, cols[0], cols[1], id_s, cols[2] if with_prop else None)
-    h = op.handles
-    sel = inst[h["out_sel"].index] == 1
-    out = dict(src=inst[h["C_s"].index][sel].astype(np.int64),
-               dst=inst[h["C_t"].index][sel].astype(np.int64))
-    if with_prop:
-        out["prop"] = inst[h["C_p"].index][sel].astype(np.int64)
-    return Step(op, advice, inst, data, table_desc, outputs=out)
-
-
-def _step_orderby(vals, pay, k):
-    m = max(len(vals), 1)
-    vals = np.asarray(vals, np.int64)
-    pay = np.asarray(pay, np.int64)
-    if len(vals) == 0:
-        vals, pay = np.asarray([0]), np.asarray([0])
-    op = orderby.build(pad_pow2(max(m, 2)), len(vals), min(k, len(vals)))
-    advice, inst, data = orderby.witness(op, vals, pay)
-    h = op.handles
-    sel = inst[h["out_sel"].index] == 1
-    return Step(op, advice, inst, data, "chained",
-                outputs=dict(vals=inst[h["O_val"].index][sel].astype(np.int64),
-                             pay=inst[h["O_pay"].index][sel].astype(np.int64)))
-
-
-def plan_query(db: GraphDB, qname: str, params: dict) -> QueryRun:
-    """Execute + build all step circuits/witnesses for a query."""
-    steps = []
-    knows = db.tables["person_knows_person"]
-    if qname == "IS3":
-        # friends of p with friendship dates, newest first
-        p = params["person"]
-        cols = base_table_cols(db, "knows_date")
-        st1 = _step_expand(db, "knows_date", cols, p, with_prop=True)
-        st2 = _step_expand(db, "knows_date", cols, p, with_prop=True,
-                           reverse=True)
-        friends = np.concatenate([st1.outputs["dst"], st2.outputs["dst"]])
-        dates = np.concatenate([st1.outputs["prop"], st2.outputs["prop"]])
-        st3 = _step_orderby(dates, friends, k=max(len(friends), 1))
-        steps = [st1, st2, st3]
-        result = dict(friends=st3.outputs["pay"], dates=st3.outputs["vals"])
-    elif qname == "IS4":
-        mid = params["message"]
-        cols = base_table_cols(db, "comment_content_date")
-        st = _step_expand(db, "comment_content_date", cols, mid,
-                          with_prop=True)
-        steps = [st]
-        result = dict(content=st.outputs["dst"], date=st.outputs["prop"])
-    elif qname == "IS5":
-        mid = params["message"]
-        cols = base_table_cols(db, "hasCreator")
-        st = _step_expand(db, "hasCreator", cols, mid)
-        steps = [st]
-        result = dict(creator=st.outputs["dst"])
-    elif qname == "IC1":
-        p, name = params["person"], params["firstName"]
-        frontier = np.asarray([p], np.int64)
-        seen = {p}
-        hops = []
-        for _ in range(3):
-            st = _step_set_expand(db, "knows", knows.src, knows.dst,
-                                  frontier, bidir=True)
-            hops.append(st)
-            nxt = [x for x in st.outputs["dst"].tolist() if x not in seen]
-            seen |= set(nxt)
-            frontier = np.unique(np.asarray(nxt, np.int64)) if nxt else \
-                np.asarray([p])
-        cand = np.unique(np.concatenate([h.outputs["dst"] for h in hops]))
-        # filter candidates by firstName: set-expand the name table, then
-        # select pairs whose name == target via a reversed expansion
-        names = base_table_cols(db, "person_firstName")
-        st4 = _step_set_expand(db, "person_firstName", names[0], names[1],
-                               cand, bidir=False)
-        pairs = np.stack([st4.outputs["src"], st4.outputs["dst"]]) \
-            if len(st4.outputs["src"]) else np.zeros((2, 1), np.int64)
-        st5 = _step_expand(db, "chained", pairs, name, reverse=True)
-        matches = st5.outputs["dst"]
-        st6 = _step_orderby(matches, matches, k=min(20, max(len(matches), 1)))
-        steps = hops + [st4, st5, st6]
-        result = dict(persons=st6.outputs["pay"])
-    elif qname in ("IC2", "IC9"):
-        p, k = params["person"], params.get("k", 20)
-        st1 = _step_set_expand(db, "knows", knows.src, knows.dst,
-                               np.asarray([p]), bidir=True)
-        friends = np.unique(st1.outputs["dst"])
-        steps = [st1]
-        if qname == "IC9":  # friends-of-friends too
-            st1b = _step_set_expand(db, "knows", knows.src, knows.dst,
-                                    friends, bidir=True)
-            friends = np.unique(np.concatenate([friends, st1b.outputs["dst"]]))
-            friends = friends[friends != p]
-            steps.append(st1b)
-        hc = db.tables["comment_hasCreator_person"]
-        # messages whose creator is in the friend set: reversed table layout
-        st2 = _step_set_expand(db, "hasCreator_rev", hc.dst, hc.src, friends,
-                               bidir=False)
-        msgs = st2.outputs["dst"]
-        cd = base_table_cols(db, "comment_date")
-        st3 = _step_set_expand(db, "comment_date", cd[0], cd[1], msgs,
-                               bidir=False)
-        st4 = _step_orderby(st3.outputs["dst"], st3.outputs["src"], k=k)
-        steps += [st2, st3, st4]
-        result = dict(messages=st4.outputs["pay"], dates=st4.outputs["vals"])
-    elif qname == "IC8":
-        p, k = params["person"], params.get("k", 20)
-        hc = db.tables["comment_hasCreator_person"]
-        st1 = _step_expand(db, "hasCreator", np.stack([hc.src, hc.dst]), p,
-                           reverse=True)
-        my_msgs = st1.outputs["dst"]
-        ro = db.tables["comment_replyOf_comment"]
-        st2 = _step_set_expand(db, "replyOf_rev", ro.dst, ro.src, my_msgs,
-                               bidir=False)
-        replies = st2.outputs["dst"]
-        cd = base_table_cols(db, "comment_date")
-        st3 = _step_set_expand(db, "comment_date", cd[0], cd[1], replies,
-                               bidir=False)
-        st4 = _step_orderby(st3.outputs["dst"], st3.outputs["src"], k=k)
-        steps = [st1, st2, st3, st4]
-        result = dict(replies=st4.outputs["pay"], dates=st4.outputs["vals"])
-    elif qname == "IC13":
-        p1, p2 = params["person1"], params["person2"]
-        dist, pred, pd = engine.bfs_sssp(knows, db.node_ids, p1, True)
-        cols = base_table_cols(db, "knows_nodes")
-        n_rows = pad_pow2(cols.shape[1])
-        op = sssp.build(n_rows, len(knows), db.n_nodes, undirected=True,
-                        with_target=True)
-        advice, inst, data = sssp.witness(op, knows.src, knows.dst,
-                                          db.node_ids, p1, dist, pred, pd,
-                                          id_t=p2)
-        st = Step(op, advice, inst, data, "knows_nodes",
-                  outputs=dict(dist=int(inst[op.handles["d_t"].index][0])))
-        steps = [st]
-        d = st.outputs["dist"]
-        result = dict(distance=d if d <= db.n_nodes else -1)
-    else:
-        raise KeyError(qname)
-    return QueryRun(qname, steps, result)
-
-
-# ---------------------------------------------------------------------------
-# prove / verify a whole chain
-# ---------------------------------------------------------------------------
 def prove_query(run: QueryRun, cfg: pv.ProverConfig = None) -> list:
+    """Prove every step of an executed query run.
+
+    .. deprecated:: use ``ZKGraphSession.prove`` (per-session keygen cache).
+    """
+    _deprecated("prove_query")
     cfg = cfg or pv.ProverConfig()
     proofs = []
     for st in run.steps:
-        st.op.keygen(cfg)
+        _CACHE.ensure(st.op, cfg)
         proofs.append(st.op.prove(st.advice, st.instance, st.data))
     return proofs
 
@@ -307,16 +71,28 @@ def verify_query(run: QueryRun, proofs: list, commitments: dict,
                  cfg: pv.ProverConfig = None) -> bool:
     """Verifier side: every step proof + dataset-root binding.
 
-    Base tables are checked against the published commitments; chained
-    intermediates are public, so their roots are recomputed directly.
+    Base tables are checked against the published commitments — a missing
+    base-table commitment FAILS verification (it is never recomputed from
+    prover-supplied data); only chained intermediates, which are public,
+    have their roots recomputed directly.
+
+    .. deprecated:: use ``ZKGraphSession.verify`` — it also re-derives the
+       chained tables and the claimed result instead of trusting ``run``.
     """
+    _deprecated("verify_query")
     cfg = cfg or pv.ProverConfig()
+    if len(proofs) != len(run.steps):
+        return False    # every step needs a proof; zip must not truncate
     for st, proof in zip(run.steps, proofs):
+        if st.op.keys is None:
+            _CACHE.ensure(st.op, cfg)
         n_rows = st.op.circuit.n_rows
-        key = (st.data_desc, n_rows)
-        if st.data_desc == "chained" or key not in commitments:
+        if st.data_desc == "chained":
             expected = data_root(st.data, n_rows, cfg)
         else:
+            key = (st.data_desc, n_rows)
+            if key not in commitments:
+                return False     # unpublished base table: reject, no fallback
             expected = commitments[key]
         if not st.op.verify(st.instance, proof, expected_data_root=expected):
             return False

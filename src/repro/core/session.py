@@ -1,0 +1,269 @@
+"""ZKGraph session API: the query-serving entry point.
+
+A :class:`ZKGraphSession` owns the published dataset commitments and a keygen
+cache keyed by ``(circuit shape, fixed-columns digest)`` so repeated queries
+— and repeated steps within one query — reuse the fixed-column LDE / coeff
+caches instead of re-running keygen per step (the hot path a proving service
+pays; see ``benchmarks/paper_tables.py:cachewin``).
+
+Owner side::
+
+    owner = ZKGraphSession(db)
+    bundle = owner.prove("IC1", dict(person=2, firstName=name))
+
+Verifier side (no database access)::
+
+    verifier = ZKGraphSession.verifier(owner.commitments)
+    assert verifier.verify(bundle)
+
+The bundle is self-contained and serializable: per step it carries the
+registry adapter name + circuit shape (so the verifier rebuilds the circuit
+itself), the public instance, the data descriptor, and the proof.  The
+verifier binds every base-table step to a *published* commitment — a missing
+commitment raises :class:`MissingCommitmentError`, it is never recomputed
+from prover-supplied data — and recomputes chained intermediate roots from
+the previous steps' (already verified) public outputs.
+"""
+from __future__ import annotations
+
+import hashlib
+import pickle
+from dataclasses import dataclass, field as dc_field
+
+import numpy as np
+
+from . import commit, ir
+from . import prover as pv
+from .operators import registry
+from .plonkish import Circuit
+
+
+class MissingCommitmentError(KeyError):
+    """A proof referenced a base table the owner never published a
+    commitment for at this circuit size. Verification must not fall back to
+    recomputing the root from prover-supplied data."""
+
+
+# ---------------------------------------------------------------------------
+# keygen cache
+# ---------------------------------------------------------------------------
+def circuit_shape_digest(circuit: Circuit) -> str:
+    """Digest of everything the constraint system depends on: fixed-column
+    values, the column layout, and the full gate/bus/gp *expressions* (two
+    circuits that differ only in a constraint polynomial — e.g. ascending vs
+    descending order-by — must not share keys)."""
+    h = hashlib.sha256()
+    h.update(repr(circuit.digest_seed()).encode())
+    for name, col in zip(circuit.fixed_names, circuit.fixed_cols):
+        h.update(name.encode())
+        h.update(np.ascontiguousarray(col).tobytes())
+    for names in (circuit.advice_names, circuit.instance_names,
+                  circuit.data_names):
+        h.update("\0".join(names).encode() + b"\1")
+    for name, expr in circuit.gates:
+        h.update(f"{name}={expr!r}".encode() + b"\1")
+    for b in circuit.buses:
+        h.update(repr((b.name, b.f_tuple, b.t_tuple, b.m_f, b.m_t,
+                       b.t_sel)).encode() + b"\1")
+    for g in circuit.gps:
+        h.update(repr((g.name, g.c1_tuple, g.c2_tuple, g.sel1,
+                       g.sel2)).encode() + b"\1")
+    return h.hexdigest()
+
+
+@dataclass
+class KeygenCache:
+    """(circuit shape digest, prover config) -> Keys. Shared by prover and
+    verifier sessions; ``ensure`` attaches cached keys to an operator.
+    Bounded: oldest entries are evicted past ``max_entries`` so a long-lived
+    verifier fed ever-fresh shapes cannot grow it without limit."""
+    entries: dict = dc_field(default_factory=dict)
+    hits: int = 0
+    misses: int = 0
+    max_entries: int = 128
+
+    @staticmethod
+    def _key(op, cfg: pv.ProverConfig):
+        return (op.name, op.circuit.n_rows,
+                (cfg.blowup, cfg.n_queries, cfg.fri_final_size, cfg.shift),
+                circuit_shape_digest(op.circuit))
+
+    def ensure(self, op, cfg: pv.ProverConfig):
+        """Attach (possibly cached) keys to ``op``; keygen on first sight."""
+        key = self._key(op, cfg)
+        keys = self.entries.get(key)
+        if keys is None:
+            self.misses += 1
+            keys = pv.keygen(op.circuit, cfg)
+            self.entries[key] = keys
+            while len(self.entries) > self.max_entries:
+                self.entries.pop(next(iter(self.entries)))
+        else:
+            self.hits += 1
+            self.entries[key] = self.entries.pop(key)   # LRU: refresh on hit
+        op.keys = keys
+        return op
+
+    def stats(self) -> dict:
+        return dict(hits=self.hits, misses=self.misses,
+                    entries=len(self.entries))
+
+
+# ---------------------------------------------------------------------------
+# proof bundle
+# ---------------------------------------------------------------------------
+@dataclass
+class StepProof:
+    """One chained step: enough for a verifier to rebuild the circuit,
+    re-derive the expected data root, and check the proof."""
+    kind: str           # registry adapter name
+    shape: dict         # serializable build kwargs
+    data_desc: str      # base-table descriptor or "chained"
+    instance: np.ndarray
+    proof: pv.Proof
+
+
+@dataclass
+class ProofBundle:
+    query: str
+    params: dict
+    steps: list         # [StepProof]
+    result: dict        # claimed query result (re-derived by the verifier)
+    cfg: pv.ProverConfig
+
+    def size_fields(self) -> int:
+        return sum(s.proof.size_fields() for s in self.steps)
+
+    def prove_seconds(self) -> float:
+        return sum(s.proof.timings.get("total", 0.0) for s in self.steps)
+
+    def to_bytes(self) -> bytes:
+        return pickle.dumps(self, protocol=pickle.HIGHEST_PROTOCOL)
+
+    @staticmethod
+    def from_bytes(raw: bytes) -> "ProofBundle":
+        # NOTE: pickle is a placeholder wire format for the repro — fine for
+        # benchmarks and tests, not for hostile input.
+        bundle = pickle.loads(raw)
+        assert isinstance(bundle, ProofBundle)
+        return bundle
+
+
+def _values_equal(a, b) -> bool:
+    return np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def _results_equal(a: dict, b: dict) -> bool:
+    return set(a) == set(b) and all(_values_equal(a[k], b[k]) for k in a)
+
+
+# ---------------------------------------------------------------------------
+# the session
+# ---------------------------------------------------------------------------
+class ZKGraphSession:
+    """Owns commitments + keygen cache; proves and verifies query bundles."""
+
+    def __init__(self, db=None, cfg: pv.ProverConfig = None,
+                 commitments: dict = None):
+        self.db = db
+        self.cfg = cfg or pv.ProverConfig()
+        self._commitments = commitments
+        self.cache = KeygenCache()
+
+    @classmethod
+    def verifier(cls, commitments: dict, cfg: pv.ProverConfig = None):
+        """A verifier-side session: published commitments, no database."""
+        return cls(db=None, cfg=cfg, commitments=commitments)
+
+    # -- owner side ---------------------------------------------------------
+    @property
+    def commitments(self) -> dict:
+        if self._commitments is None:
+            self._commitments = self.publish()
+        return self._commitments
+
+    def publish(self) -> dict:
+        """(Re)compute the owner's dataset commitments."""
+        assert self.db is not None, "publishing requires the database"
+        self._commitments = commit.publish_commitments(self.db, self.cfg)
+        return self._commitments
+
+    def run_query(self, qname: str, params: dict) -> ir.QueryRun:
+        """Execute a query plan (engine + witnesses), no proving."""
+        assert self.db is not None, "query execution requires the database"
+        return ir.execute(self.db, ir.build_plan(qname), params)
+
+    def prove(self, qname: str, params: dict) -> ProofBundle:
+        run = self.run_query(qname, params)
+        steps = []
+        for st in run.steps:
+            self.cache.ensure(st.op, self.cfg)
+            proof = st.op.prove(st.advice, st.instance, st.data)
+            steps.append(StepProof(st.kind, st.shape, st.data_desc,
+                                   st.instance, proof))
+        return ProofBundle(qname, dict(params), steps, run.result, self.cfg)
+
+    # -- verifier side ------------------------------------------------------
+    def verify(self, bundle: ProofBundle, commitments: dict = None) -> bool:
+        """Check every step proof, its dataset-root binding, the chained
+        intermediate tables, and the claimed result.
+
+        Base tables MUST match a published commitment (missing => raise);
+        only ``data_desc == "chained"`` roots are recomputed, and then from
+        the *verifier's own* re-derivation of the previous steps' outputs,
+        never from prover-supplied data.
+        """
+        comms = commitments if commitments is not None else self.commitments
+        if bundle.cfg != self.cfg:
+            return False    # proof parameters below the session's policy
+        plan = ir.build_plan(bundle.query)
+        if len(plan.nodes) != len(bundle.steps):
+            return False
+        env = ir.Env(dict(bundle.params))
+        try:
+            for node, rec in zip(plan.nodes, bundle.steps):
+                ad = registry.adapter_for(node)
+                if ad.name != rec.kind:
+                    return False
+                # all structural checks happen BEFORE any keygen work, so a
+                # malformed bundle cannot make the verifier burn keygen cycles
+                desc = ad.data_desc(node)       # the PLAN's binding, never
+                if rec.data_desc != desc:       # the bundle's claim
+                    return False
+                for k, v in ad.shape_flags(node).items():
+                    if rec.shape.get(k) != v:   # semantic circuit flags are
+                        return False            # pinned by the plan node
+                n_rows = rec.shape.get("n_rows")
+                if not isinstance(n_rows, int) or n_rows <= 0:
+                    return False
+                if desc == "chained":
+                    # the chain glue: step k's table is re-derived from
+                    # earlier verified outputs, and the declared shape must
+                    # match that re-derivation exactly
+                    if ad.shape(None, node, env) != rec.shape:
+                        return False
+                    cols = ad.chained_cols(node, env)
+                    expected = commit.data_root(cols, n_rows, self.cfg)
+                else:
+                    key = (desc, n_rows)
+                    if key not in comms:
+                        raise MissingCommitmentError(
+                            f"no published commitment for base table "
+                            f"{desc!r} at {n_rows} rows")
+                    expected = comms[key]
+                op = self.cache.ensure(
+                    registry.build_operator(rec.kind, rec.shape), self.cfg)
+                # the instance's public inputs must be the CLAIMED query's
+                # (params + chained outputs), not whatever was proven
+                if not ad.check_instance(op, rec.instance, node, env):
+                    return False
+                if not op.verify(rec.instance, rec.proof,
+                                 expected_data_root=expected):
+                    return False
+                env.outputs.append(ad.extract_outputs(op, rec.instance))
+            result = {k: ir.resolve(b, env) for k, b in plan.result.items()}
+            return _results_equal(result, bundle.result)
+        except MissingCommitmentError:
+            raise                   # an owner/deployment problem, not a proof
+        except (TypeError, KeyError, ValueError, AssertionError, IndexError):
+            return False            # malformed bundle = invalid proof

@@ -1,0 +1,115 @@
+"""Base-table registry: canonical data-column layouts for published tables.
+
+Every table the data owner publishes a commitment for is registered here by
+descriptor; operators reference tables *only* through descriptors, so adding
+a new base table (or a reversed / property-laden view of an existing one) is
+one ``@register_table`` function — nothing in the planner or session changes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .storage import GraphDB
+
+BASE_TABLES: dict = {}   # desc -> fn(db) -> (n_cols, n) int64 column matrix
+
+
+def register_table(desc: str):
+    """Register a column-layout function under a table descriptor."""
+    def deco(fn):
+        if desc in BASE_TABLES:
+            raise KeyError(f"table descriptor {desc!r} already registered")
+        BASE_TABLES[desc] = fn
+        return fn
+    return deco
+
+
+def base_table_cols(db: GraphDB, desc: str) -> np.ndarray:
+    """Canonical data-column layout for a registered base table."""
+    try:
+        fn = BASE_TABLES[desc]
+    except KeyError:
+        raise KeyError(f"unknown base table descriptor {desc!r}; "
+                       f"known: {sorted(BASE_TABLES)}") from None
+    return fn(db)
+
+
+def all_table_descs():
+    return tuple(sorted(BASE_TABLES))
+
+
+# ---------------------------------------------------------------------------
+# the LDBC SNB layouts the seed queries use
+# ---------------------------------------------------------------------------
+COMMENT_ID_BASE = 1 << 20
+
+
+@register_table("knows")
+def _knows(db):
+    t = db.tables["person_knows_person"]
+    return np.stack([t.src, t.dst])
+
+
+@register_table("knows_date")
+def _knows_date(db):
+    t = db.tables["person_knows_person"]
+    return np.stack([t.src, t.dst, t.props["creationDate"]])
+
+
+@register_table("hasCreator")
+def _has_creator(db):
+    t = db.tables["comment_hasCreator_person"]
+    return np.stack([t.src, t.dst])
+
+
+@register_table("hasCreator_date")
+def _has_creator_date(db):
+    t = db.tables["comment_hasCreator_person"]
+    return np.stack([t.src, t.dst, t.props["creationDate"]])
+
+
+@register_table("replyOf")
+def _reply_of(db):
+    t = db.tables["comment_replyOf_comment"]
+    return np.stack([t.src, t.dst])
+
+
+@register_table("hasCreator_rev")
+def _has_creator_rev(db):
+    t = db.tables["comment_hasCreator_person"]
+    return np.stack([t.dst, t.src])
+
+
+@register_table("replyOf_rev")
+def _reply_of_rev(db):
+    t = db.tables["comment_replyOf_comment"]
+    return np.stack([t.dst, t.src])
+
+
+@register_table("comment_date")
+def _comment_date(db):
+    ids = np.arange(len(db.node_props["comment"]["creationDate"])) + \
+        COMMENT_ID_BASE
+    return np.stack([ids, db.node_props["comment"]["creationDate"]])
+
+
+@register_table("comment_content_date")
+def _comment_content_date(db):
+    cp = db.node_props["comment"]
+    ids = np.arange(len(cp["creationDate"])) + COMMENT_ID_BASE
+    return np.stack([ids, cp["content"], cp["creationDate"]])
+
+
+@register_table("person_firstName")
+def _person_first_name(db):
+    return np.stack([db.node_ids, db.node_props["person"]["firstName"]])
+
+
+@register_table("knows_nodes")
+def _knows_nodes(db):
+    t = db.tables["person_knows_person"]
+    cols = np.zeros((3, max(len(t), db.n_nodes)), np.int64)
+    cols[0, : len(t)] = t.src
+    cols[1, : len(t)] = t.dst
+    cols[2, : db.n_nodes] = db.node_ids
+    return cols

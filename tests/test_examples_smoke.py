@@ -1,0 +1,51 @@
+"""Examples smoke tests: run each example's main() at tiny circuit sizes so
+API breakage in examples is caught by tier-1 (the examples are the documented
+entry points to the session API)."""
+import importlib.util
+import os
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import prover as pv
+
+EXAMPLES = Path(__file__).resolve().parent.parent / "examples"
+TINY = pv.ProverConfig(blowup=4, n_queries=4, fri_final_size=16)
+
+
+def load_example(name):
+    spec = importlib.util.spec_from_file_location(name, EXAMPLES / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.mark.slow
+def test_quickstart_smoke():
+    load_example("quickstart").main(n_knows=48, n_persons=16, cfg=TINY)
+
+
+@pytest.mark.slow
+def test_ldbc_ic1_smoke():
+    load_example("ldbc_ic1").main(n_knows=48, n_persons=16, cfg=TINY)
+
+
+@pytest.mark.slow
+def test_serve_queries_smoke(tmp_path):
+    mod = load_example("serve_queries")
+    mod.STATE = str(tmp_path / "serve_state.json")
+    # IC13 queue entries draw person2 from [9, 24), so keep >= 24 persons
+    mod.main(["--queries", "3"], n_knows=48, n_persons=24, cfg=TINY)
+    assert not os.path.exists(mod.STATE)    # completed queue cleans up
+
+
+@pytest.mark.slow
+def test_serve_queries_resume(tmp_path):
+    mod = load_example("serve_queries")
+    mod.STATE = str(tmp_path / "serve_state.json")
+    mod.main(["--queries", "3", "--restart-demo"],
+             n_knows=48, n_persons=24, cfg=TINY)
+    assert os.path.exists(mod.STATE)        # crashed mid-queue: checkpoint
+    mod.main(["--queries", "3"], n_knows=48, n_persons=24, cfg=TINY)
+    assert not os.path.exists(mod.STATE)

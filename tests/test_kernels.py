@@ -3,6 +3,7 @@ values, and the uint32 16-bit-limb mulmod path vs the uint64 oracle."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import field as F

@@ -2,6 +2,9 @@
 witnesses) on random graphs, and the engine oracles agree with brute force.
 Uses check_constraints (exact, no proof) so many cases stay fast."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.operators import expansion, set_expansion, sssp

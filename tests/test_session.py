@@ -1,0 +1,193 @@
+"""Session-API tests: prove/verify bundles, the keygen cache, bundle
+serialization, and the base-table commitment soundness fix."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import planner
+from repro.core import prover as pv
+from repro.core.session import (KeygenCache, MissingCommitmentError,
+                                ProofBundle, ZKGraphSession,
+                                circuit_shape_digest)
+from repro.graphdb import ldbc
+
+FAST = pv.ProverConfig(blowup=4, n_queries=8, fri_final_size=16)
+
+
+@pytest.fixture(scope="module")
+def db():
+    return ldbc.generate(n_knows=96, n_persons=24, n_comments=64, seed=11)
+
+
+@pytest.fixture(scope="module")
+def owner(db):
+    return ZKGraphSession(db, FAST)
+
+
+@pytest.fixture(scope="module")
+def bundle(owner):
+    return owner.prove("IS5", dict(message=(1 << 20) + 7))
+
+
+@pytest.fixture(scope="module")
+def verifier(owner):
+    return ZKGraphSession.verifier(owner.commitments, FAST)
+
+
+def test_prove_verify_roundtrip(bundle, verifier):
+    assert verifier.verify(bundle)
+
+
+def test_ic1_chain_verifies(db, owner, verifier):
+    """IC1 exercises every adapter kind incl. the NameFilter chained step."""
+    name = int(db.node_props["person"]["firstName"][0])
+    b = owner.prove("IC1", dict(person=2, firstName=name))
+    assert verifier.verify(b)
+
+
+def test_bundle_serialization_roundtrip(bundle, verifier):
+    rt = ProofBundle.from_bytes(bundle.to_bytes())
+    assert rt.query == bundle.query and rt.params == bundle.params
+    assert verifier.verify(rt)
+
+
+def test_wrong_dataset_rejected(bundle, verifier):
+    db2 = ldbc.generate(n_knows=96, n_persons=24, n_comments=64, seed=99)
+    bad = ZKGraphSession(db2, FAST).commitments
+    assert not verifier.verify(bundle, commitments=bad)
+
+
+def test_cfg_mismatch_rejected(bundle, owner):
+    stricter = ZKGraphSession.verifier(
+        owner.commitments, pv.ProverConfig(blowup=4, n_queries=32,
+                                           fri_final_size=16))
+    assert not stricter.verify(bundle)
+
+
+# ---------------------------------------------------------------------------
+# keygen cache
+# ---------------------------------------------------------------------------
+def test_keygen_cache_once_per_shape(db):
+    """Proving the same query twice in one session performs keygen at most
+    once per distinct circuit shape (the seed re-ran it per step per query)."""
+    session = ZKGraphSession(db, FAST)
+    session.prove("IS5", dict(message=(1 << 20) + 7))
+    misses_after_first = session.cache.misses
+    assert misses_after_first >= 1
+    session.prove("IS5", dict(message=(1 << 20) + 7))
+    assert session.cache.misses == misses_after_first
+    assert session.cache.hits >= 1
+    # distinct shapes in one plan each get exactly one keygen
+    session.prove("IS3", dict(person=3))
+    entries = len(session.cache.entries)
+    session.prove("IS3", dict(person=3))
+    assert len(session.cache.entries) == entries
+
+
+def test_shape_digest_separates_circuits(db):
+    from repro.core.operators import registry
+    a = registry.build_operator("expand", dict(
+        n_rows=32, m_edges=20, with_prop=False, reverse=False))
+    b = registry.build_operator("expand", dict(
+        n_rows=32, m_edges=20, with_prop=False, reverse=True))
+    c = registry.build_operator("expand", dict(
+        n_rows=32, m_edges=24, with_prop=False, reverse=False))
+    d = registry.build_operator("expand", dict(
+        n_rows=32, m_edges=20, with_prop=False, reverse=False))
+    assert circuit_shape_digest(a.circuit) == circuit_shape_digest(d.circuit)
+    assert circuit_shape_digest(a.circuit) != circuit_shape_digest(c.circuit)
+    cache = KeygenCache()
+    cache.ensure(a, FAST)
+    cache.ensure(b, FAST)       # different circuit name -> miss
+    cache.ensure(c, FAST)       # different fixed columns -> miss
+    cache.ensure(d, FAST)       # identical shape -> hit
+    assert cache.stats() == dict(hits=1, misses=3, entries=3)
+    assert d.keys is a.keys
+
+
+# ---------------------------------------------------------------------------
+# soundness: base tables must be bound to *published* commitments
+# ---------------------------------------------------------------------------
+def test_missing_base_commitment_raises(bundle, owner, verifier):
+    partial = {k: v for k, v in owner.commitments.items()
+               if k[0] != "hasCreator"}
+    with pytest.raises(MissingCommitmentError):
+        verifier.verify(bundle, commitments=partial)
+
+
+def test_legacy_verify_missing_commitment_fails(db):
+    """The seed silently recomputed a missing base-table root from
+    prover-supplied data — which accepts proofs over a *never-published*
+    dataset. It must reject instead."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        run = planner.plan_query(db, "IS5", dict(message=(1 << 20) + 7))
+        proofs = planner.prove_query(run, FAST)
+        commitments = planner.publish_commitments(db, FAST)
+        assert planner.verify_query(run, proofs, commitments, FAST)
+        partial = {k: v for k, v in commitments.items()
+                   if k[0] != "hasCreator"}
+        assert not planner.verify_query(run, proofs, partial, FAST)
+        # chained steps stay verifiable without a published entry
+        run3 = planner.plan_query(db, "IS3", dict(person=3))
+        proofs3 = planner.prove_query(run3, FAST)
+        assert planner.verify_query(run3, proofs3, commitments, FAST)
+        # a truncated (or empty) proof list must not pass by zip-truncation
+        assert not planner.verify_query(run3, proofs3[:1], commitments, FAST)
+        assert not planner.verify_query(run3, [], commitments, FAST)
+
+
+def test_data_desc_substitution_rejected(db, verifier):
+    """A prover must not relabel a step's base table to another published
+    descriptor with the same layout: the verifier binds the commitment
+    lookup to the PLAN's table, not the bundle's claim."""
+    owner = ZKGraphSession(db, FAST)
+    b = owner.prove("IS5", dict(message=(1 << 20) + 7))
+    clone = ProofBundle.from_bytes(b.to_bytes())
+    clone.steps[0].data_desc = "knows"     # same 2-col layout as hasCreator
+    assert not verifier.verify(clone, commitments=owner.commitments)
+
+
+def test_shape_flag_flip_rejected(db, verifier):
+    """Semantic circuit flags on base-table steps are pinned by the plan
+    node: flipping e.g. `reverse` in the declared shape must be rejected
+    before any proof is checked."""
+    owner = ZKGraphSession(db, FAST)
+    b = owner.prove("IS5", dict(message=(1 << 20) + 7))
+    clone = ProofBundle.from_bytes(b.to_bytes())
+    clone.steps[0].shape = dict(clone.steps[0].shape, reverse=True)
+    assert not verifier.verify(clone, commitments=owner.commitments)
+
+
+def test_param_substitution_rejected(db, verifier):
+    """A bundle that claims different query params than were proven must be
+    rejected: the verifier pins the instance's public inputs (id_s, id sets,
+    targets) to the plan-resolved bindings."""
+    owner = ZKGraphSession(db, FAST)
+    b = owner.prove("IS5", dict(message=(1 << 20) + 7))
+    claimed_other = ProofBundle.from_bytes(b.to_bytes())
+    claimed_other.params = dict(message=(1 << 20) + 8)
+    assert not verifier.verify(claimed_other, commitments=owner.commitments)
+    no_params = ProofBundle.from_bytes(b.to_bytes())
+    no_params.params = {}
+    assert not verifier.verify(no_params, commitments=owner.commitments)
+
+
+def test_step_count_mismatch_rejected(bundle, verifier):
+    clone = ProofBundle.from_bytes(bundle.to_bytes())
+    clone.steps = clone.steps + clone.steps
+    assert not verifier.verify(clone)
+
+
+def test_chained_shape_must_match_rederivation(db, owner):
+    """A prover who lies about a chained step's circuit geometry (e.g. a
+    shrunken input region that drops rows) is rejected before proof check."""
+    b3 = owner.prove("IS3", dict(person=3))
+    verifier = ZKGraphSession.verifier(owner.commitments, FAST)
+    assert verifier.verify(b3)
+    clone = ProofBundle.from_bytes(b3.to_bytes())
+    rec = clone.steps[2]            # the chained order-by step
+    assert rec.data_desc == "chained"
+    rec.shape = dict(rec.shape, m_in=max(1, rec.shape["m_in"] - 1))
+    assert not verifier.verify(clone)
