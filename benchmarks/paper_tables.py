@@ -118,6 +118,8 @@ def cachewin(rows: int = 1024):
     """Before/after for the session keygen cache on repeated queries: a warm
     session skips every per-step keygen (fixed-column intt + LDE + device
     transfer), which the seed paid on each prove_query call."""
+    from repro.core.operators import registry
+    from repro.core.session import circuit_shape_digest
     db = db_with_rows(rows)
     p = dict(person=3)
     ZKGraphSession(db, BENCH_CFG).prove("IS3", p)       # warm jit caches
@@ -131,6 +133,21 @@ def cachewin(rows: int = 1024):
     yield ("cachewin/IS3/warm_session", warm_us,
            f"keygen_hits={after_warm['hits']};"
            f"speedup={cold_us / warm_us:.2f}x")
+    # the shape digest is memoized on the circuit: a cache *hit* no longer
+    # pays the SHA-256 over every fixed-column's bytes on each ensure()
+    t = db.tables["person_knows_person"]
+    op = registry.build_operator("expand", dict(
+        n_rows=pad_pow2(len(t)), m_edges=len(t), with_prop=False,
+        reverse=False))
+    session.cache.ensure(op, BENCH_CFG)                 # digest + keygen once
+    _, hit_us = timed(session.cache.ensure, op, BENCH_CFG)  # memoized digest
+    op.circuit._shape_digest = None                     # force a recompute
+    _, digest_us = timed(circuit_shape_digest, op.circuit)
+    yield ("cachewin/ensure_hit_memoized", hit_us,
+           f"rows={op.circuit.n_rows}")
+    yield ("cachewin/ensure_hit_digest_recompute", hit_us + digest_us,
+           f"digest_us={digest_us:.1f};"
+           f"speedup={(hit_us + digest_us) / max(hit_us, 1e-9):.2f}x")
 
 
 # ---------------------------------------------------------------------------
@@ -255,6 +272,50 @@ def fig7(rows: int = 1024):
 
 
 # ---------------------------------------------------------------------------
+# wire codec: canonical ProofBundle bytes vs the seed's pickle placeholder
+# ---------------------------------------------------------------------------
+def wire_codec(rows: int = 1024):
+    """Encode/decode time + serialized size for the canonical wire format
+    (repro.core.wire) against the legacy pickle it replaced (pickle is
+    measured here as the baseline only — it no longer ships).  Also emits
+    ``BENCH_wire.json`` so the serialization perf trajectory is recorded."""
+    import json
+    import pickle
+
+    from repro.core.session import ProofBundle
+
+    db = db_with_rows(rows)
+    session = ZKGraphSession(db, BENCH_CFG)
+    records = {}
+    for q, p in (("IS5", dict(message=(1 << 20) + 7)),
+                 ("IS3", dict(person=3)),
+                 ("IC13", dict(person1=1, person2=9))):
+        bundle = session.prove(q, p)
+        raw, enc_us = timed(bundle.to_bytes)
+        rt, dec_us = timed(ProofBundle.from_bytes, raw)
+        assert rt.to_bytes() == raw                 # canonical round trip
+        pkl, penc_us = timed(pickle.dumps, bundle, pickle.HIGHEST_PROTOCOL)
+        _, pdec_us = timed(pickle.loads, pkl)
+        records[q] = dict(
+            steps=len(bundle.steps), wire_bytes=len(raw),
+            pickle_bytes=len(pkl), encode_us=round(enc_us, 1),
+            decode_us=round(dec_us, 1), pickle_encode_us=round(penc_us, 1),
+            pickle_decode_us=round(pdec_us, 1),
+            size_ratio=round(len(raw) / len(pkl), 3))
+        yield (f"wire/{q}/encode", enc_us,
+               f"bytes={len(raw)};pickle_bytes={len(pkl)};"
+               f"size_ratio={len(raw) / len(pkl):.2f}")
+        yield (f"wire/{q}/decode", dec_us,
+               f"pickle_decode_us={pdec_us:.1f}")
+    with open("BENCH_wire.json", "w") as f:
+        json.dump(dict(rows=rows, cfg=dict(
+            blowup=BENCH_CFG.blowup, n_queries=BENCH_CFG.n_queries,
+            fri_final_size=BENCH_CFG.fri_final_size), queries=records),
+            f, indent=2, sort_keys=True)
+    yield ("wire/BENCH_wire.json", 0.0, f"queries={len(records)}")
+
+
+# ---------------------------------------------------------------------------
 # Fig 8: scalability with database size
 # ---------------------------------------------------------------------------
 def fig8():
@@ -276,4 +337,4 @@ def fig8():
 
 ALL = {"table1": table1, "table2": table2, "table3": table3, "fig6a": fig6a,
        "fig6b": fig6b, "table4": table4, "fig7": fig7, "fig8": fig8,
-       "cachewin": cachewin}
+       "cachewin": cachewin, "wire": wire_codec}

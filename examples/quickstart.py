@@ -42,11 +42,19 @@ def main(n_knows=200, n_persons=32, cfg=CFG, seed=7):
           f"prover {bundle.prove_seconds():.1f}s")
 
     # ---- verifier: only the commitments + the (serialized) bundle ---------
+    # bytes cross the trust boundary through the canonical wire codec
+    # (repro.core.wire): versioned, deterministic, bounded — never pickle
     verifier = ZKGraphSession.verifier(commitments, cfg)
-    received = ProofBundle.from_bytes(bundle.to_bytes())
+    raw = bundle.to_bytes()
+    received = ProofBundle.from_bytes(raw)
+    assert received.to_bytes() == raw      # one canonical encoding
     ok = verifier.verify(received)
     print(f"verifier accepts: {ok}")
     assert ok
+    # hostile bytes fail closed: no crash, no code execution, just False
+    assert not verifier.verify_bytes(raw[: len(raw) // 2])
+    assert not verifier.verify_bytes(b"\x80\x04pickle?")
+    print("malformed / legacy-pickle bytes rejected: True")
     want, *_ = engine.expand_undirected(t, src_id)
     assert sorted(friends.tolist()) == sorted(want.tolist())
 

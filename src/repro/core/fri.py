@@ -47,6 +47,18 @@ class FriProof:
             total += int(np.prod(rows.shape)) + int(np.prod(paths.shape))
         return total
 
+    # -- canonical serialization (repro.core.wire; never pickle) -------------
+    def to_bytes(self) -> bytes:
+        from . import wire
+        return wire.encode_fri_proof(self)
+
+    @staticmethod
+    def from_bytes(raw: bytes) -> "FriProof":
+        """Decode canonical FRI-proof bytes; raises ``wire.WireFormatError``
+        on any malformed input."""
+        from . import wire
+        return wire.decode_fri_proof(raw)
+
 
 def _fold(codeword: jnp.ndarray, beta: jnp.ndarray, shift: int) -> jnp.ndarray:
     """One FRI fold of an Fp4 codeword (N,4) on coset shift*H_N -> (N/2,4)."""

@@ -91,6 +91,10 @@ def _selected(op: Operator, instance, col: str) -> np.ndarray:
 class Adapter:
     kind: type = None
     name: str = ""
+    #: serializable circuit-geometry schema: shape-dict key -> exact type.
+    #: The wire codec and the verifier both reject a step whose declared
+    #: shape deviates from this (extra/missing keys, bool-vs-int confusion).
+    shape_schema: dict = {}
 
     def data_desc(self, node) -> str:
         return _desc_of(node.table)
@@ -99,9 +103,17 @@ class Adapter:
         """The shape fields derivable from the plan node alone (no db, no
         outputs). The verifier pins these against a bundle's declared shape
         — a prover cannot flip semantic circuit flags (reverse, bidirectional,
-        …) on a base-table step. Geometry fields (n_rows, m_edges, n_nodes)
-        stay a documented gap until row counts are published."""
+        …) on a base-table step."""
         return {}
+
+    def manifest_pins(self, node, env: ir.Env, manifest, geo) -> dict:
+        """Shape fields pinned by the owner's PUBLISHED manifest for a
+        base-table step (``geo`` is the table's :class:`TableGeometry`).
+        Together with :meth:`shape_flags` and the published-size membership
+        check this pins the step's full circuit geometry — the verifier
+        never trusts row counts from the prover's bundle."""
+        return dict(n_rows=pad_pow2(geo.n_table_rows),
+                    m_edges=geo.n_table_rows)
 
     def check_instance(self, op: Operator, instance, node, env: ir.Env) -> bool:
         """Verifier-side: the public inputs embedded in the instance must
@@ -127,6 +139,7 @@ def _col_equals(op: Operator, instance, handle: str, value: int) -> bool:
 class ExpandAdapter(Adapter):
     kind = ir.Expand
     name = "expand"
+    shape_schema = dict(n_rows=int, m_edges=int, with_prop=bool, reverse=bool)
 
     def _source(self, node, env):
         return int(ir.resolve(node.source, env))
@@ -183,6 +196,14 @@ class NameFilterAdapter(ExpandAdapter):
 class SetExpandAdapter(Adapter):
     kind = ir.SetExpand
     name = "set_expand"
+    shape_schema = dict(n_rows=int, m_edges=int, set_size=int,
+                        bidirectional=bool)
+
+    def manifest_pins(self, node, env: ir.Env, manifest, geo) -> dict:
+        # n_rows also depends on the (proof-determined) output count, so it
+        # is bounded by published-size membership rather than pinned exactly
+        ids = self._ids(None, node, env)
+        return dict(m_edges=geo.n_table_rows, set_size=int(len(ids)))
 
     def _ids(self, db, node, env: ir.Env) -> np.ndarray:
         key = ("ids", node)
@@ -246,6 +267,7 @@ class SetExpandAdapter(Adapter):
 class OrderByAdapter(Adapter):
     kind = ir.OrderBy
     name = "orderby"
+    shape_schema = dict(n_rows=int, m_in=int, k=int, descending=bool)
 
     def _vals_pay(self, node, env: ir.Env):
         vals = np.asarray(ir.resolve(node.values, env), np.int64)
@@ -290,6 +312,15 @@ class OrderByAdapter(Adapter):
 class SSSPAdapter(Adapter):
     kind = ir.SSSP
     name = "sssp"
+    shape_schema = dict(n_rows=int, m_edges=int, n_nodes=int, undirected=bool,
+                        with_target=bool)
+
+    def manifest_pins(self, node, env: ir.Env, manifest, geo) -> dict:
+        # m_edges counts the *edge table* the BFS ran over, not the committed
+        # (src, dst, node) table — its true size is published per edge table
+        return dict(n_rows=pad_pow2(geo.n_table_rows),
+                    m_edges=manifest.edge_count(node.edge_table),
+                    n_nodes=manifest.n_nodes)
 
     def shape(self, db, node, env: ir.Env) -> dict:
         cols = _table_cols(db, node.table, env)

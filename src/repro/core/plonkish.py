@@ -213,9 +213,18 @@ class Circuit:
     buses: list = dc_field(default_factory=list)
     gps: list = dc_field(default_factory=list)
     _range_tables: dict = dc_field(default_factory=dict)  # bits -> fixed col idx
+    # memoized session shape digest (SHA-256 over fixed cols + constraints);
+    # invalidated by every structural mutation below — the keygen cache pays
+    # the hash once per circuit object instead of once per ensure() call
+    _shape_digest: Optional[str] = dc_field(
+        default=None, repr=False, compare=False)
+
+    def _mutated(self):
+        self._shape_digest = None
 
     # -- column allocation --------------------------------------------------
     def add_fixed(self, name: str, values) -> Col:
+        self._mutated()
         vals = np.zeros(self.n_rows, np.uint32)
         arr = np.asarray(values, np.int64) % F.P
         vals[: len(arr)] = arr.astype(np.uint32)
@@ -224,27 +233,32 @@ class Circuit:
         return Col(FIXED, len(self.fixed_cols) - 1)
 
     def add_advice(self, name: str) -> Col:
+        self._mutated()
         self.advice_names.append(name)
         return Col(ADVICE, len(self.advice_names) - 1)
 
     def add_instance(self, name: str) -> Col:
+        self._mutated()
         self.instance_names.append(name)
         return Col(INSTANCE, len(self.instance_names) - 1)
 
     def add_data(self, name: str) -> Col:
         """Private dataset column: committed in its own tree whose root is the
         paper's 'declared dataset' commitment (verifier compares roots)."""
+        self._mutated()
         self.data_names.append(name)
         return Col(DATA, len(self.data_names) - 1)
 
     # -- constraints ----------------------------------------------------------
     def add_gate(self, name: str, expr: Expr, max_degree: int = 4):
+        self._mutated()
         d = expr.degree()
         assert d <= max_degree, f"gate {name} degree {d} > {max_degree}"
         self.gates.append((name, expr))
 
     def add_bus(self, name, f_tuple, t_tuple, m_f=Const(1), m_t=None,
                 t_sel=Const(1)) -> Bus:
+        self._mutated()
         bus = Bus(name, tuple(f_tuple), tuple(t_tuple), m_f, m_t, t_sel)
         if m_t is None:
             col = self.add_advice(f"{name}/mult")
@@ -258,6 +272,7 @@ class Circuit:
         return self.add_bus(name, tuple_a, tuple_b, m_f=sel_a, m_t=sel_b)
 
     def add_grand_product(self, name, c1, c2, sel1=Const(1), sel2=Const(1)):
+        self._mutated()
         gp = GrandProduct(name, tuple(c1), tuple(c2), sel1, sel2)
         self.gps.append(gp)
         return gp

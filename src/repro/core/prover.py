@@ -66,6 +66,18 @@ class Proof:
             total += int(np.prod(rows.shape)) + int(np.prod(paths.shape))
         return total
 
+    # -- canonical serialization (repro.core.wire; never pickle) -------------
+    def to_bytes(self) -> bytes:
+        from . import wire
+        return wire.encode_proof(self)
+
+    @staticmethod
+    def from_bytes(raw: bytes) -> "Proof":
+        """Decode canonical proof bytes; raises ``wire.WireFormatError`` on
+        any malformed input."""
+        from . import wire
+        return wire.decode_proof(raw)
+
 
 # ---------------------------------------------------------------------------
 # helpers

@@ -18,30 +18,38 @@ Verifier side (no database access)::
 
 The bundle is self-contained and serializable: per step it carries the
 registry adapter name + circuit shape (so the verifier rebuilds the circuit
-itself), the public instance, the data descriptor, and the proof.  The
-verifier binds every base-table step to a *published* commitment — a missing
-commitment raises :class:`MissingCommitmentError`, it is never recomputed
-from prover-supplied data — and recomputes chained intermediate roots from
-the previous steps' (already verified) public outputs.
+itself), the public instance, the data descriptor, and the proof.  The wire
+format is the canonical codec of :mod:`repro.core.wire` — versioned,
+deterministic, bounded, never pickle — so ``from_bytes`` can face hostile
+input (malformed bytes raise :class:`~repro.core.wire.WireFormatError`;
+:meth:`ZKGraphSession.verify_bytes` maps that to ``False``).
+
+The verifier trusts ONLY the owner's published
+:class:`~repro.core.commit.CommitmentManifest`: every base-table step is
+bound to a published root (a missing commitment raises
+:class:`MissingCommitmentError`, it is never recomputed from prover-supplied
+data) and its declared circuit geometry — row counts, ``m_edges`` selector
+regions, SSSP's ``n_nodes`` — is pinned against the manifest's published
+geometry; chained intermediate roots and shapes are re-derived from the
+previous steps' (already verified) public outputs.
 """
 from __future__ import annotations
 
 import hashlib
-import pickle
 from dataclasses import dataclass, field as dc_field
 
 import numpy as np
 
-from . import commit, ir
+from . import commit, ir, wire
 from . import prover as pv
+from .commit import CommitmentManifest, MissingCommitmentError
 from .operators import registry
 from .plonkish import Circuit
+from .wire import WireFormatError
 
-
-class MissingCommitmentError(KeyError):
-    """A proof referenced a base table the owner never published a
-    commitment for at this circuit size. Verification must not fall back to
-    recomputing the root from prover-supplied data."""
+__all__ = ["KeygenCache", "MissingCommitmentError", "ProofBundle",
+           "StepProof", "WireFormatError", "ZKGraphSession",
+           "circuit_shape_digest"]
 
 
 # ---------------------------------------------------------------------------
@@ -51,7 +59,13 @@ def circuit_shape_digest(circuit: Circuit) -> str:
     """Digest of everything the constraint system depends on: fixed-column
     values, the column layout, and the full gate/bus/gp *expressions* (two
     circuits that differ only in a constraint polynomial — e.g. ascending vs
-    descending order-by — must not share keys)."""
+    descending order-by — must not share keys).
+
+    Memoized on the circuit (``Circuit._shape_digest``, invalidated by every
+    structural mutation): the SHA-256 over all fixed-column bytes is paid
+    once per circuit object, not on every cache lookup."""
+    if circuit._shape_digest is not None:
+        return circuit._shape_digest
     h = hashlib.sha256()
     h.update(repr(circuit.digest_seed()).encode())
     for name, col in zip(circuit.fixed_names, circuit.fixed_cols):
@@ -68,7 +82,8 @@ def circuit_shape_digest(circuit: Circuit) -> str:
     for g in circuit.gps:
         h.update(repr((g.name, g.c1_tuple, g.c2_tuple, g.sel1,
                        g.sel2)).encode() + b"\1")
-    return h.hexdigest()
+    circuit._shape_digest = h.hexdigest()
+    return circuit._shape_digest
 
 
 @dataclass
@@ -138,15 +153,16 @@ class ProofBundle:
         return sum(s.proof.timings.get("total", 0.0) for s in self.steps)
 
     def to_bytes(self) -> bytes:
-        return pickle.dumps(self, protocol=pickle.HIGHEST_PROTOCOL)
+        """Canonical wire bytes (versioned + deterministic; never pickle)."""
+        return wire.encode_bundle(self)
 
     @staticmethod
     def from_bytes(raw: bytes) -> "ProofBundle":
-        # NOTE: pickle is a placeholder wire format for the repro — fine for
-        # benchmarks and tests, not for hostile input.
-        bundle = pickle.loads(raw)
-        assert isinstance(bundle, ProofBundle)
-        return bundle
+        """Decode canonical wire bytes.  Any malformed input — truncation,
+        bad tags, oversized lengths, wrong dtypes, legacy pickle bytes, a
+        mismatched wire version — raises :class:`WireFormatError`; nothing
+        attacker-controlled is ever executed."""
+        return wire.decode_bundle(raw)
 
 
 def _values_equal(a, b) -> bool:
@@ -164,26 +180,27 @@ class ZKGraphSession:
     """Owns commitments + keygen cache; proves and verifies query bundles."""
 
     def __init__(self, db=None, cfg: pv.ProverConfig = None,
-                 commitments: dict = None):
+                 commitments: CommitmentManifest = None):
         self.db = db
         self.cfg = cfg or pv.ProverConfig()
         self._commitments = commitments
         self.cache = KeygenCache()
 
     @classmethod
-    def verifier(cls, commitments: dict, cfg: pv.ProverConfig = None):
-        """A verifier-side session: published commitments, no database."""
+    def verifier(cls, commitments: CommitmentManifest,
+                 cfg: pv.ProverConfig = None):
+        """A verifier-side session: the published manifest, no database."""
         return cls(db=None, cfg=cfg, commitments=commitments)
 
     # -- owner side ---------------------------------------------------------
     @property
-    def commitments(self) -> dict:
+    def commitments(self) -> CommitmentManifest:
         if self._commitments is None:
             self._commitments = self.publish()
         return self._commitments
 
-    def publish(self) -> dict:
-        """(Re)compute the owner's dataset commitments."""
+    def publish(self) -> CommitmentManifest:
+        """(Re)compute the owner's commitment manifest (roots + geometry)."""
         assert self.db is not None, "publishing requires the database"
         self._commitments = commit.publish_commitments(self.db, self.cfg)
         return self._commitments
@@ -204,19 +221,42 @@ class ZKGraphSession:
         return ProofBundle(qname, dict(params), steps, run.result, self.cfg)
 
     # -- verifier side ------------------------------------------------------
-    def verify(self, bundle: ProofBundle, commitments: dict = None) -> bool:
-        """Check every step proof, its dataset-root binding, the chained
-        intermediate tables, and the claimed result.
+    def verify_bytes(self, raw: bytes,
+                     commitments: CommitmentManifest = None) -> bool:
+        """Decode + verify a serialized bundle; malformed bytes (including
+        legacy pickle and version-mismatched encodings) are simply invalid —
+        ``False``, never a crash, never code execution."""
+        try:
+            bundle = ProofBundle.from_bytes(raw)
+        except WireFormatError:
+            return False
+        return self.verify(bundle, commitments)
 
-        Base tables MUST match a published commitment (missing => raise);
-        only ``data_desc == "chained"`` roots are recomputed, and then from
-        the *verifier's own* re-derivation of the previous steps' outputs,
-        never from prover-supplied data.
+    def verify(self, bundle: ProofBundle,
+               commitments: CommitmentManifest = None) -> bool:
+        """Check every step proof, its dataset-root binding, the published
+        circuit geometry, the chained intermediate tables, and the claimed
+        result.
+
+        Base tables MUST match a published commitment (missing => raise) and
+        their declared circuit geometry MUST match the published manifest
+        (``manifest_pins`` + published-size membership) — neither is ever
+        taken from prover-supplied data.  Only ``data_desc == "chained"``
+        roots are recomputed, and then from the *verifier's own*
+        re-derivation of the previous steps' outputs.
         """
         comms = commitments if commitments is not None else self.commitments
+        if not isinstance(comms, CommitmentManifest):
+            raise TypeError(
+                "verification requires the owner's CommitmentManifest "
+                "(publish_commitments); a bare root dict has no published "
+                "geometry to pin circuit shapes against")
         if bundle.cfg != self.cfg:
             return False    # proof parameters below the session's policy
-        plan = ir.build_plan(bundle.query)
+        try:
+            plan = ir.build_plan(bundle.query)
+        except KeyError:
+            return False    # unknown query name = invalid bundle
         if len(plan.nodes) != len(bundle.steps):
             return False
         env = ir.Env(dict(bundle.params))
@@ -230,6 +270,10 @@ class ZKGraphSession:
                 desc = ad.data_desc(node)       # the PLAN's binding, never
                 if rec.data_desc != desc:       # the bundle's claim
                     return False
+                try:                            # one schema check, shared
+                    wire.check_shape_schema(rec.kind, rec.shape)
+                except WireFormatError:         # with the wire decoder:
+                    return False                # exact keys, bool is not int
                 for k, v in ad.shape_flags(node).items():
                     if rec.shape.get(k) != v:   # semantic circuit flags are
                         return False            # pinned by the plan node
@@ -243,14 +287,19 @@ class ZKGraphSession:
                     if ad.shape(None, node, env) != rec.shape:
                         return False
                     cols = ad.chained_cols(node, env)
-                    expected = commit.data_root(cols, n_rows, self.cfg)
+                    expected = commit.data_root(cols, n_rows, self.cfg,
+                                                desc="chained")
                 else:
-                    key = (desc, n_rows)
-                    if key not in comms:
-                        raise MissingCommitmentError(
-                            f"no published commitment for base table "
-                            f"{desc!r} at {n_rows} rows")
-                    expected = comms[key]
+                    # base tables: full circuit geometry is pinned against
+                    # the PUBLISHED manifest (missing tables raise; tampered
+                    # geometry over a published table is just invalid)
+                    geo = comms.geometry(desc)
+                    if n_rows not in geo.sizes:
+                        return False
+                    pins = ad.manifest_pins(node, env, comms, geo)
+                    if any(rec.shape.get(k) != v for k, v in pins.items()):
+                        return False
+                    expected = comms.root(desc, n_rows)
                 op = self.cache.ensure(
                     registry.build_operator(rec.kind, rec.shape), self.cfg)
                 # the instance's public inputs must be the CLAIMED query's

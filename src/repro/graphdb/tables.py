@@ -11,15 +11,21 @@ import numpy as np
 
 from .storage import GraphDB
 
-BASE_TABLES: dict = {}   # desc -> fn(db) -> (n_cols, n) int64 column matrix
+BASE_TABLES: dict = {}     # desc -> fn(db) -> (n_cols, n) int64 column matrix
+TABLE_COLUMNS: dict = {}   # desc -> tuple of column names (the public layout)
 
 
-def register_table(desc: str):
-    """Register a column-layout function under a table descriptor."""
+def register_table(desc: str, columns=()):
+    """Register a column-layout function under a table descriptor.
+
+    ``columns`` names the layout's columns; it is published in the
+    commitment manifest so a verifier knows the committed column order
+    without trusting the prover's bundle."""
     def deco(fn):
         if desc in BASE_TABLES:
             raise KeyError(f"table descriptor {desc!r} already registered")
         BASE_TABLES[desc] = fn
+        TABLE_COLUMNS[desc] = tuple(columns)
         return fn
     return deco
 
@@ -38,74 +44,79 @@ def all_table_descs():
     return tuple(sorted(BASE_TABLES))
 
 
+def table_columns(desc: str) -> tuple:
+    """Registered column names for a descriptor ('' entries if unnamed)."""
+    return TABLE_COLUMNS.get(desc, ())
+
+
 # ---------------------------------------------------------------------------
 # the LDBC SNB layouts the seed queries use
 # ---------------------------------------------------------------------------
 COMMENT_ID_BASE = 1 << 20
 
 
-@register_table("knows")
+@register_table("knows", columns=("src", "dst"))
 def _knows(db):
     t = db.tables["person_knows_person"]
     return np.stack([t.src, t.dst])
 
 
-@register_table("knows_date")
+@register_table("knows_date", columns=("src", "dst", "creationDate"))
 def _knows_date(db):
     t = db.tables["person_knows_person"]
     return np.stack([t.src, t.dst, t.props["creationDate"]])
 
 
-@register_table("hasCreator")
+@register_table("hasCreator", columns=("comment", "person"))
 def _has_creator(db):
     t = db.tables["comment_hasCreator_person"]
     return np.stack([t.src, t.dst])
 
 
-@register_table("hasCreator_date")
+@register_table("hasCreator_date", columns=("comment", "person", "creationDate"))
 def _has_creator_date(db):
     t = db.tables["comment_hasCreator_person"]
     return np.stack([t.src, t.dst, t.props["creationDate"]])
 
 
-@register_table("replyOf")
+@register_table("replyOf", columns=("reply", "parent"))
 def _reply_of(db):
     t = db.tables["comment_replyOf_comment"]
     return np.stack([t.src, t.dst])
 
 
-@register_table("hasCreator_rev")
+@register_table("hasCreator_rev", columns=("person", "comment"))
 def _has_creator_rev(db):
     t = db.tables["comment_hasCreator_person"]
     return np.stack([t.dst, t.src])
 
 
-@register_table("replyOf_rev")
+@register_table("replyOf_rev", columns=("parent", "reply"))
 def _reply_of_rev(db):
     t = db.tables["comment_replyOf_comment"]
     return np.stack([t.dst, t.src])
 
 
-@register_table("comment_date")
+@register_table("comment_date", columns=("comment", "creationDate"))
 def _comment_date(db):
     ids = np.arange(len(db.node_props["comment"]["creationDate"])) + \
         COMMENT_ID_BASE
     return np.stack([ids, db.node_props["comment"]["creationDate"]])
 
 
-@register_table("comment_content_date")
+@register_table("comment_content_date", columns=("comment", "content", "creationDate"))
 def _comment_content_date(db):
     cp = db.node_props["comment"]
     ids = np.arange(len(cp["creationDate"])) + COMMENT_ID_BASE
     return np.stack([ids, cp["content"], cp["creationDate"]])
 
 
-@register_table("person_firstName")
+@register_table("person_firstName", columns=("person", "firstName"))
 def _person_first_name(db):
     return np.stack([db.node_ids, db.node_props["person"]["firstName"]])
 
 
-@register_table("knows_nodes")
+@register_table("knows_nodes", columns=("src", "dst", "node"))
 def _knows_nodes(db):
     t = db.tables["person_knows_person"]
     cols = np.zeros((3, max(len(t), db.n_nodes)), np.int64)

@@ -1,0 +1,41 @@
+"""Shared tier-1 fixtures.
+
+One session-scoped LDBC instance + one tiny ProverConfig + one proven bundle
+are shared across test modules, so the default (fast) tier-1 run pays for db
+generation, commitment publication, and an end-to-end IS5 prove exactly once.
+Long end-to-end chains are marked ``slow``; the default run excludes them
+(``pytest.ini`` addopts) and ``pytest -m ""`` runs everything.
+"""
+import pytest
+
+from repro.core import prover as pv
+from repro.core.session import ZKGraphSession
+from repro.graphdb import ldbc
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    """Smallest fast ProverConfig the circuits accept: keygen/FRI in ms."""
+    return pv.ProverConfig(blowup=4, n_queries=4, fri_final_size=16)
+
+
+@pytest.fixture(scope="session")
+def db():
+    return ldbc.generate(n_knows=96, n_persons=24, n_comments=64, seed=11)
+
+
+@pytest.fixture(scope="session")
+def owner(db, tiny_cfg):
+    """Owner-side session; publishing the manifest happens once per run."""
+    return ZKGraphSession(db, tiny_cfg)
+
+
+@pytest.fixture(scope="session")
+def bundle(owner):
+    """One proven IS5 bundle, shared by serialization/verification tests."""
+    return owner.prove("IS5", dict(message=(1 << 20) + 7))
+
+
+@pytest.fixture(scope="session")
+def verifier(owner, tiny_cfg):
+    return ZKGraphSession.verifier(owner.commitments, tiny_cfg)

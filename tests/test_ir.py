@@ -5,19 +5,11 @@ import numpy as np
 import pytest
 
 from repro.core import ir
-from repro.core import prover as pv
 from repro.core.operators import registry
 from repro.core.operators.common import check_constraints
 from repro.core.session import ProofBundle, ZKGraphSession
 from repro.graphdb import engine, ldbc
 from repro.graphdb.tables import COMMENT_ID_BASE
-
-FAST = pv.ProverConfig(blowup=4, n_queries=8, fri_final_size=16)
-
-
-@pytest.fixture(scope="module")
-def db():
-    return ldbc.generate(n_knows=96, n_persons=24, n_comments=64, seed=11)
 
 
 def qparams(db, qname):
@@ -193,10 +185,9 @@ def test_ic1_isolated_person_returns_no_real_person():
 # chained intermediates are bound end-to-end
 # ---------------------------------------------------------------------------
 @pytest.fixture(scope="module")
-def proven_is3(db):
-    owner = ZKGraphSession(db, FAST)
+def proven_is3(owner, tiny_cfg):
     bundle = owner.prove("IS3", dict(person=3))
-    verifier = ZKGraphSession.verifier(owner.commitments, FAST)
+    verifier = ZKGraphSession.verifier(owner.commitments, tiny_cfg)
     assert verifier.verify(bundle)
     return bundle, verifier
 

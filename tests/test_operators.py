@@ -23,6 +23,7 @@ def db():
 # ---------------------------------------------------------------------------
 # single-source expansion, edge-list
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 def test_expand_edge_list_complete_and_prove(db):
     t = db.tables["person_knows_person"]
     src_id = int(t.src[0])

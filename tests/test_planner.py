@@ -55,6 +55,7 @@ def test_ic13_distance_matches_engine(db):
     assert run.result["distance"] == want
 
 
+@pytest.mark.slow
 def test_full_chain_prove_verify(db):
     run = planner.plan_query(db, "IS5", dict(message=(1 << 20) + 7))
     proofs = planner.prove_query(run, FAST)

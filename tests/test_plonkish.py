@@ -51,6 +51,7 @@ def _fib_witness(c, steps, tamper=False):
     return advice, instance
 
 
+@pytest.mark.slow
 def test_fibonacci_completeness():
     c, steps = _fib_circuit()
     keys = pv.keygen(c, CFG)

@@ -1,5 +1,6 @@
 """Session-API tests: prove/verify bundles, the keygen cache, bundle
-serialization, and the base-table commitment soundness fix."""
+serialization, the base-table commitment soundness fix, and the
+manifest-pinned circuit geometry (shared fixtures live in conftest.py)."""
 import warnings
 
 import numpy as np
@@ -7,38 +8,18 @@ import pytest
 
 from repro.core import planner
 from repro.core import prover as pv
+from repro.core.commit import CommitmentManifest
 from repro.core.session import (KeygenCache, MissingCommitmentError,
                                 ProofBundle, ZKGraphSession,
                                 circuit_shape_digest)
 from repro.graphdb import ldbc
-
-FAST = pv.ProverConfig(blowup=4, n_queries=8, fri_final_size=16)
-
-
-@pytest.fixture(scope="module")
-def db():
-    return ldbc.generate(n_knows=96, n_persons=24, n_comments=64, seed=11)
-
-
-@pytest.fixture(scope="module")
-def owner(db):
-    return ZKGraphSession(db, FAST)
-
-
-@pytest.fixture(scope="module")
-def bundle(owner):
-    return owner.prove("IS5", dict(message=(1 << 20) + 7))
-
-
-@pytest.fixture(scope="module")
-def verifier(owner):
-    return ZKGraphSession.verifier(owner.commitments, FAST)
 
 
 def test_prove_verify_roundtrip(bundle, verifier):
     assert verifier.verify(bundle)
 
 
+@pytest.mark.slow
 def test_ic1_chain_verifies(db, owner, verifier):
     """IC1 exercises every adapter kind incl. the NameFilter chained step."""
     name = int(db.node_props["person"]["firstName"][0])
@@ -52,9 +33,10 @@ def test_bundle_serialization_roundtrip(bundle, verifier):
     assert verifier.verify(rt)
 
 
-def test_wrong_dataset_rejected(bundle, verifier):
+@pytest.mark.slow
+def test_wrong_dataset_rejected(bundle, verifier, tiny_cfg):
     db2 = ldbc.generate(n_knows=96, n_persons=24, n_comments=64, seed=99)
-    bad = ZKGraphSession(db2, FAST).commitments
+    bad = ZKGraphSession(db2, tiny_cfg).commitments
     assert not verifier.verify(bundle, commitments=bad)
 
 
@@ -68,10 +50,11 @@ def test_cfg_mismatch_rejected(bundle, owner):
 # ---------------------------------------------------------------------------
 # keygen cache
 # ---------------------------------------------------------------------------
-def test_keygen_cache_once_per_shape(db):
+@pytest.mark.slow
+def test_keygen_cache_once_per_shape(db, tiny_cfg):
     """Proving the same query twice in one session performs keygen at most
     once per distinct circuit shape (the seed re-ran it per step per query)."""
-    session = ZKGraphSession(db, FAST)
+    session = ZKGraphSession(db, tiny_cfg)
     session.prove("IS5", dict(message=(1 << 20) + 7))
     misses_after_first = session.cache.misses
     assert misses_after_first >= 1
@@ -85,7 +68,7 @@ def test_keygen_cache_once_per_shape(db):
     assert len(session.cache.entries) == entries
 
 
-def test_shape_digest_separates_circuits(db):
+def test_shape_digest_separates_circuits(tiny_cfg):
     from repro.core.operators import registry
     a = registry.build_operator("expand", dict(
         n_rows=32, m_edges=20, with_prop=False, reverse=False))
@@ -98,78 +81,96 @@ def test_shape_digest_separates_circuits(db):
     assert circuit_shape_digest(a.circuit) == circuit_shape_digest(d.circuit)
     assert circuit_shape_digest(a.circuit) != circuit_shape_digest(c.circuit)
     cache = KeygenCache()
-    cache.ensure(a, FAST)
-    cache.ensure(b, FAST)       # different circuit name -> miss
-    cache.ensure(c, FAST)       # different fixed columns -> miss
-    cache.ensure(d, FAST)       # identical shape -> hit
+    cache.ensure(a, tiny_cfg)
+    cache.ensure(b, tiny_cfg)   # different circuit name -> miss
+    cache.ensure(c, tiny_cfg)   # different fixed columns -> miss
+    cache.ensure(d, tiny_cfg)   # identical shape -> hit
     assert cache.stats() == dict(hits=1, misses=3, entries=3)
     assert d.keys is a.keys
+
+
+def test_shape_digest_memoized_and_invalidated():
+    """The SHA-256 over all fixed-column bytes is paid once per circuit;
+    structural mutations (e.g. keygen's __row0 column) invalidate the memo
+    so the digest never goes stale."""
+    from repro.core.operators import registry
+    op = registry.build_operator("expand", dict(
+        n_rows=32, m_edges=20, with_prop=False, reverse=False))
+    c = op.circuit
+    first = circuit_shape_digest(c)
+    assert c._shape_digest == first          # memo populated
+    assert circuit_shape_digest(c) == first  # hit returns identical value
+    c.add_fixed("extra", np.arange(4))
+    assert c._shape_digest is None           # mutation invalidates
+    assert circuit_shape_digest(c) != first  # and the digest really differs
 
 
 # ---------------------------------------------------------------------------
 # soundness: base tables must be bound to *published* commitments
 # ---------------------------------------------------------------------------
 def test_missing_base_commitment_raises(bundle, owner, verifier):
-    partial = {k: v for k, v in owner.commitments.items()
-               if k[0] != "hasCreator"}
+    partial = owner.commitments.drop("hasCreator")
     with pytest.raises(MissingCommitmentError):
         verifier.verify(bundle, commitments=partial)
 
 
-def test_legacy_verify_missing_commitment_fails(db):
+def test_verify_requires_manifest(bundle, owner, verifier):
+    """A bare {(desc, n_rows): root} dict has no published geometry, so the
+    verifier refuses it loudly instead of silently skipping the shape pins."""
+    with pytest.raises(TypeError):
+        verifier.verify(bundle, commitments=dict(owner.commitments.items()))
+
+
+@pytest.mark.slow
+def test_legacy_verify_missing_commitment_fails(db, tiny_cfg):
     """The seed silently recomputed a missing base-table root from
     prover-supplied data — which accepts proofs over a *never-published*
     dataset. It must reject instead."""
     with warnings.catch_warnings():
         warnings.simplefilter("ignore", DeprecationWarning)
         run = planner.plan_query(db, "IS5", dict(message=(1 << 20) + 7))
-        proofs = planner.prove_query(run, FAST)
-        commitments = planner.publish_commitments(db, FAST)
-        assert planner.verify_query(run, proofs, commitments, FAST)
+        proofs = planner.prove_query(run, tiny_cfg)
+        commitments = planner.publish_commitments(db, tiny_cfg)
+        assert planner.verify_query(run, proofs, commitments, tiny_cfg)
         partial = {k: v for k, v in commitments.items()
                    if k[0] != "hasCreator"}
-        assert not planner.verify_query(run, proofs, partial, FAST)
+        assert not planner.verify_query(run, proofs, partial, tiny_cfg)
         # chained steps stay verifiable without a published entry
         run3 = planner.plan_query(db, "IS3", dict(person=3))
-        proofs3 = planner.prove_query(run3, FAST)
-        assert planner.verify_query(run3, proofs3, commitments, FAST)
+        proofs3 = planner.prove_query(run3, tiny_cfg)
+        assert planner.verify_query(run3, proofs3, commitments, tiny_cfg)
         # a truncated (or empty) proof list must not pass by zip-truncation
-        assert not planner.verify_query(run3, proofs3[:1], commitments, FAST)
-        assert not planner.verify_query(run3, [], commitments, FAST)
+        assert not planner.verify_query(run3, proofs3[:1], commitments,
+                                        tiny_cfg)
+        assert not planner.verify_query(run3, [], commitments, tiny_cfg)
 
 
-def test_data_desc_substitution_rejected(db, verifier):
+def test_data_desc_substitution_rejected(bundle, owner, verifier):
     """A prover must not relabel a step's base table to another published
     descriptor with the same layout: the verifier binds the commitment
     lookup to the PLAN's table, not the bundle's claim."""
-    owner = ZKGraphSession(db, FAST)
-    b = owner.prove("IS5", dict(message=(1 << 20) + 7))
-    clone = ProofBundle.from_bytes(b.to_bytes())
+    clone = ProofBundle.from_bytes(bundle.to_bytes())
     clone.steps[0].data_desc = "knows"     # same 2-col layout as hasCreator
     assert not verifier.verify(clone, commitments=owner.commitments)
 
 
-def test_shape_flag_flip_rejected(db, verifier):
+def test_shape_flag_flip_rejected(bundle, owner, verifier):
     """Semantic circuit flags on base-table steps are pinned by the plan
     node: flipping e.g. `reverse` in the declared shape must be rejected
     before any proof is checked."""
-    owner = ZKGraphSession(db, FAST)
-    b = owner.prove("IS5", dict(message=(1 << 20) + 7))
-    clone = ProofBundle.from_bytes(b.to_bytes())
+    clone = ProofBundle.from_bytes(bundle.to_bytes())
     clone.steps[0].shape = dict(clone.steps[0].shape, reverse=True)
     assert not verifier.verify(clone, commitments=owner.commitments)
 
 
-def test_param_substitution_rejected(db, verifier):
+def test_param_substitution_rejected(bundle, owner, verifier):
     """A bundle that claims different query params than were proven must be
     rejected: the verifier pins the instance's public inputs (id_s, id sets,
     targets) to the plan-resolved bindings."""
-    owner = ZKGraphSession(db, FAST)
-    b = owner.prove("IS5", dict(message=(1 << 20) + 7))
-    claimed_other = ProofBundle.from_bytes(b.to_bytes())
+    claimed_other = ProofBundle.from_bytes(bundle.to_bytes())
     claimed_other.params = dict(message=(1 << 20) + 8)
     assert not verifier.verify(claimed_other, commitments=owner.commitments)
-    no_params = ProofBundle.from_bytes(b.to_bytes())
+    no_params = ProofBundle.from_bytes(bundle.to_bytes())
     no_params.params = {}
     assert not verifier.verify(no_params, commitments=owner.commitments)
 
@@ -180,14 +181,93 @@ def test_step_count_mismatch_rejected(bundle, verifier):
     assert not verifier.verify(clone)
 
 
-def test_chained_shape_must_match_rederivation(db, owner):
+@pytest.mark.slow
+def test_chained_shape_must_match_rederivation(db, owner, tiny_cfg):
     """A prover who lies about a chained step's circuit geometry (e.g. a
     shrunken input region that drops rows) is rejected before proof check."""
     b3 = owner.prove("IS3", dict(person=3))
-    verifier = ZKGraphSession.verifier(owner.commitments, FAST)
+    verifier = ZKGraphSession.verifier(owner.commitments, tiny_cfg)
     assert verifier.verify(b3)
     clone = ProofBundle.from_bytes(b3.to_bytes())
     rec = clone.steps[2]            # the chained order-by step
     assert rec.data_desc == "chained"
     rec.shape = dict(rec.shape, m_in=max(1, rec.shape["m_in"] - 1))
     assert not verifier.verify(clone)
+
+
+# ---------------------------------------------------------------------------
+# soundness: base-table circuit geometry is pinned by the PUBLISHED manifest
+# ---------------------------------------------------------------------------
+def test_manifest_pins_base_table_n_rows(bundle, verifier, owner):
+    """A base-table step that declares a different n_rows than the manifest
+    implies — even one the owner also published a root at — must fail:
+    geometry comes from the manifest, never from the bundle."""
+    clone = ProofBundle.from_bytes(bundle.to_bytes())
+    rec = clone.steps[0]
+    bigger = rec.shape["n_rows"] * 2
+    assert ("hasCreator", bigger) in owner.commitments   # root IS published
+    rec.shape = dict(rec.shape, n_rows=bigger)
+    assert not verifier.verify(clone)
+
+
+def test_manifest_pins_base_table_m_edges(bundle, verifier):
+    """m_edges bounds the circuit's selector regions; shrinking or growing
+    it against the published row count must fail before proof check."""
+    for delta in (-1, +1):
+        clone = ProofBundle.from_bytes(bundle.to_bytes())
+        rec = clone.steps[0]
+        rec.shape = dict(rec.shape, m_edges=rec.shape["m_edges"] + delta)
+        assert not verifier.verify(clone)
+
+
+def test_manifest_pins_sssp_geometry(db, owner, tiny_cfg):
+    """SSSP's n_nodes (the BiRC node universe) and edge count are pinned by
+    the manifest: shrinking the node universe would let a prover hide
+    reachable nodes behind the padding region."""
+    b13 = owner.prove("IC13", dict(person1=1, person2=9))
+    verifier = ZKGraphSession.verifier(owner.commitments, tiny_cfg)
+    assert verifier.verify(b13)
+    for field, delta in (("n_nodes", -1), ("n_nodes", +1), ("m_edges", -1)):
+        clone = ProofBundle.from_bytes(b13.to_bytes())
+        rec = clone.steps[0]
+        rec.shape = dict(rec.shape, **{field: rec.shape[field] + delta})
+        assert not verifier.verify(clone), (field, delta)
+
+
+def test_manifest_shape_schema_enforced(bundle, verifier):
+    """Unknown shape keys and bool/int confusion are rejected up front."""
+    extra = ProofBundle.from_bytes(bundle.to_bytes())
+    extra.steps[0].shape = dict(extra.steps[0].shape, n_rows_extra=64)
+    assert not verifier.verify(extra)
+    retyped = ProofBundle.from_bytes(bundle.to_bytes())
+    retyped.steps[0].shape = dict(retyped.steps[0].shape, with_prop=0)
+    assert not verifier.verify(retyped)
+
+
+def test_data_root_size_mismatch_is_diagnosable(tiny_cfg):
+    """An over-wide column matrix must fail with the descriptor + sizes in
+    the message (the error an honest owner hits when table_sizes and an
+    operator's shape disagree), not an opaque broadcasting ValueError."""
+    from repro.core import commit
+    cols = np.zeros((2, 100), np.int64)
+    with pytest.raises(ValueError, match=r"hasCreator.*100 rows.*n_rows=64"):
+        commit.data_root(cols, 64, tiny_cfg, desc="hasCreator")
+    with pytest.raises(ValueError, match=r"2-d"):
+        commit.data_root(np.zeros(8, np.int64), 64, tiny_cfg)
+
+
+def test_manifest_structure(owner, db):
+    """The published manifest carries the full trusted geometry."""
+    m = owner.commitments
+    assert isinstance(m, CommitmentManifest)
+    assert m.n_nodes == db.n_nodes
+    geo = m.geometry("knows")
+    t = db.tables["person_knows_person"]
+    assert geo.n_table_rows == len(t)
+    assert geo.n_cols == 2
+    assert geo.columns == ("src", "dst")
+    for n_rows in geo.sizes:
+        assert ("knows", n_rows) in m
+    assert m.edge_count("person_knows_person") == len(t)
+    # legacy mapping interface stays intact for the deprecated planner path
+    assert len(dict(m.items())) == len(m)

@@ -84,6 +84,7 @@ _SUBPROC = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_train_and_decode_on_8_device_mesh():
     out = subprocess.run([sys.executable, "-c", _SUBPROC], cwd="/root/repo",
                          capture_output=True, text=True, timeout=600,
