@@ -316,6 +316,76 @@ def wire_codec(rows: int = 1024):
 
 
 # ---------------------------------------------------------------------------
+# transparency: manifest codec + digest + log append / proof timings
+# ---------------------------------------------------------------------------
+def transparency_bench(rows: int = 1024):
+    """Perf trajectory of the publication path (repro.core.transparency):
+    canonical manifest encode/decode/digest, transparency-log appends at
+    growing log sizes, and inclusion/consistency proof generate+verify.
+    Emits ``BENCH_transparency.json``."""
+    import json
+
+    from repro.core.commit import CommitmentManifest
+    from repro.core import transparency as tl
+
+    db = db_with_rows(rows)
+    session = ZKGraphSession(db, BENCH_CFG)
+    manifest = session.commitments
+    raw, enc_us = timed(manifest.to_bytes)
+    m2, dec_us = timed(CommitmentManifest.from_bytes, raw)
+    assert m2.to_bytes() == raw                     # canonical round trip
+    tl.manifest_digest(raw)                         # warm the sponge jit
+    digest, dig_us = timed(tl.manifest_digest, raw)
+    records = dict(manifest_bytes=len(raw), encode_us=round(enc_us, 1),
+                   decode_us=round(dec_us, 1), digest_us=round(dig_us, 1))
+    yield ("transparency/manifest/encode", enc_us, f"bytes={len(raw)}")
+    yield ("transparency/manifest/decode", dec_us, "")
+    yield ("transparency/manifest/digest", dig_us,
+           f"roots={len(manifest.roots)}")
+
+    # append cost vs log size: O(log n) compressions thanks to subtree memo
+    log = tl.TransparencyLog("bench-log")
+    appends = {}
+    next_mark = 1
+    for i in range(64):
+        entry = raw + i.to_bytes(8, "little")       # 64 manifest revisions
+        if i + 1 == next_mark:
+            cp, t_us = timed(log.append, entry)
+            appends[i + 1] = round(t_us, 1)
+            yield (f"transparency/log/append_at_{i + 1}", t_us,
+                   f"tree_size={cp.tree_size}")
+            next_mark *= 2
+        else:
+            log.append(entry)
+    records["append_us_by_size"] = appends
+
+    cp = log.checkpoint()
+    pf, inc_us = timed(log.inclusion_proof, 17)
+    leaf = tl.manifest_digest(log.entry(17))
+    ok, incv_us = timed(tl.verify_inclusion, cp, pf, leaf)
+    assert ok
+    yield ("transparency/inclusion/prove", inc_us,
+           f"path_nodes={pf.path.shape[0]}")
+    yield ("transparency/inclusion/verify", incv_us, "")
+    old_cp = log.checkpoint(21)
+    cpf, con_us = timed(log.consistency_proof, 21)
+    ok, conv_us = timed(tl.verify_consistency, old_cp, cp, cpf)
+    assert ok
+    yield ("transparency/consistency/prove", con_us,
+           f"path_nodes={cpf.path.shape[0]}")
+    yield ("transparency/consistency/verify", conv_us, "")
+    records.update(
+        inclusion_prove_us=round(inc_us, 1),
+        inclusion_verify_us=round(incv_us, 1),
+        consistency_prove_us=round(con_us, 1),
+        consistency_verify_us=round(conv_us, 1), log_size=log.size)
+    with open("BENCH_transparency.json", "w") as f:
+        json.dump(dict(rows=rows, results=records), f, indent=2,
+                  sort_keys=True)
+    yield ("transparency/BENCH_transparency.json", 0.0, f"log_size={log.size}")
+
+
+# ---------------------------------------------------------------------------
 # Fig 8: scalability with database size
 # ---------------------------------------------------------------------------
 def fig8():
@@ -337,4 +407,5 @@ def fig8():
 
 ALL = {"table1": table1, "table2": table2, "table3": table3, "fig6a": fig6a,
        "fig6b": fig6b, "table4": table4, "fig7": fig7, "fig8": fig8,
-       "cachewin": cachewin, "wire": wire_codec}
+       "cachewin": cachewin, "wire": wire_codec,
+       "transparency": transparency_bench}

@@ -1,0 +1,27 @@
+"""Extract and execute the README quickstart code block.
+
+The CI docs job runs this (``python docs/run_quickstart.py`` from the repo
+root), so the snippet users copy-paste is executed verbatim on every push —
+documentation that stops running fails the build instead of rotting.
+"""
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def main():
+    readme = (ROOT / "README.md").read_text()
+    match = re.search(r"```python\n(.*?)```", readme, re.S)
+    if not match:
+        sys.exit("README.md has no ```python quickstart block")
+    code = match.group(1)
+    sys.path.insert(0, str(ROOT / "src"))
+    print("-- executing README quickstart --")
+    exec(compile(code, "README.md#quickstart", "exec"), {"__name__": "readme"})
+    print("-- README quickstart OK --")
+
+
+if __name__ == "__main__":
+    main()

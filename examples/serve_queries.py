@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import prover as pv
 from repro.core.session import ZKGraphSession
+from repro.core.transparency import TransparencyLog, verify_consistency
 from repro.graphdb import ldbc
 from repro.train.fault import FaultController, FaultConfig
 
@@ -57,7 +58,16 @@ def main(argv=None, n_knows=128, n_persons=24, cfg=CFG):
 
     db = ldbc.generate(n_knows=n_knows, n_persons=n_persons, seed=3)
     session = ZKGraphSession(db, cfg)
-    verifier = ZKGraphSession.verifier(session.commitments, cfg)
+    # the owner publishes the manifest on an append-only transparency log;
+    # the verifier bootstraps its ENTIRE trust root from the checkpoint +
+    # inclusion proof + manifest bytes — no in-process object is trusted
+    log = TransparencyLog("zkgraph-serve-log")
+    checkpoint, inclusion, manifest_bytes = session.publish_to(log)
+    print(f"manifest published: {len(manifest_bytes)} bytes -> "
+          f"log {checkpoint.origin!r} size {checkpoint.tree_size}")
+    verifier = ZKGraphSession.verifier(
+        cfg=cfg, checkpoint=checkpoint, inclusion=inclusion,
+        manifest_bytes=manifest_bytes)
     queue = query_queue(db, args.queries)
     done = {}
     if os.path.exists(STATE):
@@ -90,6 +100,15 @@ def main(argv=None, n_knows=128, n_persons=24, cfg=CFG):
     stats = session.cache.stats()
     print(f"served {len(done)} verified queries, batch wall {wall:.1f}s; "
           f"keygen cache: {stats['misses']} keygens, {stats['hits']} reuses")
+    # a manifest revision appends a NEW leaf; clients holding the old
+    # checkpoint verify the log only grew (equivocation would fail this)
+    new_cp, _, _ = session.publish_to(log)
+    ok = verify_consistency(checkpoint, new_cp,
+                            log.consistency_proof(checkpoint.tree_size,
+                                                  new_cp.tree_size))
+    print(f"log grew {checkpoint.tree_size} -> {new_cp.tree_size}, "
+          f"append-only consistency verified: {ok}")
+    assert ok
     if os.path.exists(STATE):
         os.remove(STATE)
 

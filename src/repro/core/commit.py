@@ -102,12 +102,43 @@ class CommitmentManifest(Mapping):
     planner path, benchmarks) keep working; new code uses :meth:`root` /
     :meth:`geometry`, which fail closed with
     :class:`MissingCommitmentError`.
+
+    :meth:`to_bytes` is the canonical wire encoding (payload kind 4 of
+    :mod:`repro.core.wire`, spec in ``docs/protocol.md`` §4) — the bytes the
+    owner publishes on a transparency log — and :meth:`digest` is the leaf
+    hash of those bytes, the value every :class:`ProofBundle` proven against
+    this manifest carries and the verifier pins.
     """
     version: int
     n_nodes: int            # node-universe size (pins SSSP's n_nodes)
     edge_counts: dict       # GraphDB edge-table name -> true row count
     tables: dict            # desc -> TableGeometry
     roots: dict = dc_field(default_factory=dict)  # (desc, n_rows) -> root
+    _digest: object = dc_field(default=None, repr=False, compare=False)
+
+    # -- canonical serialization + digest -----------------------------------
+    def to_bytes(self) -> bytes:
+        """Canonical, deterministic wire bytes (``encode(decode(b)) == b``);
+        what a transparency log stores as one leaf."""
+        from . import wire
+        return wire.encode_manifest(self)
+
+    @staticmethod
+    def from_bytes(raw: bytes) -> "CommitmentManifest":
+        """Decode canonical manifest bytes; any malformed / non-canonical /
+        version-skewed input raises :class:`~repro.core.wire.WireFormatError`."""
+        from . import wire
+        return wire.decode_manifest(raw)
+
+    def digest(self):
+        """The (8,) uint32 manifest digest (transparency-log leaf hash of
+        the canonical bytes).  Memoized: treat a manifest as immutable once
+        published — revisions go through a fresh ``publish_commitments`` and
+        a new log leaf."""
+        if self._digest is None:
+            from . import transparency
+            self._digest = transparency.manifest_digest(self.to_bytes())
+        return self._digest
 
     # -- trusted lookups (fail closed) --------------------------------------
     def geometry(self, desc: str) -> TableGeometry:
@@ -135,12 +166,19 @@ class CommitmentManifest(Mapping):
 
     def drop(self, *descs: str) -> "CommitmentManifest":
         """A copy without the given descriptors (tests / partial deployments:
-        verifying a step over a dropped table raises MissingCommitmentError)."""
+        verifying a step over a dropped table raises MissingCommitmentError).
+
+        The copy keeps the *parent's* digest: a partial deployment still
+        trusts the owner's published manifest — it is merely missing local
+        root material — so digest-pinned bundles fail with
+        MissingCommitmentError (a deployment problem), not a digest mismatch
+        (an authenticity problem)."""
         gone = set(descs)
         return CommitmentManifest(
             self.version, self.n_nodes, dict(self.edge_counts),
             {d: g for d, g in self.tables.items() if d not in gone},
-            {k: v for k, v in self.roots.items() if k[0] not in gone})
+            {k: v for k, v in self.roots.items() if k[0] not in gone},
+            _digest=self.digest())
 
     # -- legacy mapping interface over the roots ----------------------------
     def __getitem__(self, key):

@@ -91,6 +91,26 @@ def compress(left: jnp.ndarray, right: jnp.ndarray) -> jnp.ndarray:
     return permute(state)[..., :DIGEST]
 
 
+def hash_bytes(data: bytes) -> np.ndarray:
+    """Sponge-hash a byte string -> (8,) uint32 BabyBear digest.
+
+    The canonical byte-to-field packing (docs/protocol.md §6): 3 bytes per
+    lane little-endian (values < 2^24 < P), zero-padded to a multiple of 3,
+    with two leading lanes carrying the byte length — so inputs that differ
+    only in trailing zero bytes cannot collide.  This is the digest primitive
+    under ``transparency.manifest_digest`` and the transparency-log leaves.
+    """
+    data = bytes(data)
+    n = len(data)
+    pad = (-n) % 3
+    chunks = np.frombuffer(data + b"\x00" * pad, np.uint8)
+    chunks = chunks.reshape(-1, 3).astype(np.uint32)
+    lanes = chunks[:, 0] | (chunks[:, 1] << 8) | (chunks[:, 2] << 16)
+    head = np.array([n & 0xFFFFFF, n >> 24], np.uint32)
+    row = jnp.asarray(np.concatenate([head, lanes])[None, :])
+    return np.asarray(hash_rows(row)[0])
+
+
 def hash_rows(rows: jnp.ndarray) -> jnp.ndarray:
     """Sponge-hash each row of (..., n, k) field elements -> (..., n, 8).
 

@@ -53,6 +53,17 @@ def open_at(tree: MerkleTree, indices: jnp.ndarray):
     return rows, path
 
 
+def compress_pair(left, right) -> np.ndarray:
+    """Numpy-facing 2-to-1 node hash: (8,), (8,) -> (8,) uint32.
+
+    The internal-node hash of the transparency log (repro.core.transparency)
+    — the same Poseidon compression the proof trees use, so a log verifier
+    needs no second hash implementation."""
+    l = jnp.asarray(left, _U32).reshape(1, 8)
+    r = jnp.asarray(right, _U32).reshape(1, 8)
+    return np.asarray(H.compress(l, r)[0], np.uint32)
+
+
 def verify_open(root, indices, rows, path) -> jnp.ndarray:
     """Vectorized path check. Returns bool scalar (all openings valid)."""
     node = H.hash_rows(rows)                       # (k, 8)

@@ -16,6 +16,18 @@ Verifier side (no database access)::
     verifier = ZKGraphSession.verifier(owner.commitments)
     assert verifier.verify(bundle)
 
+or, bootstrapping the whole trust root from a transparency log
+(:mod:`repro.core.transparency`) instead of an in-process object::
+
+    checkpoint, inclusion, manifest_bytes = owner.publish_to(log)
+    verifier = ZKGraphSession.verifier(
+        checkpoint=checkpoint, inclusion=inclusion,
+        manifest_bytes=manifest_bytes)
+
+Every bundle carries the digest of the canonical manifest encoding it was
+proven against; ``verify`` rejects any bundle whose digest differs from the
+verifier's (checkpoint-authenticated) manifest.
+
 The bundle is self-contained and serializable: per step it carries the
 registry adapter name + circuit shape (so the verifier rebuilds the circuit
 itself), the public instance, the data descriptor, and the proof.  The wire
@@ -145,6 +157,10 @@ class ProofBundle:
     steps: list         # [StepProof]
     result: dict        # claimed query result (re-derived by the verifier)
     cfg: pv.ProverConfig
+    # digest of the canonical CommitmentManifest this bundle was proven
+    # against (transparency-log leaf hash, (8,) uint32); the verifier fails
+    # closed if it does not match the manifest it bootstrapped trust from
+    manifest_digest: np.ndarray = None
 
     def size_fields(self) -> int:
         return sum(s.proof.size_fields() for s in self.steps)
@@ -187,9 +203,39 @@ class ZKGraphSession:
         self.cache = KeygenCache()
 
     @classmethod
-    def verifier(cls, commitments: CommitmentManifest,
-                 cfg: pv.ProverConfig = None):
-        """A verifier-side session: the published manifest, no database."""
+    def verifier(cls, commitments: CommitmentManifest = None,
+                 cfg: pv.ProverConfig = None, *, checkpoint=None,
+                 inclusion=None, manifest_bytes=None):
+        """A verifier-side session: no database, trust root only.
+
+        Two bootstrap modes:
+
+        * ``verifier(manifest)`` — an in-process
+          :class:`~repro.core.commit.CommitmentManifest` obtained out of
+          band (tests, co-located deployments).
+        * ``verifier(checkpoint=cp, inclusion=pf, manifest_bytes=raw)`` —
+          the transparency-log path: the manifest bytes are authenticated
+          against the log checkpoint via the inclusion proof
+          (:func:`repro.core.transparency.bootstrap_manifest`) before
+          anything trusts them; a failed inclusion raises
+          :class:`~repro.core.transparency.TransparencyError`.
+
+        Either way the session pins the manifest digest, and :meth:`verify`
+        rejects any bundle whose ``manifest_digest`` differs.
+        """
+        if checkpoint is not None or inclusion is not None \
+                or manifest_bytes is not None:
+            if commitments is not None:
+                raise TypeError(
+                    "pass either a manifest or a checkpoint bootstrap "
+                    "(checkpoint + inclusion + manifest_bytes), not both")
+            from . import transparency
+            commitments = transparency.bootstrap_manifest(
+                checkpoint, inclusion, manifest_bytes)
+        if commitments is None:
+            raise TypeError(
+                "verifier needs a CommitmentManifest, or a transparency "
+                "checkpoint + inclusion proof + manifest bytes")
         return cls(db=None, cfg=cfg, commitments=commitments)
 
     # -- owner side ---------------------------------------------------------
@@ -205,6 +251,18 @@ class ZKGraphSession:
         self._commitments = commit.publish_commitments(self.db, self.cfg)
         return self._commitments
 
+    def publish_to(self, log) -> tuple:
+        """Publish the manifest on a transparency log.
+
+        Appends the canonical manifest bytes as a new leaf and returns
+        ``(checkpoint, inclusion_proof, manifest_bytes)`` — exactly the
+        bootstrap inputs of :meth:`verifier`, so the owner's publication and
+        the verifier's trust root are the same auditable artifact."""
+        raw = self.commitments.to_bytes()
+        cp = log.append(raw)
+        pf = log.inclusion_proof(cp.tree_size - 1, cp.tree_size)
+        return cp, pf, raw
+
     def run_query(self, qname: str, params: dict) -> ir.QueryRun:
         """Execute a query plan (engine + witnesses), no proving."""
         assert self.db is not None, "query execution requires the database"
@@ -218,7 +276,8 @@ class ZKGraphSession:
             proof = st.op.prove(st.advice, st.instance, st.data)
             steps.append(StepProof(st.kind, st.shape, st.data_desc,
                                    st.instance, proof))
-        return ProofBundle(qname, dict(params), steps, run.result, self.cfg)
+        return ProofBundle(qname, dict(params), steps, run.result, self.cfg,
+                           self.commitments.digest())
 
     # -- verifier side ------------------------------------------------------
     def verify_bytes(self, raw: bytes,
@@ -253,6 +312,13 @@ class ZKGraphSession:
                 "geometry to pin circuit shapes against")
         if bundle.cfg != self.cfg:
             return False    # proof parameters below the session's policy
+        # the bundle must have been proven against the SAME published
+        # manifest this verifier bootstrapped trust from (for a transparency
+        # bootstrap that digest is the log-included leaf): a missing or
+        # mismatched digest fails closed before any proof work
+        if bundle.manifest_digest is None or not np.array_equal(
+                np.asarray(bundle.manifest_digest), comms.digest()):
+            return False
         try:
             plan = ir.build_plan(bundle.query)
         except KeyError:

@@ -1,0 +1,322 @@
+"""Append-only Merkle transparency log for published commitment manifests.
+
+PR 2 made the verifier pin every circuit shape against the owner's
+:class:`~repro.core.commit.CommitmentManifest`, but the manifest itself was an
+in-process Python object — a verifier had to take it on faith.  This module
+closes that last gap the way transparency-centric systems do (cf. certificate
+transparency, and the verifiable graph-search log of arXiv:2503.10171): the
+owner publishes the *canonical bytes* of every manifest revision as a leaf of
+an append-only Merkle log, and hands out
+
+* a :class:`Checkpoint` — ``(origin, tree_size, root)``, the log's signed-head
+  equivalent;
+* an :class:`InclusionProof` — the RFC 6962-style audit path showing a
+  specific manifest digest is a leaf of that checkpoint; and
+* a :class:`ConsistencyProof` — the RFC 6962-style proof that a newer
+  checkpoint extends an older one append-only, so a client comparing two
+  checkpoints detects *equivocation* (an owner showing different manifest
+  histories to different verifiers).
+
+The tree hashing reuses the proof system's own primitives
+(:func:`repro.core.merkle.compress_pair` for internal nodes,
+:func:`repro.core.hashing.hash_bytes` for leaves with an RFC 6962 ``0x00``
+leaf-domain prefix), so a log verifier needs no second hash implementation.
+``manifest_digest(bytes)`` *is* the leaf hash — the same (8,)-lane digest a
+:class:`~repro.core.session.ProofBundle` carries in its ``manifest_digest``
+field, which is what lets ``ZKGraphSession.verifier`` bootstrap its whole
+trust root from ``(checkpoint, inclusion proof, manifest bytes)`` and fail
+closed on any mismatch.
+
+Byte formats for all three structures live in :mod:`repro.core.wire`
+(payload kinds 5-7) and are specified in ``docs/protocol.md`` §4-5 with
+golden vectors under ``tests/vectors/``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import hashing as H
+from . import merkle, wire
+
+_LEAF_PREFIX = b"\x00"       # RFC 6962 leaf-domain separation
+
+
+class TransparencyError(ValueError):
+    """A transparency-log check failed closed: a manifest not included in the
+    presented checkpoint, malformed bootstrap inputs, or mismatched sizes.
+    Verifier bootstrap raises this instead of trusting anything."""
+
+
+def manifest_digest(raw: bytes) -> np.ndarray:
+    """The (8,) uint32 digest of a canonically-encoded manifest.
+
+    Defined as the transparency-log *leaf hash* of the bytes —
+    ``hash_bytes(0x00 || raw)`` — so the digest a bundle binds to is exactly
+    the leaf an inclusion proof authenticates (docs/protocol.md §6)."""
+    return H.hash_bytes(_LEAF_PREFIX + bytes(raw))
+
+
+leaf_hash = manifest_digest
+
+
+@dataclass(frozen=True)
+class Checkpoint:
+    """A log head: everything a client pins from one gossip round."""
+    origin: str             # log identity (namespaces roots across logs)
+    tree_size: int          # number of leaves this root covers
+    root: np.ndarray        # (8,) uint32 RFC 6962-style Merkle tree hash
+
+    def to_bytes(self) -> bytes:
+        return wire.encode_checkpoint(self)
+
+    @staticmethod
+    def from_bytes(raw: bytes) -> "Checkpoint":
+        return wire.decode_checkpoint(raw)
+
+
+@dataclass(frozen=True)
+class InclusionProof:
+    """Audit path for ``leaf_index`` in a tree of ``tree_size`` leaves."""
+    leaf_index: int
+    tree_size: int
+    path: np.ndarray        # (d, 8) uint32, leaf-to-root sibling digests
+
+    def to_bytes(self) -> bytes:
+        return wire.encode_inclusion_proof(self)
+
+    @staticmethod
+    def from_bytes(raw: bytes) -> "InclusionProof":
+        return wire.decode_inclusion_proof(raw)
+
+
+@dataclass(frozen=True)
+class ConsistencyProof:
+    """Proof that the tree of ``new_size`` leaves extends ``old_size``."""
+    old_size: int
+    new_size: int
+    path: np.ndarray        # (d, 8) uint32
+
+    def to_bytes(self) -> bytes:
+        return wire.encode_consistency_proof(self)
+
+    @staticmethod
+    def from_bytes(raw: bytes) -> "ConsistencyProof":
+        return wire.decode_consistency_proof(raw)
+
+
+def _k_split(n: int) -> int:
+    """Largest power of two strictly less than n (RFC 6962 split point)."""
+    return 1 << ((n - 1).bit_length() - 1)
+
+
+class TransparencyLog:
+    """Owner-side append-only log of manifest revisions.
+
+    Leaves are manifest digests; subtree roots are memoized, so ``append``
+    and proof generation cost O(log n) compressions on a log of n entries
+    (append-only means a computed ``[lo, hi)`` subtree never changes).
+    """
+
+    def __init__(self, origin: str = "zkgraph-log"):
+        self.origin = origin
+        self._leaves: list = []      # leaf digests, (8,) uint32 each
+        self._entries: list = []     # raw manifest bytes, re-servable
+        self._memo: dict = {}        # (lo, hi) -> subtree root
+
+    @property
+    def size(self) -> int:
+        return len(self._leaves)
+
+    def entry(self, index: int) -> bytes:
+        """The raw manifest bytes at a leaf (what the log re-serves)."""
+        return self._entries[index]
+
+    def append(self, manifest) -> Checkpoint:
+        """Append a manifest (object or canonical bytes); returns the new
+        checkpoint covering it as the last leaf."""
+        raw = manifest if isinstance(manifest, (bytes, bytearray)) \
+            else manifest.to_bytes()
+        raw = bytes(raw)
+        self._entries.append(raw)
+        self._leaves.append(manifest_digest(raw))
+        return self.checkpoint()
+
+    # -- tree hashing (RFC 6962 MTH) ----------------------------------------
+    def _mth(self, lo: int, hi: int) -> np.ndarray:
+        if hi - lo == 1:
+            return self._leaves[lo]
+        cached = self._memo.get((lo, hi))
+        if cached is None:
+            k = _k_split(hi - lo)
+            cached = merkle.compress_pair(self._mth(lo, lo + k),
+                                          self._mth(lo + k, hi))
+            self._memo[(lo, hi)] = cached
+        return cached
+
+    def root(self, tree_size: int = None) -> np.ndarray:
+        size = self.size if tree_size is None else int(tree_size)
+        if not 0 <= size <= self.size:
+            raise TransparencyError(
+                f"no checkpoint at size {size} (log has {self.size} leaves)")
+        if size == 0:
+            return H.hash_bytes(b"")         # MTH({}) — the empty-tree root
+        return self._mth(0, size)
+
+    def checkpoint(self, tree_size: int = None) -> Checkpoint:
+        size = self.size if tree_size is None else int(tree_size)
+        return Checkpoint(self.origin, size, self.root(size))
+
+    # -- proofs (RFC 6962 PATH / PROOF) -------------------------------------
+    def inclusion_proof(self, leaf_index: int,
+                        tree_size: int = None) -> InclusionProof:
+        size = self.size if tree_size is None else int(tree_size)
+        if not 0 <= leaf_index < size <= self.size:
+            raise TransparencyError(
+                f"no leaf {leaf_index} in a tree of {size} "
+                f"(log has {self.size} leaves)")
+        path = self._path(leaf_index, 0, size)
+        return InclusionProof(leaf_index, size, _stack_path(path))
+
+    def _path(self, m: int, lo: int, hi: int) -> list:
+        if hi - lo == 1:
+            return []
+        k = _k_split(hi - lo)
+        if m < k:
+            return self._path(m, lo, lo + k) + [self._mth(lo + k, hi)]
+        return self._path(m - k, lo + k, hi) + [self._mth(lo, lo + k)]
+
+    def consistency_proof(self, old_size: int,
+                          new_size: int = None) -> ConsistencyProof:
+        new = self.size if new_size is None else int(new_size)
+        old = int(old_size)
+        if not 1 <= old <= new <= self.size:
+            raise TransparencyError(
+                f"no consistency proof {old} -> {new} "
+                f"(log has {self.size} leaves)")
+        path = self._subproof(old, 0, new, True)
+        return ConsistencyProof(old, new, _stack_path(path))
+
+    def _subproof(self, m: int, lo: int, hi: int, whole: bool) -> list:
+        if m == hi - lo:
+            return [] if whole else [self._mth(lo, hi)]
+        k = _k_split(hi - lo)
+        if m <= k:
+            return self._subproof(m, lo, lo + k, whole) + \
+                [self._mth(lo + k, hi)]
+        return self._subproof(m - k, lo + k, hi, False) + \
+            [self._mth(lo, lo + k)]
+
+
+def _stack_path(path: list) -> np.ndarray:
+    if not path:
+        return np.zeros((0, 8), np.uint32)
+    return np.stack(path).astype(np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# client-side verification (no log access: checkpoint + proof only)
+# ---------------------------------------------------------------------------
+def verify_inclusion(checkpoint: Checkpoint, proof: InclusionProof,
+                     leaf: np.ndarray) -> bool:
+    """RFC 6962 audit-path check: is ``leaf`` (a manifest digest) the
+    ``proof.leaf_index``-th leaf of ``checkpoint``?  Pure and closed —
+    any inconsistency is ``False``, never an exception."""
+    try:
+        if proof.tree_size != checkpoint.tree_size:
+            return False
+        fn, sn = int(proof.leaf_index), int(proof.tree_size) - 1
+        if not 0 <= fn <= sn:
+            return False
+        node = np.asarray(leaf, np.uint32)
+        if node.shape != (8,):
+            return False
+        for sib in np.asarray(proof.path, np.uint32).reshape(-1, 8):
+            if sn == 0:
+                return False
+            if fn & 1 or fn == sn:
+                node = merkle.compress_pair(sib, node)
+                while fn & 1 == 0 and fn != 0:
+                    fn >>= 1
+                    sn >>= 1
+            else:
+                node = merkle.compress_pair(node, sib)
+            fn >>= 1
+            sn >>= 1
+        return sn == 0 and np.array_equal(node, checkpoint.root)
+    except (ValueError, TypeError, AttributeError):
+        return False
+
+
+def verify_consistency(old: Checkpoint, new: Checkpoint,
+                       proof: ConsistencyProof) -> bool:
+    """RFC 6962 consistency check: does ``new`` extend ``old`` append-only?
+    ``False`` on any mismatch (including cross-log origins) — the check a
+    client runs between gossip rounds to detect owner equivocation."""
+    try:
+        if old.origin != new.origin:
+            return False
+        if (proof.old_size, proof.new_size) != (old.tree_size, new.tree_size):
+            return False
+        first, second = int(old.tree_size), int(new.tree_size)
+        if not 1 <= first <= second:
+            return False
+        path = [p for p in np.asarray(proof.path, np.uint32).reshape(-1, 8)]
+        if first == second:
+            return len(path) == 0 and np.array_equal(old.root, new.root)
+        if not path:
+            return False
+        fn, sn = first - 1, second - 1
+        while fn & 1:
+            fn >>= 1
+            sn >>= 1
+        if fn:
+            fr = sr = path[0]
+            path = path[1:]
+        else:
+            fr = sr = np.asarray(old.root, np.uint32)
+        for c in path:
+            if sn == 0:
+                return False
+            if fn & 1 or fn == sn:
+                fr = merkle.compress_pair(c, fr)
+                sr = merkle.compress_pair(c, sr)
+                while fn & 1 == 0 and fn != 0:
+                    fn >>= 1
+                    sn >>= 1
+            else:
+                sr = merkle.compress_pair(sr, c)
+            fn >>= 1
+            sn >>= 1
+        return sn == 0 and np.array_equal(fr, old.root) \
+            and np.array_equal(sr, new.root)
+    except (ValueError, TypeError, AttributeError):
+        return False
+
+
+def bootstrap_manifest(checkpoint: Checkpoint, inclusion: InclusionProof,
+                       manifest_bytes: bytes):
+    """Verifier-side trust bootstrap: authenticate manifest bytes against a
+    log checkpoint, then decode them.
+
+    Returns the decoded :class:`~repro.core.commit.CommitmentManifest` with
+    its digest pinned to the *included* leaf, so every subsequently verified
+    bundle is transitively bound to the transparency log.  Raises
+    :class:`TransparencyError` (bad inclusion) or
+    :class:`~repro.core.wire.WireFormatError` (malformed bytes) — never
+    returns an unauthenticated manifest."""
+    if checkpoint is None or inclusion is None or manifest_bytes is None:
+        raise TransparencyError(
+            "bootstrap needs a checkpoint, an inclusion proof, and the "
+            "manifest bytes; none may be omitted")
+    digest = manifest_digest(manifest_bytes)
+    if not verify_inclusion(checkpoint, inclusion, digest):
+        raise TransparencyError(
+            f"manifest digest is not leaf {inclusion.leaf_index} of "
+            f"checkpoint {checkpoint.origin!r}@{checkpoint.tree_size}; "
+            f"refusing to bootstrap trust from an unlogged manifest")
+    from .commit import CommitmentManifest
+    manifest = CommitmentManifest.from_bytes(manifest_bytes)
+    manifest._digest = digest
+    return manifest

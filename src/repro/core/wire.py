@@ -25,16 +25,21 @@ commitments).  Design rules:
   ``int``) — malformed circuit geometry is rejected before the verifier
   does any work.
 
-Grammar (all integers little-endian)::
+Grammar (all integers little-endian; the full byte-level spec with golden
+test vectors is ``docs/protocol.md``)::
 
     message   := MAGIC(4) version:u16 kind:u8 body
-    bundle    := Q query:str P params:value C cfg(4 x u32)
+    bundle    := Q query:str P params:value C cfg(4 x u32) G digest:arr(8,)
                  S nsteps:u32 step* R result:value
     step      := K kind:str H shape:value D desc:str I instance:arr F proof
     proof     := 4 roots:arr(8,) OPEN openings TREE tree_openings
                  FRI friproof T timings:value
     friproof  := roots:[arr(8,)] final:arr(n,4) qidx:arr(i64)
                  openings:[(rows:arr, paths:arr)]
+    manifest  := V mver:u32 N n_nodes:i64 E edge_counts T tables R roots
+    checkpt   := O origin:str S tree_size:i64 R root:arr(8,)
+    incl      := I leaf_index:i64 S tree_size:i64 P path:arr(d,8)
+    consist   := O old_size:i64 N new_size:i64 P path:arr(d,8)
     value     := tagged int | bool | float | str | arr | tuple | list | dict
     arr       := dtype:u8 ndim:u8 dims:u32* raw-bytes
 
@@ -48,12 +53,17 @@ import struct
 import numpy as np
 
 MAGIC = b"ZKGB"
-WIRE_VERSION = 1
+WIRE_VERSION = 2     # v2: bundles carry the manifest digest they were
+                     # proven against; manifest/checkpoint payloads added
 
 # payload kinds (a message's top-level type)
 KIND_BUNDLE = 1
 KIND_PROOF = 2
 KIND_FRI = 3
+KIND_MANIFEST = 4
+KIND_CHECKPOINT = 5
+KIND_INCLUSION = 6
+KIND_CONSISTENCY = 7
 
 # hard caps: a malformed length prefix can never trigger a large allocation
 MAX_STR = 4096
@@ -63,19 +73,29 @@ MAX_ARR_DIMS = 4
 MAX_ARR_ELEMS = 1 << 24      # per-array element cap (64 MiB of int64)
 MAX_FRI_LAYERS = 64
 MAX_DEPTH = 16               # value-nesting cap (no RecursionError from bytes)
+MAX_TABLES = 256             # manifest: registered base-table descriptors
+MAX_SIZES = 64               # manifest: published circuit sizes per table
+MAX_COLUMNS = 64             # manifest: named columns per table
+MAX_LOG_DEPTH = 64           # transparency log: audit/consistency path nodes
 
 # value tags
 _T_INT, _T_BOOL, _T_FLOAT, _T_STR, _T_ARR, _T_TUPLE, _T_LIST, _T_DICT = \
     range(1, 9)
 
 # struct field tags (explicit, one per field, checked in order)
-_F_QUERY, _F_PARAMS, _F_CFG, _F_STEPS, _F_RESULT = 0x01, 0x02, 0x03, 0x04, 0x05
+_F_QUERY, _F_PARAMS, _F_CFG, _F_STEPS, _F_RESULT, _F_DIGEST = \
+    0x01, 0x02, 0x03, 0x04, 0x05, 0x06
 _F_KIND, _F_SHAPE, _F_DESC, _F_INSTANCE, _F_PROOF = \
     0x10, 0x11, 0x12, 0x13, 0x14
 _F_ROOTS, _F_OPENINGS, _F_TREES, _F_FRI, _F_TIMINGS = \
     0x20, 0x21, 0x22, 0x23, 0x24
 _F_FRI_ROOTS, _F_FRI_FINAL, _F_FRI_QIDX, _F_FRI_OPENS = \
     0x30, 0x31, 0x32, 0x33
+_F_M_VERSION, _F_M_NNODES, _F_M_EDGES, _F_M_TABLES, _F_M_ROOTS = \
+    0x40, 0x41, 0x42, 0x43, 0x44
+_F_C_ORIGIN, _F_C_SIZE, _F_C_ROOT = 0x50, 0x51, 0x52
+_F_I_INDEX, _F_I_SIZE, _F_I_PATH = 0x60, 0x61, 0x62
+_F_Y_OLD, _F_Y_NEW, _F_Y_PATH = 0x70, 0x71, 0x72
 
 _DTYPES = {0: np.dtype("<u4"), 1: np.dtype("<i8")}
 _DTYPE_CODE = {np.dtype(np.uint32): 0, np.dtype(np.int64): 1}
@@ -556,6 +576,17 @@ def encode_bundle(bundle) -> bytes:
     for v in (bundle.cfg.blowup, bundle.cfg.n_queries,
               bundle.cfg.fri_final_size, bundle.cfg.shift):
         e.u32(v)
+    e.u8(_F_DIGEST)
+    digest = bundle.manifest_digest
+    if digest is None:
+        raise WireFormatError(
+            "bundle has no manifest_digest: prove against a published "
+            "CommitmentManifest (ZKGraphSession.prove sets it)")
+    digest = np.asarray(digest)
+    if digest.shape != (8,):
+        raise WireFormatError(
+            f"manifest digest must have shape (8,), got {digest.shape}")
+    e.array(digest, dtype=np.uint32, ndim=1)
     if len(bundle.steps) > MAX_STEPS:
         raise WireFormatError(f"too many steps: {len(bundle.steps)}")
     e.u8(_F_STEPS)
@@ -584,6 +615,8 @@ def decode_bundle(raw: bytes):
     d.tag(_F_CFG, "bundle.cfg")
     cfg = ProverConfig(blowup=d.u32(), n_queries=d.u32(),
                        fri_final_size=d.u32(), shift=d.u32())
+    d.tag(_F_DIGEST, "bundle.manifest_digest")
+    digest = d.array(dtype=np.uint32, ndim=1, shape=(8,))
     d.tag(_F_STEPS, "bundle.steps")
     n_steps = d.u32()
     if n_steps > MAX_STEPS:
@@ -595,7 +628,7 @@ def decode_bundle(raw: bytes):
             isinstance(k, str) for k in result):
         raise WireFormatError("bundle result must be a str-keyed dict")
     d.done()
-    return ProofBundle(query, params, steps, result, cfg)
+    return ProofBundle(query, params, steps, result, cfg, digest)
 
 
 def encode_proof(proof) -> bytes:
@@ -628,3 +661,290 @@ def decode_fri_proof(raw: bytes):
     fp = _fri_from_wire(d)
     d.done()
     return fp
+
+
+# ---------------------------------------------------------------------------
+# CommitmentManifest: the owner's published trust root, canonically encoded
+# ---------------------------------------------------------------------------
+def _nonneg(v: int, what: str) -> int:
+    v = int(v)
+    if v < 0:
+        raise WireFormatError(f"{what} must be non-negative, got {v}")
+    return v
+
+
+def _root8(root, what: str) -> np.ndarray:
+    root = np.asarray(root)
+    if root.shape != (8,):
+        raise WireFormatError(
+            f"{what} must be an (8,) digest, got shape {root.shape}")
+    return root
+
+
+def encode_manifest(manifest) -> bytes:
+    """Canonical bytes for a :class:`repro.core.commit.CommitmentManifest`.
+
+    Deterministic (``encode(decode(b)) == b``): edge counts sort by table
+    name, geometries by descriptor, roots by ``(descriptor, size)``; the
+    decoder rejects out-of-order entries.  Every root entry must name a
+    descriptor with published geometry and a size that geometry lists — the
+    encoder enforces the same invariants, so the encodable set and the
+    decodable set are the same language.  ``transparency.manifest_digest``
+    over these bytes is the digest bundles and log leaves bind to.
+    """
+    from .commit import MANIFEST_VERSION
+    e = _Enc()
+    _header(e, KIND_MANIFEST)
+    e.u8(_F_M_VERSION)
+    if manifest.version != MANIFEST_VERSION:
+        raise WireFormatError(
+            f"manifest version {manifest.version} != {MANIFEST_VERSION}")
+    e.u32(manifest.version)
+    e.u8(_F_M_NNODES)
+    e.i64(_nonneg(manifest.n_nodes, "manifest n_nodes"))
+    e.u8(_F_M_EDGES)
+    if len(manifest.edge_counts) > MAX_TABLES:
+        raise WireFormatError(
+            f"too many edge tables: {len(manifest.edge_counts)}")
+    e.u32(len(manifest.edge_counts))
+    for name in sorted(manifest.edge_counts):
+        e.string(name)
+        e.i64(_nonneg(manifest.edge_counts[name], f"edge count {name!r}"))
+    e.u8(_F_M_TABLES)
+    if len(manifest.tables) > MAX_TABLES:
+        raise WireFormatError(f"too many tables: {len(manifest.tables)}")
+    e.u32(len(manifest.tables))
+    for desc in sorted(manifest.tables):
+        geo = manifest.tables[desc]
+        if geo.desc != desc:
+            raise WireFormatError(
+                f"geometry desc {geo.desc!r} != manifest key {desc!r}")
+        e.string(desc)
+        e.u32(_nonneg(geo.n_cols, f"{desc!r} n_cols"))
+        e.u32(_nonneg(geo.n_table_rows, f"{desc!r} n_table_rows"))
+        if len(geo.sizes) > MAX_SIZES:
+            raise WireFormatError(
+                f"table {desc!r} has too many sizes: {len(geo.sizes)}")
+        e.u32(len(geo.sizes))
+        prev = -1
+        for n in geo.sizes:
+            if int(n) <= prev:
+                raise WireFormatError(
+                    f"table {desc!r} sizes must be strictly increasing")
+            prev = int(n)
+            e.u32(n)
+        if len(geo.columns) > MAX_COLUMNS:
+            raise WireFormatError(
+                f"table {desc!r} has too many columns: {len(geo.columns)}")
+        e.u32(len(geo.columns))
+        for col in geo.columns:
+            e.string(col)
+    e.u8(_F_M_ROOTS)
+    if len(manifest.roots) > MAX_TABLES * MAX_SIZES:
+        raise WireFormatError(f"too many roots: {len(manifest.roots)}")
+    e.u32(len(manifest.roots))
+    for desc, size in sorted(manifest.roots):
+        geo = manifest.tables.get(desc)
+        if geo is None or int(size) not in {int(s) for s in geo.sizes}:
+            raise WireFormatError(
+                f"root for {(desc, size)} has no matching published geometry")
+        e.string(desc)
+        e.u32(size)
+        e.array(_root8(manifest.roots[(desc, size)], f"root {(desc, size)}"),
+                dtype=np.uint32, ndim=1)
+    return bytes(e.buf)
+
+
+def decode_manifest(raw: bytes):
+    """Decode + validate canonical manifest bytes (fails closed on any
+    malformed, non-canonical, or version-skewed input)."""
+    from .commit import MANIFEST_VERSION, CommitmentManifest, TableGeometry
+    d = _Dec(raw)
+    _check_header(d, KIND_MANIFEST)
+    d.tag(_F_M_VERSION, "manifest.version")
+    mver = d.u32()
+    if mver != MANIFEST_VERSION:
+        raise WireFormatError(
+            f"unsupported manifest version {mver} (this verifier speaks "
+            f"{MANIFEST_VERSION})")
+    d.tag(_F_M_NNODES, "manifest.n_nodes")
+    n_nodes = d.i64()
+    if n_nodes < 0:
+        raise WireFormatError(f"negative n_nodes {n_nodes}")
+    d.tag(_F_M_EDGES, "manifest.edge_counts")
+    n = d.u32()
+    if n > MAX_TABLES:
+        raise WireFormatError(f"edge table count {n} > {MAX_TABLES}")
+    edge_counts = {}
+    prev = None
+    for _ in range(n):
+        name = d.string()
+        if prev is not None and name <= prev:
+            raise WireFormatError("non-canonical edge-count order")
+        prev = name
+        count = d.i64()
+        if count < 0:
+            raise WireFormatError(f"negative edge count for {name!r}")
+        edge_counts[name] = count
+    d.tag(_F_M_TABLES, "manifest.tables")
+    n = d.u32()
+    if n > MAX_TABLES:
+        raise WireFormatError(f"table count {n} > {MAX_TABLES}")
+    tables = {}
+    prev = None
+    for _ in range(n):
+        desc = d.string()
+        if prev is not None and desc <= prev:
+            raise WireFormatError("non-canonical table-geometry order")
+        prev = desc
+        n_cols = d.u32()
+        n_table_rows = d.u32()
+        n_sizes = d.u32()
+        if n_sizes > MAX_SIZES:
+            raise WireFormatError(f"size count {n_sizes} > {MAX_SIZES}")
+        sizes = []
+        last = -1
+        for _ in range(n_sizes):
+            s = d.u32()
+            if s <= last:
+                raise WireFormatError(
+                    f"table {desc!r} sizes not strictly increasing")
+            last = s
+            sizes.append(s)
+        n_columns = d.u32()
+        if n_columns > MAX_COLUMNS:
+            raise WireFormatError(f"column count {n_columns} > {MAX_COLUMNS}")
+        columns = tuple(d.string() for _ in range(n_columns))
+        tables[desc] = TableGeometry(desc, n_cols, n_table_rows,
+                                     tuple(sizes), columns)
+    d.tag(_F_M_ROOTS, "manifest.roots")
+    n = d.u32()
+    if n > MAX_TABLES * MAX_SIZES:
+        raise WireFormatError(f"root count {n} > {MAX_TABLES * MAX_SIZES}")
+    roots = {}
+    prev = None
+    for _ in range(n):
+        desc = d.string()
+        size = d.u32()
+        if prev is not None and (desc, size) <= prev:
+            raise WireFormatError("non-canonical root order")
+        prev = (desc, size)
+        geo = tables.get(desc)
+        if geo is None or size not in geo.sizes:
+            raise WireFormatError(
+                f"root for {(desc, size)} has no matching published geometry")
+        roots[(desc, size)] = d.array(dtype=np.uint32, ndim=1, shape=(8,))
+    d.done()
+    return CommitmentManifest(mver, n_nodes, edge_counts, tables, roots)
+
+
+# ---------------------------------------------------------------------------
+# transparency-log structures (Checkpoint / InclusionProof / ConsistencyProof)
+# ---------------------------------------------------------------------------
+def _log_path(d: _Dec, what: str) -> np.ndarray:
+    path = d.array(dtype=np.uint32, ndim=2)
+    if path.shape[0] > MAX_LOG_DEPTH or path.shape[1] != 8:
+        raise WireFormatError(
+            f"{what} path must be (d<={MAX_LOG_DEPTH}, 8), got {path.shape}")
+    return path
+
+
+def encode_checkpoint(cp) -> bytes:
+    """Canonical bytes for a :class:`repro.core.transparency.Checkpoint`."""
+    e = _Enc()
+    _header(e, KIND_CHECKPOINT)
+    e.u8(_F_C_ORIGIN)
+    e.string(cp.origin)
+    e.u8(_F_C_SIZE)
+    e.i64(_nonneg(cp.tree_size, "checkpoint tree_size"))
+    e.u8(_F_C_ROOT)
+    e.array(_root8(cp.root, "checkpoint root"), dtype=np.uint32, ndim=1)
+    return bytes(e.buf)
+
+
+def decode_checkpoint(raw: bytes):
+    from .transparency import Checkpoint
+    d = _Dec(raw)
+    _check_header(d, KIND_CHECKPOINT)
+    d.tag(_F_C_ORIGIN, "checkpoint.origin")
+    origin = d.string()
+    d.tag(_F_C_SIZE, "checkpoint.tree_size")
+    tree_size = d.i64()
+    if tree_size < 0:
+        raise WireFormatError(f"negative tree size {tree_size}")
+    d.tag(_F_C_ROOT, "checkpoint.root")
+    root = d.array(dtype=np.uint32, ndim=1, shape=(8,))
+    d.done()
+    return Checkpoint(origin, tree_size, root)
+
+
+def encode_inclusion_proof(pf) -> bytes:
+    e = _Enc()
+    _header(e, KIND_INCLUSION)
+    e.u8(_F_I_INDEX)
+    e.i64(_nonneg(pf.leaf_index, "inclusion leaf_index"))
+    e.u8(_F_I_SIZE)
+    e.i64(_nonneg(pf.tree_size, "inclusion tree_size"))
+    if pf.leaf_index >= pf.tree_size:
+        raise WireFormatError(
+            f"leaf index {pf.leaf_index} outside tree of {pf.tree_size}")
+    e.u8(_F_I_PATH)
+    path = np.asarray(pf.path, np.uint32).reshape(-1, 8)
+    if path.shape[0] > MAX_LOG_DEPTH:
+        raise WireFormatError(f"inclusion path too deep: {path.shape[0]}")
+    e.array(path, dtype=np.uint32, ndim=2)
+    return bytes(e.buf)
+
+
+def decode_inclusion_proof(raw: bytes):
+    from .transparency import InclusionProof
+    d = _Dec(raw)
+    _check_header(d, KIND_INCLUSION)
+    d.tag(_F_I_INDEX, "inclusion.leaf_index")
+    leaf_index = d.i64()
+    d.tag(_F_I_SIZE, "inclusion.tree_size")
+    tree_size = d.i64()
+    if not 0 <= leaf_index < tree_size:
+        raise WireFormatError(
+            f"leaf index {leaf_index} outside tree of {tree_size}")
+    d.tag(_F_I_PATH, "inclusion.path")
+    path = _log_path(d, "inclusion")
+    d.done()
+    return InclusionProof(leaf_index, tree_size, path)
+
+
+def encode_consistency_proof(pf) -> bytes:
+    e = _Enc()
+    _header(e, KIND_CONSISTENCY)
+    e.u8(_F_Y_OLD)
+    e.i64(_nonneg(pf.old_size, "consistency old_size"))
+    e.u8(_F_Y_NEW)
+    e.i64(_nonneg(pf.new_size, "consistency new_size"))
+    if not 1 <= pf.old_size <= pf.new_size:
+        raise WireFormatError(
+            f"consistency sizes must satisfy 1 <= old <= new, got "
+            f"{pf.old_size}, {pf.new_size}")
+    e.u8(_F_Y_PATH)
+    path = np.asarray(pf.path, np.uint32).reshape(-1, 8)
+    if path.shape[0] > MAX_LOG_DEPTH:
+        raise WireFormatError(f"consistency path too deep: {path.shape[0]}")
+    e.array(path, dtype=np.uint32, ndim=2)
+    return bytes(e.buf)
+
+
+def decode_consistency_proof(raw: bytes):
+    from .transparency import ConsistencyProof
+    d = _Dec(raw)
+    _check_header(d, KIND_CONSISTENCY)
+    d.tag(_F_Y_OLD, "consistency.old_size")
+    old_size = d.i64()
+    d.tag(_F_Y_NEW, "consistency.new_size")
+    new_size = d.i64()
+    if not 1 <= old_size <= new_size:
+        raise WireFormatError(
+            f"consistency sizes must satisfy 1 <= old <= new, got "
+            f"{old_size}, {new_size}")
+    d.tag(_F_Y_PATH, "consistency.path")
+    path = _log_path(d, "consistency")
+    d.done()
+    return ConsistencyProof(old_size, new_size, path)

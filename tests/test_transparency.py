@@ -1,0 +1,445 @@
+"""Adversarial transparency-subsystem tests, mirroring tests/test_wire.py:
+the canonical manifest codec treats every byte as hostile (truncation,
+tag flips, version skew, non-canonical orderings, byte-flip fuzz), the
+bundle <-> manifest digest binding fails closed, and transparency-log
+inclusion/consistency proofs reject forgery and equivocation."""
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import transparency as tl
+from repro.core import wire
+from repro.core.commit import (CommitmentManifest, MANIFEST_VERSION,
+                               MissingCommitmentError, TableGeometry)
+from repro.core.session import ProofBundle, WireFormatError, ZKGraphSession
+
+HEADER = len(wire.MAGIC) + 2 + 1     # magic + u16 version + u8 payload kind
+
+
+@pytest.fixture(scope="module")
+def manifest(owner):
+    return owner.commitments
+
+
+@pytest.fixture(scope="module")
+def raw(manifest):
+    return manifest.to_bytes()
+
+
+@pytest.fixture(scope="module")
+def log(raw):
+    """A small log whose FIRST leaf is the owner's real manifest, padded
+    with distinct revision leaves (so proofs have real paths)."""
+    log = tl.TransparencyLog("test-log")
+    log.append(raw)
+    for i in range(5):
+        log.append(raw + bytes([i]))
+    return log
+
+
+# ---------------------------------------------------------------------------
+# canonical manifest round trip + digest
+# ---------------------------------------------------------------------------
+def test_manifest_roundtrip_byte_identical(raw):
+    rt = CommitmentManifest.from_bytes(raw)
+    assert rt.to_bytes() == raw
+
+
+def test_manifest_roundtrip_preserves_every_field(manifest, raw):
+    rt = CommitmentManifest.from_bytes(raw)
+    assert rt.version == manifest.version
+    assert rt.n_nodes == manifest.n_nodes
+    assert rt.edge_counts == dict(manifest.edge_counts)
+    assert set(rt.tables) == set(manifest.tables)
+    for desc, geo in manifest.tables.items():
+        got = rt.tables[desc]
+        assert (got.n_cols, got.n_table_rows) == (geo.n_cols,
+                                                  geo.n_table_rows)
+        assert tuple(got.sizes) == tuple(geo.sizes)
+        assert tuple(got.columns) == tuple(geo.columns)
+    assert set(rt.roots) == set(manifest.roots)
+    for key in manifest.roots:
+        assert np.array_equal(rt.roots[key], manifest.roots[key])
+        assert rt.roots[key].dtype == np.uint32
+
+
+def test_manifest_digest_is_leaf_hash_of_canonical_bytes(manifest, raw):
+    assert np.array_equal(manifest.digest(), tl.manifest_digest(raw))
+    rt = CommitmentManifest.from_bytes(raw)
+    assert np.array_equal(rt.digest(), manifest.digest())
+
+
+def test_drop_keeps_published_digest(manifest, bundle, tiny_cfg):
+    """A partial deployment trusts the same PUBLISHED manifest (same
+    digest); a step over the missing table is a deployment error
+    (MissingCommitmentError), not an authenticity failure (False)."""
+    partial = manifest.drop("hasCreator")
+    assert np.array_equal(partial.digest(), manifest.digest())
+    with pytest.raises(MissingCommitmentError):
+        ZKGraphSession.verifier(partial, tiny_cfg).verify(bundle)
+
+
+# ---------------------------------------------------------------------------
+# malformed manifest bytes fail closed
+# ---------------------------------------------------------------------------
+def test_manifest_truncation_rejected(raw):
+    for cut in (0, 1, HEADER - 1, HEADER, HEADER + 2, len(raw) // 2,
+                len(raw) - 1):
+        with pytest.raises(WireFormatError):
+            CommitmentManifest.from_bytes(raw[:cut])
+
+
+def test_manifest_trailing_bytes_rejected(raw):
+    with pytest.raises(WireFormatError):
+        CommitmentManifest.from_bytes(raw + b"\x00")
+
+
+def test_manifest_bad_magic_and_wire_version_skew(raw):
+    with pytest.raises(WireFormatError):
+        CommitmentManifest.from_bytes(b"NOPE" + raw[4:])
+    future = raw[:4] + struct.pack("<H", wire.WIRE_VERSION + 1) + raw[6:]
+    with pytest.raises(WireFormatError):
+        CommitmentManifest.from_bytes(future)
+
+
+def test_manifest_payload_kind_confusion(bundle, raw):
+    with pytest.raises(WireFormatError):
+        CommitmentManifest.from_bytes(bundle.to_bytes())
+    with pytest.raises(WireFormatError):
+        ProofBundle.from_bytes(raw)
+
+
+def test_manifest_version_skew_rejected(raw):
+    # manifest schema version sits right after its field tag at HEADER
+    skewed = raw[: HEADER + 1] + struct.pack(
+        "<I", MANIFEST_VERSION + 1) + raw[HEADER + 5:]
+    with pytest.raises(WireFormatError, match="manifest version"):
+        CommitmentManifest.from_bytes(skewed)
+
+
+def test_manifest_flipped_field_tag_rejected(raw):
+    flipped = bytearray(raw)
+    flipped[HEADER] ^= 0xFF
+    with pytest.raises(WireFormatError):
+        CommitmentManifest.from_bytes(bytes(flipped))
+
+
+def test_manifest_byte_flips_fail_closed_or_stay_canonical(raw):
+    """Any single byte flip either raises WireFormatError or lands in root
+    data and still decodes to a manifest whose re-encoding is byte-identical
+    — there is no byte whose corruption silently de-canonicalizes."""
+    rng = np.random.default_rng(13)
+    survived = 0
+    for pos in rng.integers(0, len(raw), size=48):
+        flipped = bytearray(raw)
+        flipped[pos] ^= 0x20
+        try:
+            m = CommitmentManifest.from_bytes(bytes(flipped))
+        except WireFormatError:
+            continue
+        survived += 1
+        assert m.to_bytes() == bytes(flipped)
+    assert survived > 0          # root payload bytes do survive, canonically
+
+
+def _mini_manifest_bytes(edge_names=("a", "b"), root_key=("t", 8),
+                         sizes=(8, 16)):
+    """Hand-encode a minimal manifest so non-canonical orderings (which the
+    real encoder refuses to produce) can be fed to the decoder."""
+    e = wire._Enc()
+    e.buf += wire.MAGIC
+    e.u16(wire.WIRE_VERSION)
+    e.u8(wire.KIND_MANIFEST)
+    e.u8(wire._F_M_VERSION)
+    e.u32(MANIFEST_VERSION)
+    e.u8(wire._F_M_NNODES)
+    e.i64(4)
+    e.u8(wire._F_M_EDGES)
+    e.u32(len(edge_names))
+    for name in edge_names:
+        e.string(name)
+        e.i64(3)
+    e.u8(wire._F_M_TABLES)
+    e.u32(1)
+    e.string("t")
+    e.u32(2)                     # n_cols
+    e.u32(5)                     # n_table_rows
+    e.u32(len(sizes))
+    for s in sizes:
+        e.u32(s)
+    e.u32(0)                     # no named columns
+    e.u8(wire._F_M_ROOTS)
+    e.u32(1)
+    e.string(root_key[0])
+    e.u32(root_key[1])
+    e.array(np.arange(8, dtype=np.uint32), dtype=np.uint32, ndim=1)
+    return bytes(e.buf)
+
+
+def test_mini_manifest_is_valid_and_canonical():
+    raw = _mini_manifest_bytes()
+    m = CommitmentManifest.from_bytes(raw)
+    assert m.to_bytes() == raw
+    assert m.edge_counts == {"a": 3, "b": 3}
+    assert m.geometry("t").sizes == (8, 16)
+
+
+def test_non_canonical_edge_order_rejected():
+    with pytest.raises(WireFormatError, match="edge-count order"):
+        CommitmentManifest.from_bytes(_mini_manifest_bytes(
+            edge_names=("b", "a")))
+    with pytest.raises(WireFormatError, match="duplicate|order"):
+        CommitmentManifest.from_bytes(_mini_manifest_bytes(
+            edge_names=("a", "a")))
+
+
+def test_non_increasing_sizes_rejected():
+    with pytest.raises(WireFormatError, match="strictly increasing"):
+        CommitmentManifest.from_bytes(_mini_manifest_bytes(sizes=(16, 8)))
+
+
+def test_root_without_published_geometry_rejected():
+    # unknown descriptor, and a size the geometry never published
+    with pytest.raises(WireFormatError, match="geometry"):
+        CommitmentManifest.from_bytes(_mini_manifest_bytes(
+            root_key=("ghost", 8)))
+    with pytest.raises(WireFormatError, match="geometry"):
+        CommitmentManifest.from_bytes(_mini_manifest_bytes(
+            root_key=("t", 32)))
+
+
+def test_encoder_rejects_what_decoder_rejects(manifest):
+    """encode and decode accept the same language: un-publishable objects
+    (roots without geometry, wrong manifest version) fail at encode too."""
+    bad = CommitmentManifest(
+        manifest.version, manifest.n_nodes, dict(manifest.edge_counts),
+        dict(manifest.tables), dict(manifest.roots))
+    bad.roots[("ghost", 64)] = np.arange(8, dtype=np.uint32)
+    with pytest.raises(WireFormatError, match="geometry"):
+        bad.to_bytes()
+    skewed = CommitmentManifest(
+        MANIFEST_VERSION + 1, 4, {}, {"t": TableGeometry("t", 1, 1, (8,))})
+    with pytest.raises(WireFormatError, match="version"):
+        skewed.to_bytes()
+
+
+# ---------------------------------------------------------------------------
+# bundle <-> manifest digest binding
+# ---------------------------------------------------------------------------
+def test_bundle_carries_manifest_digest(bundle, manifest):
+    assert np.array_equal(bundle.manifest_digest, manifest.digest())
+    rt = ProofBundle.from_bytes(bundle.to_bytes())
+    assert np.array_equal(rt.manifest_digest, manifest.digest())
+
+
+def test_digestless_bundle_not_encodable_and_not_verifiable(bundle,
+                                                            verifier):
+    clone = ProofBundle.from_bytes(bundle.to_bytes())
+    clone.manifest_digest = None
+    with pytest.raises(WireFormatError, match="manifest_digest"):
+        clone.to_bytes()
+    assert verifier.verify(clone) is False
+
+
+def test_tampered_digest_fails_closed_through_the_wire(bundle, verifier):
+    """A re-encoded bundle claiming a different manifest digest survives the
+    codec (the digest is just 8 lanes) but MUST die at the digest pin."""
+    clone = ProofBundle.from_bytes(bundle.to_bytes())
+    clone.manifest_digest = clone.manifest_digest.copy()
+    clone.manifest_digest[3] ^= 1
+    rewired = clone.to_bytes()
+    assert ProofBundle.from_bytes(rewired).to_bytes() == rewired
+    assert verifier.verify_bytes(rewired) is False
+    assert verifier.verify_bytes(bundle.to_bytes()) is True
+
+
+def test_verify_against_different_manifest_digest_is_false(bundle, manifest,
+                                                           tiny_cfg):
+    """A verifier bootstrapped from a DIFFERENT published manifest (revised
+    geometry => different canonical bytes => different digest) rejects the
+    bundle up front — equivocation between prove and verify fails closed."""
+    other = CommitmentManifest(
+        manifest.version, manifest.n_nodes, dict(manifest.edge_counts),
+        dict(manifest.tables), dict(manifest.roots))
+    k = sorted(other.edge_counts)[0]
+    other.edge_counts[k] += 1                     # a one-count revision
+    assert not np.array_equal(other.digest(), bundle.manifest_digest)
+    assert ZKGraphSession.verifier(other, tiny_cfg).verify(bundle) is False
+
+
+# ---------------------------------------------------------------------------
+# transparency log: inclusion, consistency, forgery, equivocation
+# ---------------------------------------------------------------------------
+def test_inclusion_every_leaf_every_size(log):
+    for idx in range(log.size):
+        for size in range(idx + 1, log.size + 1):
+            pf = log.inclusion_proof(idx, size)
+            leaf = tl.manifest_digest(log.entry(idx))
+            assert tl.verify_inclusion(log.checkpoint(size), pf, leaf)
+
+
+def test_inclusion_wrong_leaf_or_index_fails(log):
+    cp = log.checkpoint()
+    pf = log.inclusion_proof(2)
+    assert not tl.verify_inclusion(cp, pf, tl.manifest_digest(log.entry(3)))
+    pf_wrong = tl.InclusionProof(3, pf.tree_size, pf.path)
+    assert not tl.verify_inclusion(cp, pf_wrong,
+                                   tl.manifest_digest(log.entry(2)))
+
+
+def test_inclusion_forged_path_fails(log):
+    cp = log.checkpoint()
+    pf = log.inclusion_proof(2)
+    leaf = tl.manifest_digest(log.entry(2))
+    for row in range(pf.path.shape[0]):
+        forged = pf.path.copy()
+        forged[row, 0] ^= 1
+        assert not tl.verify_inclusion(
+            cp, tl.InclusionProof(pf.leaf_index, pf.tree_size, forged), leaf)
+    # truncated and extended paths fail too (never crash)
+    short = tl.InclusionProof(pf.leaf_index, pf.tree_size, pf.path[:-1])
+    assert not tl.verify_inclusion(cp, short, leaf)
+    extended = tl.InclusionProof(pf.leaf_index, pf.tree_size,
+                                 np.vstack([pf.path, pf.path[:1]]))
+    assert not tl.verify_inclusion(cp, extended, leaf)
+
+
+def test_consistency_every_pair(log):
+    for old in range(1, log.size + 1):
+        for new in range(old, log.size + 1):
+            pr = log.consistency_proof(old, new)
+            assert tl.verify_consistency(log.checkpoint(old),
+                                         log.checkpoint(new), pr), (old, new)
+
+
+def test_consistency_forgery_fails(log):
+    old, new = log.checkpoint(3), log.checkpoint(log.size)
+    pr = log.consistency_proof(3)
+    for row in range(pr.path.shape[0]):
+        forged = pr.path.copy()
+        forged[row, 0] ^= 1
+        assert not tl.verify_consistency(
+            old, new, tl.ConsistencyProof(pr.old_size, pr.new_size, forged))
+    # size-mismatched proofs are rejected before any hashing
+    assert not tl.verify_consistency(
+        old, new, tl.ConsistencyProof(2, pr.new_size, pr.path))
+
+
+def test_equivocation_detected(log, raw):
+    """An owner that rewrites history (different first leaf) cannot produce
+    a consistency proof linking the honest checkpoint to the forked log."""
+    fork = tl.TransparencyLog(log.origin)
+    fork.append(raw + b"\xff")           # different manifest at leaf 0
+    for i in range(5):
+        fork.append(raw + bytes([i]))
+    honest_cp = log.checkpoint(1)
+    forked_cp = fork.checkpoint()
+    assert not tl.verify_consistency(honest_cp, forked_cp,
+                                     fork.consistency_proof(1))
+    # a same-origin prefix-honest log, by contrast, passes
+    assert tl.verify_consistency(log.checkpoint(2), log.checkpoint(),
+                                 log.consistency_proof(2))
+
+
+def test_cross_origin_checkpoints_rejected(log):
+    other = tl.TransparencyLog("other-log")
+    other.append(log.entry(0))
+    pr = log.consistency_proof(1)
+    assert not tl.verify_consistency(other.checkpoint(), log.checkpoint(),
+                                     pr)
+
+
+def test_log_bounds_fail_closed(log):
+    with pytest.raises(tl.TransparencyError):
+        log.inclusion_proof(log.size)              # no such leaf
+    with pytest.raises(tl.TransparencyError):
+        log.inclusion_proof(0, log.size + 1)       # no such checkpoint
+    with pytest.raises(tl.TransparencyError):
+        log.consistency_proof(0)                   # RFC: old size >= 1
+    with pytest.raises(tl.TransparencyError):
+        log.root(log.size + 1)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / proof wire codecs
+# ---------------------------------------------------------------------------
+def test_transparency_structures_roundtrip(log):
+    cp = log.checkpoint()
+    cp2 = tl.Checkpoint.from_bytes(cp.to_bytes())
+    assert (cp2.origin, cp2.tree_size) == (cp.origin, cp.tree_size)
+    assert np.array_equal(cp2.root, cp.root)
+    assert cp2.to_bytes() == cp.to_bytes()
+    pf = log.inclusion_proof(1)
+    pf2 = tl.InclusionProof.from_bytes(pf.to_bytes())
+    assert pf2.to_bytes() == pf.to_bytes()
+    assert tl.verify_inclusion(cp, pf2, tl.manifest_digest(log.entry(1)))
+    pr = log.consistency_proof(2)
+    pr2 = tl.ConsistencyProof.from_bytes(pr.to_bytes())
+    assert pr2.to_bytes() == pr.to_bytes()
+    assert tl.verify_consistency(log.checkpoint(2), cp, pr2)
+
+
+def test_transparency_structures_malformed_rejected(log):
+    cp_raw = log.checkpoint().to_bytes()
+    pf_raw = log.inclusion_proof(1).to_bytes()
+    pr_raw = log.consistency_proof(2).to_bytes()
+    decoders = ((cp_raw, tl.Checkpoint.from_bytes),
+                (pf_raw, tl.InclusionProof.from_bytes),
+                (pr_raw, tl.ConsistencyProof.from_bytes))
+    for raw_msg, decode in decoders:
+        for cut in (0, HEADER - 1, HEADER, len(raw_msg) - 1):
+            with pytest.raises(WireFormatError):
+                decode(raw_msg[:cut])
+        with pytest.raises(WireFormatError):
+            decode(raw_msg + b"\x00")
+    with pytest.raises(WireFormatError):
+        tl.InclusionProof.from_bytes(cp_raw)       # kind confusion
+    with pytest.raises(WireFormatError):
+        tl.ConsistencyProof.from_bytes(pf_raw)
+    # out-of-range index is rejected at decode, not verification
+    bad = tl.InclusionProof(0, 1, np.zeros((0, 8), np.uint32)).to_bytes()
+    hacked = bad.replace(struct.pack("<q", 1), struct.pack("<q", 0), 1)
+    with pytest.raises(WireFormatError):
+        tl.InclusionProof.from_bytes(hacked)
+
+
+# ---------------------------------------------------------------------------
+# verifier bootstrap from a checkpoint (the full trust chain)
+# ---------------------------------------------------------------------------
+def test_verifier_bootstraps_from_checkpoint(log, raw, bundle, tiny_cfg):
+    cp = log.checkpoint()
+    pf = log.inclusion_proof(0)                    # the real manifest leaf
+    v = ZKGraphSession.verifier(cfg=tiny_cfg, checkpoint=cp, inclusion=pf,
+                                manifest_bytes=raw)
+    assert v.verify(bundle) is True
+    assert v.verify_bytes(bundle.to_bytes()) is True
+
+
+def test_bootstrap_rejects_unlogged_or_tampered_manifest(log, raw, tiny_cfg):
+    cp = log.checkpoint()
+    pf = log.inclusion_proof(0)
+    with pytest.raises(tl.TransparencyError):
+        ZKGraphSession.verifier(cfg=tiny_cfg, checkpoint=cp, inclusion=pf,
+                                manifest_bytes=raw + b"\x00")
+    wrong_leaf = log.inclusion_proof(1)
+    with pytest.raises(tl.TransparencyError):
+        ZKGraphSession.verifier(cfg=tiny_cfg, checkpoint=cp,
+                                inclusion=wrong_leaf, manifest_bytes=raw)
+    with pytest.raises(tl.TransparencyError):
+        ZKGraphSession.verifier(cfg=tiny_cfg, checkpoint=cp, inclusion=pf,
+                                manifest_bytes=None)
+    with pytest.raises(TypeError):
+        ZKGraphSession.verifier()
+
+
+def test_bootstrap_included_junk_fails_at_decode(tiny_cfg):
+    """A log leaf that is not a valid manifest passes inclusion but fails
+    closed at decode — the verifier never holds an unparsed trust root."""
+    junk = b"not a manifest"
+    log = tl.TransparencyLog("junk-log")
+    cp = log.append(junk)
+    pf = log.inclusion_proof(0)
+    with pytest.raises(WireFormatError):
+        ZKGraphSession.verifier(cfg=tiny_cfg, checkpoint=cp, inclusion=pf,
+                                manifest_bytes=junk)
