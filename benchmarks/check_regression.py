@@ -1,0 +1,134 @@
+"""Bench-regression gate: diff fresh BENCH_*.json against committed baselines.
+
+Usage (from the repo root, after ``python -m benchmarks.run --only wire,kernels``)::
+
+    python benchmarks/check_regression.py              # gate at 2x
+    python benchmarks/check_regression.py --threshold 3
+    python benchmarks/check_regression.py --update     # rewrite baselines
+
+Every numeric leaf whose key ends in ``_us`` (microsecond timings) is
+compared; a metric fails only if it is BOTH
+
+* more than ``--threshold`` (default 2.0) times its committed baseline, AND
+* more than ``--floor`` microseconds absolute (default 500us) above it —
+
+so sub-millisecond jitter on trivially fast paths can never trip the gate
+(CI-noise tolerance).  Size/count leaves (``*_bytes``, ``rows``, ...) are
+never gated.
+
+Overrides (documented in docs/architecture.md):
+
+* ``ZKGRAPH_BENCH_ALLOW_REGRESSION=1`` turns failures into warnings — use
+  when a PR knowingly trades one path's speed for another's (say so in the
+  PR description).
+* ``--update`` rewrites the committed baselines from the fresh run — use
+  after an intentional perf change, and commit the result.
+
+Baselines live in ``benchmarks/baselines/`` under the emitter's short name
+(``wire.json``, ``kernels.json``) so the repo-root ``BENCH_*.json``
+gitignore pattern never swallows them.  Missing fresh files or baselines
+are reported but do not fail the gate (new emitters land before their
+first baseline); missing *metrics* inside a present pair do not fail
+either (emitters may grow).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BASELINE_DIR = ROOT / "benchmarks" / "baselines"
+PAIRS = {                      # fresh (repo root) -> committed baseline
+    "BENCH_wire.json": "wire.json",
+    "BENCH_kernels.json": "kernels.json",
+}
+ALLOW_ENV = "ZKGRAPH_BENCH_ALLOW_REGRESSION"
+
+
+def timing_leaves(node, prefix=""):
+    """Flatten to {dotted.path: value} keeping only *_us numeric leaves."""
+    out = {}
+    if isinstance(node, dict):
+        for k, v in node.items():
+            out.update(timing_leaves(v, f"{prefix}.{k}" if prefix else k))
+    elif isinstance(node, (int, float)) and prefix.rsplit(".", 1)[-1] \
+            .endswith("_us"):
+        out[prefix] = float(node)
+    return out
+
+
+def compare(fresh: dict, base: dict, threshold: float, floor: float):
+    """Yield (path, base_us, fresh_us, ratio) for every gated regression."""
+    base_leaves = timing_leaves(base)
+    for path, now in timing_leaves(fresh).items():
+        ref = base_leaves.get(path)
+        if ref is None:
+            continue                       # new metric: no baseline yet
+        if now > ref * threshold and now - ref > floor:
+            yield (path, ref, now, now / ref if ref else float("inf"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="fail when fresh > threshold * baseline (default 2)")
+    ap.add_argument("--floor", type=float, default=500.0,
+                    help="ignore regressions smaller than this many us")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite committed baselines from the fresh run")
+    args = ap.parse_args()
+
+    if args.update:
+        BASELINE_DIR.mkdir(parents=True, exist_ok=True)
+        for fresh_name, base_name in PAIRS.items():
+            src = ROOT / fresh_name
+            if src.exists():
+                shutil.copy(src, BASELINE_DIR / base_name)
+                print(f"baseline updated: benchmarks/baselines/{base_name}")
+            else:
+                print(f"skip (not emitted): {fresh_name}")
+        return 0
+
+    regressions, checked = [], 0
+    for fresh_name, base_name in PAIRS.items():
+        fresh_path = ROOT / fresh_name
+        base_path = BASELINE_DIR / base_name
+        if not fresh_path.exists():
+            print(f"note: {fresh_name} not emitted this run — skipped")
+            continue
+        if not base_path.exists():
+            print(f"note: no committed baseline {base_name} — skipped "
+                  f"(run with --update to create it)")
+            continue
+        fresh = json.loads(fresh_path.read_text())
+        base = json.loads(base_path.read_text())
+        pair_regs = list(compare(fresh, base, args.threshold, args.floor))
+        checked += len(timing_leaves(fresh))
+        for path, ref, now, ratio in pair_regs:
+            regressions.append((fresh_name, path, ref, now, ratio))
+
+    print(f"checked {checked} timing metrics at threshold "
+          f"{args.threshold}x / floor {args.floor}us")
+    if not regressions:
+        print("bench-regression gate: OK")
+        return 0
+    print("\nREGRESSIONS (fresh vs committed baseline):")
+    for fname, path, ref, now, ratio in sorted(regressions,
+                                               key=lambda r: -r[4]):
+        print(f"  {fname}:{path}  {ref:.0f}us -> {now:.0f}us  "
+              f"({ratio:.1f}x)")
+    if os.environ.get(ALLOW_ENV) == "1":
+        print(f"\n{ALLOW_ENV}=1 set: reporting only, not failing the gate")
+        return 0
+    print(f"\nIf intentional: re-baseline with "
+          f"`python benchmarks/check_regression.py --update` and commit, "
+          f"or set {ALLOW_ENV}=1 for this run.")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

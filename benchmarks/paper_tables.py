@@ -386,6 +386,92 @@ def transparency_bench(rows: int = 1024):
 
 
 # ---------------------------------------------------------------------------
+# compute backends: ref vs pallas-interpret vs pallas, per primitive + e2e
+# ---------------------------------------------------------------------------
+def kernels(rows: int = 256):
+    """Per-primitive and end-to-end backend comparison; emits
+    ``BENCH_kernels.json``.
+
+    On a CPU container the compiled ``pallas`` backend is unavailable
+    (recorded as such) and ``pallas-interpret`` is *slower* than ``ref`` —
+    the interpreter exists for parity/CI, not speed; the speedup column is
+    meaningful on accelerator hosts where ``pallas`` compiles.  All timings
+    are second-call (warm jit caches)."""
+    import dataclasses
+    import json
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import backend, field as F, hashing, merkle, poly
+
+    usable, status = [], {}
+    for name in backend.names():
+        ok, reason = backend.probe(name)
+        status[name] = "ok" if ok else reason
+        if ok:
+            usable.append(name)
+        yield (f"kernels/backend/{name}", 0.0, status[name][:60])
+
+    rng = np.random.default_rng(0)
+    states = jnp.asarray(rng.integers(0, F.P, size=(4096, 16))
+                         .astype(np.uint32))
+    hrows = jnp.asarray(rng.integers(0, F.P, size=(1024, 8))
+                        .astype(np.uint32))
+    gp = jnp.asarray(rng.integers(0, F.P, size=(4096, 4)).astype(np.uint32))
+    prims = {
+        "poseidon_permute_4096": lambda: hashing.permute(states),
+        "hash_rows_1024x8": lambda: hashing.hash_rows(hrows),
+        "merkle_commit_1024x8": lambda: merkle.commit(hrows).root,
+        "grand_product_ext_4096": lambda: backend.active()
+                                          .grand_product_ext(gp),
+    }
+    for log_n in (10, 12, 14):
+        x = jnp.asarray(rng.integers(0, F.P, size=(4, 1 << log_n))
+                        .astype(np.uint32))
+        prims[f"ntt_b4_2^{log_n}"] = (lambda x=x: poly.ntt(x))
+
+    def run_blocked(fn):
+        return jax.block_until_ready(fn())
+
+    primitives = {}
+    for pname, fn in prims.items():
+        primitives[pname] = {}
+        for bname in usable:
+            with backend.use(bname):
+                run_blocked(fn)                          # warm trace + jit
+                _, t_us = timed(run_blocked, fn)
+            primitives[pname][f"{bname}_us"] = round(t_us, 1)
+        ref_us = primitives[pname]["ref_us"]
+        derived = ";".join(f"{b}={primitives[pname][f'{b}_us']:.0f}us"
+                           for b in usable)
+        yield (f"kernels/{pname}", ref_us, derived)
+
+    # end-to-end prove latency per LDBC query, per backend
+    db = db_with_rows(rows)
+    manifest = ZKGraphSession(db, BENCH_CFG).commitments   # shared: parity
+    end_to_end = {}
+    for q, p in (("IS3", dict(person=3)),
+                 ("IS5", dict(message=(1 << 20) + 7))):
+        end_to_end[q] = {}
+        for bname in usable:
+            cfg = dataclasses.replace(BENCH_CFG, backend=bname)
+            session = ZKGraphSession(db, cfg, commitments=manifest)
+            session.prove(q, p)                          # warm
+            bundle, t_us = timed(session.prove, q, p)
+            end_to_end[q][f"{bname}_us"] = round(t_us, 1)
+        yield (f"kernels/e2e/{q}", end_to_end[q]["ref_us"],
+               ";".join(f"{b}={end_to_end[q][f'{b}_us']:.0f}us"
+                        for b in usable))
+
+    with open("BENCH_kernels.json", "w") as f:
+        json.dump(dict(rows=rows, backends=status, primitives=primitives,
+                       end_to_end=end_to_end), f, indent=2, sort_keys=True)
+    yield ("kernels/BENCH_kernels.json", 0.0,
+           f"backends={'+'.join(usable)}")
+
+
+# ---------------------------------------------------------------------------
 # Fig 8: scalability with database size
 # ---------------------------------------------------------------------------
 def fig8():
@@ -408,4 +494,4 @@ def fig8():
 ALL = {"table1": table1, "table2": table2, "table3": table3, "fig6a": fig6a,
        "fig6b": fig6b, "table4": table4, "fig7": fig7, "fig8": fig8,
        "cachewin": cachewin, "wire": wire_codec,
-       "transparency": transparency_bench}
+       "transparency": transparency_bench, "kernels": kernels}

@@ -1,0 +1,227 @@
+"""Pluggable compute backends for the prover hot loops.
+
+One semantic spec, three interchangeable implementations (the structure
+hardware-accelerated ZK systems use — cf. PAPERS.md on GPU PLONKish
+proving): every backend computes the *same field elements bit-for-bit*, so
+proof transcripts are identical across backends and Fiat–Shamir challenges
+cannot diverge.  The suite asserts this parity (``tests/test_backend.py``).
+
+Backends
+--------
+``ref``
+    The pure-jnp reference paths that shipped with the seed
+    (``hashing.permute_ref``, ``poly.ntt_ref``, a ``jax.lax``
+    associative scan for the grand product).  Default; fastest on CPU.
+``pallas-interpret``
+    The Pallas kernels under ``repro.kernels`` executed with
+    ``interpret=True`` — runs anywhere (CI, CPU containers) and exercises
+    the exact kernel code paths, so kernel drift against the reference is
+    caught on every PR without accelerator hardware.
+``pallas``
+    The same kernels compiled for a real accelerator (``interpret=False``).
+    Raises at dispatch time on hosts whose jax backend cannot lower Pallas
+    (plain CPU); gate on :func:`probe` before selecting it.
+
+Selection
+---------
+Resolution order for the active backend (first hit wins):
+
+1. an explicit :func:`use` scope (a context manager; nests, restores),
+2. the ``ZKGRAPH_BACKEND`` environment variable,
+3. the default, ``ref``.
+
+``ProverConfig.backend`` (compare-excluded, never serialized: a backend is
+an execution detail, not a proof parameter) routes a whole
+``keygen``/``prove`` call through :func:`use` so sessions can pin a backend
+per configuration.  The keygen cache key incorporates the resolved backend
+name (:func:`resolve_name`) so PK/LDE caches never cross backends.
+
+The dispatched primitives
+-------------------------
+``permute``
+    Batched Poseidon-like permutation, ``(..., 16) -> (..., 16)`` — the
+    Merkle/sponge workhorse (``hashing.permute`` and everything above it:
+    ``hash_rows``, ``hash_bytes``, ``merkle.commit`` level builds).
+``ntt``
+    Radix-2 NTT along the last axis, natural order, ``inverse=`` for the
+    scaled inverse transform — ``poly.ntt``/``intt``/``coset_lde``.
+``grand_product_ext``
+    Exclusive running product of Fp4 elements, ``(n, 4) -> (n, 4)`` with
+    ``Z[0] = 1`` — the paper's Eq. (2) accumulator in the prover's phase-2
+    ext-column construction.
+
+Kernel-facing shape adapters (padding to tile multiples) live in each
+kernel's ``ops.py``; this module only routes.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+ENV_VAR = "ZKGRAPH_BACKEND"
+DEFAULT = "ref"
+
+
+class UnknownBackendError(ValueError):
+    """Asked for a backend name that was never registered."""
+
+
+@dataclass(frozen=True)
+class ComputeBackend:
+    """One named implementation of the prover's compute primitives."""
+    name: str
+    description: str
+    permute: Callable          # (..., 16) uint32 -> (..., 16)
+    ntt: Callable              # (..., n), inverse=False -> (..., n)
+    grand_product_ext: Callable  # (n, 4) -> (n, 4) exclusive Fp4 products
+    interpret: Optional[bool]  # Pallas interpret flag; None = pure jnp
+
+
+_REGISTRY: dict = {}
+_SCOPES: list = []             # explicit use() stack, innermost last
+
+
+def register(backend: ComputeBackend) -> ComputeBackend:
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def names() -> tuple:
+    return tuple(_REGISTRY)
+
+
+def get(name: str) -> ComputeBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownBackendError(
+            f"unknown compute backend {name!r}; available: "
+            f"{', '.join(_REGISTRY)}") from None
+
+
+def active_name() -> str:
+    """The currently selected backend name (scope > env var > default)."""
+    if _SCOPES:
+        return _SCOPES[-1]
+    env = os.environ.get(ENV_VAR)
+    if env:
+        get(env)               # validate eagerly: typos fail loudly
+        return env
+    return DEFAULT
+
+
+def active() -> ComputeBackend:
+    return get(active_name())
+
+
+def resolve_name(name: str = None) -> str:
+    """A concrete backend name: ``name`` if given (validated), else the
+    active selection.  This is the keygen-cache key component."""
+    if name is not None:
+        get(name)
+        return name
+    return active_name()
+
+
+@contextlib.contextmanager
+def use(name: str = None):
+    """Pin the active backend within a ``with`` block (nests, restores).
+
+    ``name=None`` pins whatever is active at entry — used by
+    ``keygen``/``prove`` to freeze ``cfg.backend`` resolution for the whole
+    call even if the environment changes mid-proof."""
+    _SCOPES.append(resolve_name(name))
+    try:
+        yield _REGISTRY[_SCOPES[-1]]
+    finally:
+        _SCOPES.pop()
+
+
+def probe(name: str) -> tuple:
+    """(usable, reason) — run a tiny permutation under ``name``.
+
+    The compiled ``pallas`` backend needs an accelerator-capable jax
+    backend; on plain CPU it raises at lowering time, which this converts
+    into a clean availability answer for benchmarks and launch scripts."""
+    import numpy as np
+    try:
+        be = get(name)
+        with use(name):
+            out = be.permute(np.zeros((2, 16), np.uint32))
+        if out.shape != (2, 16):
+            return False, f"probe returned shape {out.shape}"
+        return True, "ok"
+    except UnknownBackendError:
+        raise
+    except Exception as e:  # noqa: BLE001 — lowering errors vary by platform
+        return False, f"{type(e).__name__}: {e}"
+
+
+# ---------------------------------------------------------------------------
+# the three registered backends (lazy imports: this module must stay
+# import-light — hashing/poly import it at module load)
+# ---------------------------------------------------------------------------
+def _ref_permute(states):
+    from . import hashing
+    return hashing.permute_ref(states)
+
+
+def _ref_ntt(x, inverse: bool = False):
+    from . import poly
+    return poly.ntt_ref(x, inverse=inverse)
+
+
+def _ref_grand_product_ext(x):
+    from ..kernels.grand_product.ref import grand_product_ext_ref
+    return grand_product_ext_ref(x)
+
+
+def _pallas_permute(interpret: bool):
+    def permute(states):
+        from ..kernels.poseidon import ops
+        return ops.permute(states, interpret=interpret)
+    return permute
+
+
+def _pallas_ntt(interpret: bool):
+    def ntt(x, inverse: bool = False):
+        from ..kernels.ntt import ops
+        return ops.ntt(x, inverse=inverse, interpret=interpret)
+    return ntt
+
+
+def _pallas_grand_product_ext(interpret: bool):
+    def grand_product_ext(x):
+        from ..kernels.grand_product import ops
+        return ops.grand_product_ext(x, interpret=interpret)
+    return grand_product_ext
+
+
+register(ComputeBackend(
+    name="ref",
+    description="pure-jnp reference paths (uint64 oracle); CPU default",
+    permute=_ref_permute,
+    ntt=_ref_ntt,
+    grand_product_ext=_ref_grand_product_ext,
+    interpret=None,
+))
+
+register(ComputeBackend(
+    name="pallas-interpret",
+    description="Pallas kernels in interpret mode; runs on CPU/CI",
+    permute=_pallas_permute(True),
+    ntt=_pallas_ntt(True),
+    grand_product_ext=_pallas_grand_product_ext(True),
+    interpret=True,
+))
+
+register(ComputeBackend(
+    name="pallas",
+    description="compiled Pallas kernels; needs an accelerator jax backend",
+    permute=_pallas_permute(False),
+    ntt=_pallas_ntt(False),
+    grand_product_ext=_pallas_grand_product_ext(False),
+    interpret=False,
+))

@@ -23,6 +23,7 @@ from dataclasses import dataclass, field as dc_field
 import jax.numpy as jnp
 import numpy as np
 
+from . import backend as be
 from . import field as F
 from . import merkle
 from . import prover as pv
@@ -59,8 +60,11 @@ def data_root(data_np: np.ndarray, n_rows: int, cfg: pv.ProverConfig,
     padded = np.zeros((raw.shape[0], n_rows), np.int64)
     padded[:, : raw.shape[1]] = raw
     data = jnp.asarray(padded).astype(jnp.uint32)
-    lde = pv._lde(data, cfg.blowup, cfg.shift)
-    return np.asarray(merkle.commit(lde.T).root)
+    # roots are backend-independent (bit-identical parity), but run the
+    # publication under cfg's backend so owner-side throughput scales too
+    with be.use(cfg.backend):
+        lde = pv._lde(data, cfg.blowup, cfg.shift)
+        return np.asarray(merkle.commit(lde.T).root)
 
 
 def table_sizes(db: GraphDB, n_cols: int) -> list:

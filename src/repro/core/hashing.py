@@ -5,6 +5,12 @@ permutation is a 16x16 matrix, so hashing a batch of states is one
 (batch,16)x(16,16) modular matmul per round — an MXU-friendly schedule (the
 Pallas kernel in ``repro.kernels.poseidon`` tiles exactly this). NOT a
 security-audited parameter set (see DESIGN.md §8).
+
+:func:`permute` dispatches through the active compute backend
+(:mod:`repro.core.backend`): ``ref`` runs :func:`permute_ref` (the jnp path
+below), the ``pallas*`` backends run the kernel.  All backends produce
+bit-identical states, so everything above this primitive — the sponge, the
+Merkle trees, the Fiat–Shamir transcript — is backend-independent.
 """
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import backend
 from . import field as F
 
 WIDTH = 16          # state lanes
@@ -59,9 +66,18 @@ def _matmul_mod(state, mat):
     return s.astype(_U32)
 
 
-@jax.jit
 def permute(state: jnp.ndarray) -> jnp.ndarray:
-    """Apply the permutation to (..., 16) BabyBear states."""
+    """Apply the permutation to (..., 16) BabyBear states.
+
+    Dispatches to the active compute backend; the backends are
+    bit-identical, so callers never observe which one ran."""
+    return backend.active().permute(state)
+
+
+@jax.jit
+def permute_ref(state: jnp.ndarray) -> jnp.ndarray:
+    """The pure-jnp reference permutation (the ``ref`` backend, and the
+    oracle the Pallas kernel is validated against)."""
     mds, rc = _params()
     mds = jnp.asarray(mds)
     rc = jnp.asarray(rc)

@@ -4,6 +4,13 @@ Commits to a 2D matrix (n_leaves, row_width): leaf i hashes row i, internal
 nodes use 2-to-1 compression. Openings return the row plus the authentication
 path. All layers are materialized as jnp arrays (prover-side); verification is
 pure and cheap.
+
+Every hash here goes through ``hashing.permute``, which dispatches to the
+active compute backend (:mod:`repro.core.backend`): each tree level is one
+batched permutation call — ``(n/2, 16)`` states for level builds, ``(n, 16)``
+per sponge block for the leaves — so the ``pallas`` backends run the whole
+build through the kernel with no per-node Python overhead.  Roots are
+bit-identical across backends.
 """
 from __future__ import annotations
 

@@ -2,8 +2,11 @@
 
 The NTT is the prover's compute hot-spot (together with Merkle hashing); the
 Pallas kernel in ``repro.kernels.ntt`` implements the same butterfly schedule
-with explicit VMEM BlockSpecs — this module is the pure-jnp oracle and the
-default CPU path.
+with explicit VMEM BlockSpecs.  :func:`ntt` dispatches through the active
+compute backend (:mod:`repro.core.backend`); :func:`ntt_ref` is the pure-jnp
+oracle and the ``ref`` (CPU default) path.  Backends are bit-identical, so
+``coset_lde``/``intt`` and everything built on them (commitments, quotient,
+FRI folds) are backend-independent.
 
 Domain conventions
 ------------------
@@ -19,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import backend
 from . import field as F
 
 _U32 = jnp.uint32
@@ -55,13 +59,19 @@ def _stage_twiddles(n: int, inverse: bool) -> tuple[np.ndarray, ...]:
     return tuple(tables)
 
 
-@functools.partial(jax.jit, static_argnames=("inverse",))
 def ntt(a: jnp.ndarray, inverse: bool = False) -> jnp.ndarray:
     """Radix-2 DIT NTT along the last axis (length must be a power of two).
 
     Natural-order input -> natural-order output. ``inverse=True`` gives the
-    inverse transform including the 1/n scaling.
-    """
+    inverse transform including the 1/n scaling.  Dispatches to the active
+    compute backend (bit-identical across backends)."""
+    return backend.active().ntt(a, inverse=inverse)
+
+
+@functools.partial(jax.jit, static_argnames=("inverse",))
+def ntt_ref(a: jnp.ndarray, inverse: bool = False) -> jnp.ndarray:
+    """The pure-jnp reference NTT (the ``ref`` backend, and the oracle the
+    Pallas stage kernel is validated against)."""
     n = a.shape[-1]
     if n == 1:
         return a

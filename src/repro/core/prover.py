@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import backend as be
 from . import field as F
 from . import fri as fri_mod
 from . import merkle
@@ -33,6 +34,11 @@ class ProverConfig:
     n_queries: int = 32
     fri_final_size: int = 32
     shift: int = poly.COSET_SHIFT
+    # compute backend for keygen/prove (repro.core.backend); None = ambient
+    # selection (ZKGRAPH_BACKEND env var, default "ref").  compare=False:
+    # backends are bit-identical, so which one ran is an execution detail —
+    # never serialized, never part of cfg equality or proof acceptance.
+    backend: str = dc_field(default=None, compare=False)
 
     def fri(self) -> fri_mod.FriConfig:
         return fri_mod.FriConfig(self.blowup, self.n_queries,
@@ -46,6 +52,7 @@ class Keys:
     cfg: ProverConfig
     fixed_coeffs: jnp.ndarray     # (n_fixed, N)
     fixed_lde: jnp.ndarray        # (n_fixed, N*blowup)
+    backend: str = "ref"          # resolved compute backend keygen ran under
 
 
 @dataclass
@@ -180,16 +187,17 @@ def auto_multiplicities(circuit: Circuit, data_np: np.ndarray,
 # keygen
 # ---------------------------------------------------------------------------
 def keygen(circuit: Circuit, cfg: ProverConfig = ProverConfig()) -> Keys:
-    circuit.assign_ext_cols()
-    if circuit.gps and not any(n == "__row0" for n in circuit.fixed_names):
-        onehot = np.zeros(circuit.n_rows, np.uint32)
-        onehot[0] = 1
-        circuit.add_fixed("__row0", onehot)
-    fixed = jnp.asarray(np.stack(circuit.fixed_cols)
-                        if circuit.fixed_cols else np.zeros((0, circuit.n_rows), np.uint32))
-    coeffs = poly.intt(fixed) if circuit.n_fixed else fixed
-    lde = _lde(fixed, cfg.blowup, cfg.shift)
-    return Keys(circuit, cfg, coeffs, lde)
+    with be.use(cfg.backend) as backend:
+        circuit.assign_ext_cols()
+        if circuit.gps and not any(n == "__row0" for n in circuit.fixed_names):
+            onehot = np.zeros(circuit.n_rows, np.uint32)
+            onehot[0] = 1
+            circuit.add_fixed("__row0", onehot)
+        fixed = jnp.asarray(np.stack(circuit.fixed_cols)
+                            if circuit.fixed_cols else np.zeros((0, circuit.n_rows), np.uint32))
+        coeffs = poly.intt(fixed) if circuit.n_fixed else fixed
+        lde = _lde(fixed, cfg.blowup, cfg.shift)
+        return Keys(circuit, cfg, coeffs, lde, backend.name)
 
 
 def _row0_col(circuit: Circuit):
@@ -232,8 +240,9 @@ def build_ext_columns(circuit: Circuit, getter_n, like_n, alpha, beta):
         f1 = F.eadd(F.fmul(d1, s1[:, None]), F.fmul(one, not_s1[:, None]))
         f2 = F.eadd(F.fmul(d2, s2[:, None]), F.fmul(one, not_s2[:, None]))
         ratio = F.emul(f1, F.ebatch_inv(f2))
-        z = jax.lax.associative_scan(F.emul, ratio, axis=0)
-        z = jnp.concatenate([one[:1], z[:-1]], axis=0)  # Z[0]=1, Z[i]=prod_{j<i}
+        # Eq. (2) exclusive running product: Z[0]=1, Z[i]=prod_{j<i} —
+        # dispatched (ref: associative scan; pallas: blocked-scan kernel)
+        z = be.active().grand_product_ext(ratio)
         cols.append(z)
     if not cols:
         return jnp.zeros((0, n, 4), _U32)
@@ -319,6 +328,17 @@ def combine_constraints(circuit: Circuit, base_getter, ext_getter, alpha, beta,
 # ---------------------------------------------------------------------------
 def prove(keys: Keys, advice_np: np.ndarray, instance_np: np.ndarray,
           data_np: np.ndarray = None, label: str = "zkgraph") -> Proof:
+    """Prove under the backend that produced these Keys (``keys.backend``,
+    resolved at keygen time) — PK/LDE buffers and the proving run never
+    cross backends.  Proof bytes are bit-identical across backends —
+    Fiat–Shamir soundness depends on it, and the suite asserts it — so the
+    backend choice is pure execution policy."""
+    with be.use(keys.backend):
+        return _prove_impl(keys, advice_np, instance_np, data_np, label)
+
+
+def _prove_impl(keys: Keys, advice_np: np.ndarray, instance_np: np.ndarray,
+                data_np: np.ndarray = None, label: str = "zkgraph") -> Proof:
     circuit, cfg = keys.circuit, keys.cfg
     n, B = circuit.n_rows, cfg.blowup
     nl = n * B

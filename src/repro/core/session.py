@@ -52,6 +52,7 @@ from dataclasses import dataclass, field as dc_field
 
 import numpy as np
 
+from . import backend as be
 from . import commit, ir, wire
 from . import prover as pv
 from .commit import CommitmentManifest, MissingCommitmentError
@@ -100,10 +101,13 @@ def circuit_shape_digest(circuit: Circuit) -> str:
 
 @dataclass
 class KeygenCache:
-    """(circuit shape digest, prover config) -> Keys. Shared by prover and
-    verifier sessions; ``ensure`` attaches cached keys to an operator.
-    Bounded: oldest entries are evicted past ``max_entries`` so a long-lived
-    verifier fed ever-fresh shapes cannot grow it without limit."""
+    """(circuit shape digest, prover config, compute backend) -> Keys.
+    Shared by prover and verifier sessions; ``ensure`` attaches cached keys
+    to an operator.  The resolved backend name is part of the key (cached
+    ``Keys`` hold backend-produced buffers; PK/LDE caches never cross
+    backends).  Bounded: oldest entries are evicted past ``max_entries`` so
+    a long-lived verifier fed ever-fresh shapes cannot grow it without
+    limit."""
     entries: dict = dc_field(default_factory=dict)
     hits: int = 0
     misses: int = 0
@@ -111,8 +115,12 @@ class KeygenCache:
 
     @staticmethod
     def _key(op, cfg: pv.ProverConfig):
+        # the resolved compute backend is part of the key: PK/LDE caches
+        # must never cross backends (entries hold backend-produced device
+        # buffers, and a keygen re-run is the only safe way to switch)
         return (op.name, op.circuit.n_rows,
-                (cfg.blowup, cfg.n_queries, cfg.fri_final_size, cfg.shift),
+                (cfg.blowup, cfg.n_queries, cfg.fri_final_size, cfg.shift,
+                 be.resolve_name(cfg.backend)),
                 circuit_shape_digest(op.circuit))
 
     def ensure(self, op, cfg: pv.ProverConfig):

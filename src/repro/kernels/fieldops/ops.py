@@ -1,4 +1,9 @@
-"""jit'd wrappers for the fieldops Pallas kernels."""
+"""jit'd wrappers + shape adapters for the fieldops Pallas kernels.
+
+Inputs of any shape are flattened and zero-padded up to a block multiple
+(elementwise kernels: padding lanes are dead work, never observed), so a
+prime-sized circuit row count no longer degenerates to a block-1 grid.
+"""
 from __future__ import annotations
 
 import functools
@@ -19,30 +24,44 @@ def _pick_block(n: int) -> int:
     return 1
 
 
+def _pad_flat(flat: jnp.ndarray) -> jnp.ndarray:
+    """Pad a flat vector to a 256 multiple so _pick_block always finds a
+    real block (one 256-lane block beats a grid of degenerate 1-blocks
+    even for tiny inputs)."""
+    pad = (-flat.shape[0]) % 256
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), _U32)])
+    return flat
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def mulmod(a: jnp.ndarray, b: jnp.ndarray, interpret: bool = True):
     """Elementwise modular multiply via the 16-bit-limb Pallas kernel.
 
-    a, b: 1-D or 2-D uint32 arrays (same shape)."""
+    a, b: uint32 arrays of any (same) shape."""
     shape = a.shape
-    flat = a.reshape(-1)
-    block = _pick_block(flat.shape[0])
+    n = a.size
+    flat_a = _pad_flat(a.reshape(-1).astype(_U32))
+    flat_b = _pad_flat(b.reshape(-1).astype(_U32))
+    block = _pick_block(flat_a.shape[0])
     out = pl.pallas_call(
         K._mulmod_kernel,
-        grid=(flat.shape[0] // block,),
+        grid=(flat_a.shape[0] // block,),
         in_specs=[pl.BlockSpec((block,), lambda i: (i,))] * 2,
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct(flat.shape, _U32),
+        out_shape=jax.ShapeDtypeStruct(flat_a.shape, _U32),
         interpret=interpret,
-    )(flat, b.reshape(-1))
-    return out.reshape(shape)
+    )(flat_a, flat_b)
+    return out[:n].reshape(shape)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fused_mul_add(a, b, c, interpret: bool = True):
     """(a*b + c) mod P — one kernel, one VMEM round-trip."""
     shape = a.shape
-    flat_a, flat_b, flat_c = (x.reshape(-1) for x in (a, b, c))
+    n = a.size
+    flat_a, flat_b, flat_c = (_pad_flat(x.reshape(-1).astype(_U32))
+                              for x in (a, b, c))
     block = _pick_block(flat_a.shape[0])
     out = pl.pallas_call(
         K._fma_kernel,
@@ -52,4 +71,4 @@ def fused_mul_add(a, b, c, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct(flat_a.shape, _U32),
         interpret=interpret,
     )(flat_a, flat_b, flat_c)
-    return out.reshape(shape)
+    return out[:n].reshape(shape)

@@ -1,4 +1,4 @@
-"""Pallas kernel for the paper's Eq. (2) running-product accumulator.
+"""Pallas kernels for the paper's Eq. (2) running-product accumulator.
 
 Two-phase blocked scan (classic Blelloch decomposition adapted to a
 multiplicative monoid over BabyBear):
@@ -7,6 +7,15 @@ multiplicative monoid over BabyBear):
   host    : tiny exclusive scan over the per-block totals (length n/block);
   phase 2: each block's prefixes are scaled by its block offset.
 The modular multiply is the shared 16-bit-limb primitive (fieldops).
+
+Two element types share the schedule: base-field scalars
+(:func:`grand_product`) and the quartic extension Fp4
+(:func:`grand_product_ext`) — the latter is what the prover's phase-2
+ext-column construction actually accumulates (running products of
+challenge-compressed tuples live in Fp4).  The in-kernel Fp4 multiply
+(:func:`_emul_limb`) is the same schoolbook x^4 = W_EXT reduction as
+``field.emul``, built from the 16-bit-limb primitives; modular arithmetic
+is exact, so both produce bit-identical field elements.
 """
 from __future__ import annotations
 
@@ -14,7 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..fieldops.fieldops import mulmod_limb
+from ...core.field import W_EXT
+from ..fieldops.fieldops import addmod, mulmod_limb
 
 _U32 = jnp.uint32
 
@@ -70,6 +80,101 @@ def grand_product(x: jnp.ndarray, block: int = 256,
                   pl.BlockSpec((1,), lambda i: (i,))],
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), _U32),
+        interpret=interpret,
+    )(prefixes, offsets)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fp4 variant — the prover's phase-2 running products
+# ---------------------------------------------------------------------------
+def _emul_limb(a, b):
+    """Schoolbook Fp4 multiply (reduction x^4 = W_EXT) on (..., 4) lanes,
+    from the 16-bit-limb primitives — mirrors ``field.emul`` term for term,
+    so the result is the same canonical representative bit for bit."""
+    a0, a1, a2, a3 = a[..., 0], a[..., 1], a[..., 2], a[..., 3]
+    b0, b1, b2, b3 = b[..., 0], b[..., 1], b[..., 2], b[..., 3]
+
+    def m(x, y):
+        return mulmod_limb(x, y)
+
+    def mw(x):
+        return mulmod_limb(jnp.full_like(x, W_EXT), x)
+
+    c0 = addmod(m(a0, b0), mw(addmod(addmod(m(a1, b3), m(a2, b2)),
+                                     m(a3, b1))))
+    c1 = addmod(addmod(m(a0, b1), m(a1, b0)), mw(addmod(m(a2, b3),
+                                                        m(a3, b2))))
+    c2 = addmod(addmod(m(a0, b2), m(a1, b1)), addmod(m(a2, b0),
+                                                     mw(m(a3, b3))))
+    c3 = addmod(addmod(m(a0, b3), m(a1, b2)), addmod(m(a2, b1), m(a3, b0)))
+    return jnp.stack([c0, c1, c2, c3], axis=-1)
+
+
+def _ext_ones(k):
+    """(k, 4) multiplicative identities [1, 0, 0, 0]."""
+    return jnp.zeros((k, 4), _U32).at[:, 0].set(1)
+
+
+def _block_scan_ext_kernel(x_ref, prefix_ref, total_ref):
+    """Exclusive Fp4 prefix products within one block (log-step doubling).
+
+    The doubling runs as a ``fori_loop`` with a dynamic-slice shift rather
+    than a python-unrolled concatenate chain: the Fp4 limb-multiply graph is
+    large, and unrolling it log2(block) times made XLA compilation take
+    minutes per shape — the loop traces it exactly once."""
+    x = x_ref[...]                       # (block, 4)
+    n = x.shape[0]
+    ones_n = _ext_ones(n)
+    n_steps = (n - 1).bit_length()       # shifts 1, 2, ..., >= n/2
+
+    def body(k, acc):
+        shift = jnp.left_shift(jnp.int32(1), k)
+        # shifted[i] = 1 for i < shift else acc[i - shift]
+        full = jnp.concatenate([ones_n, acc], axis=0)
+        shifted = jax.lax.dynamic_slice(full, (n - shift, jnp.int32(0)),
+                                        (n, 4))
+        return _emul_limb(acc, shifted)
+
+    acc = jax.lax.fori_loop(0, n_steps, body, x)
+    total_ref[...] = acc[-1:]
+    prefix_ref[...] = jnp.concatenate([_ext_ones(1), acc[:-1]], axis=0)
+
+
+def _apply_offset_ext_kernel(prefix_ref, offset_ref, o_ref):
+    off = offset_ref[...]                # (1, 4)
+    prefix = prefix_ref[...]             # (block, 4)
+    o_ref[...] = _emul_limb(prefix, jnp.broadcast_to(off, prefix.shape))
+
+
+def grand_product_ext(x: jnp.ndarray, block: int = 256,
+                      interpret: bool = True) -> jnp.ndarray:
+    """Exclusive running product of (n, 4) Fp4 elements, n % block == 0."""
+    n = x.shape[0]
+    block = min(block, n)
+    assert n % block == 0
+    nb = n // block
+    prefixes, totals = pl.pallas_call(
+        _block_scan_ext_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block, 4), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block, 4), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 4), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, 4), _U32),
+                   jax.ShapeDtypeStruct((nb, 4), _U32)],
+        interpret=interpret,
+    )(x.astype(_U32))
+    # tiny host-side exclusive scan over block totals (nb elements)
+    from ...core import field as F
+    incl = jax.lax.associative_scan(F.emul, totals, axis=0)
+    offsets = jnp.concatenate([_ext_ones(1), incl[:-1]], axis=0)
+    out = pl.pallas_call(
+        _apply_offset_ext_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block, 4), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 4), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 4), _U32),
         interpret=interpret,
     )(prefixes, offsets)
     return out

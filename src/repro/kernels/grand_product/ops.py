@@ -1,13 +1,40 @@
-"""jit'd wrapper for the grand-product kernel."""
+"""jit'd wrappers + shape adapters for the grand-product kernels.
+
+The blocked-scan kernels want the length to be a block multiple; circuit
+row counts are powers of two but callers (tests, padding edge cases) may
+not be, so both wrappers pad with the multiplicative identity — extra
+trailing ones leave every real prefix product untouched — and slice back.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from . import grand_product as K
+
+_U32 = jnp.uint32
+BLOCK = 256        # kernel scan block
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def grand_product(x, interpret: bool = True):
-    return K.grand_product(x, interpret=interpret)
+    """Exclusive running product of (n,) Fp scalars, any n >= 1."""
+    n = x.shape[0]
+    pad = (-n) % BLOCK if n > BLOCK else 0
+    if pad:
+        x = jnp.concatenate([x.astype(_U32), jnp.ones((pad,), _U32)])
+    out = K.grand_product(x, block=BLOCK, interpret=interpret)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def grand_product_ext(x, interpret: bool = True):
+    """Exclusive running product of (n, 4) Fp4 elements, any n >= 1."""
+    n = x.shape[0]
+    pad = (-n) % BLOCK if n > BLOCK else 0
+    if pad:
+        x = jnp.concatenate([x.astype(_U32), K._ext_ones(pad)], axis=0)
+    out = K.grand_product_ext(x, block=BLOCK, interpret=interpret)
+    return out[:n]

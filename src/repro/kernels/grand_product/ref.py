@@ -11,3 +11,13 @@ def grand_product_ref(x: jnp.ndarray) -> jnp.ndarray:
     incl = jax.lax.associative_scan(F.fmul, x)
     one = jnp.ones((1,), jnp.uint32)
     return jnp.concatenate([one, incl[:-1]])
+
+
+def grand_product_ext_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (n, 4) Fp4 -> exclusive prefix products (n, 4), Z[0] = [1,0,0,0].
+
+    The ``ref`` backend's phase-2 accumulator (exactly the associative-scan
+    schedule the seed prover inlined)."""
+    incl = jax.lax.associative_scan(F.emul, x, axis=0)
+    one = jnp.zeros((1, 4), jnp.uint32).at[0, 0].set(1)
+    return jnp.concatenate([one, incl[:-1]], axis=0)

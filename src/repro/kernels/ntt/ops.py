@@ -1,4 +1,12 @@
-"""jit'd NTT built from the Pallas stage kernel."""
+"""jit'd NTT built from the Pallas stage kernel, plus the shape adapter.
+
+The stage kernel tiles the codeword matrix as ``(batch_tile, g, 2, m)``
+VMEM blocks, so the batch must be a multiple of the tile.  Prover call
+sites transform whatever column count the circuit has (13 fixed columns,
+one deep composition row, ...), so :func:`ntt` flattens leading dims and
+zero-pads the batch up to the tile — transform rows are independent, so
+padding rows cannot perturb real ones — then slices the padding back off.
+"""
 from __future__ import annotations
 
 import functools
@@ -12,22 +20,29 @@ from ...core import poly
 from . import ntt as K
 
 _U32 = jnp.uint32
+BATCH_TILE = 8     # stage-kernel batch block
 
 
 @functools.partial(jax.jit, static_argnames=("inverse", "interpret"))
 def ntt(x: jnp.ndarray, inverse: bool = False, interpret: bool = True):
-    """(batch, n) or (n,) NTT via per-stage Pallas kernels."""
-    squeeze = x.ndim == 1
-    if squeeze:
-        x = x[None]
-    b, n = x.shape
+    """Backend entry point: (..., n) NTT via per-stage Pallas kernels."""
+    shape = x.shape
+    n = shape[-1]
+    x = x.reshape(-1, n).astype(_U32)
+    b = x.shape[0]
+    if b == 0 or n == 1:
+        return x.reshape(shape)
+    pad = (-b) % BATCH_TILE
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, n), _U32)], axis=0)
     x = x[:, jnp.asarray(poly._bitrev_perm(n))]
     tables = poly._stage_twiddles(n, inverse)
     m = 1
     for tw in tables:
-        x = K.ntt_stage(x, jnp.asarray(tw), m, interpret=interpret)
+        x = K.ntt_stage(x, jnp.asarray(tw), m, batch_tile=BATCH_TILE,
+                        interpret=interpret)
         m *= 2
     if inverse:
         n_inv = pow(n, F.P - 2, F.P)
         x = F.fmul(x, _U32(n_inv))
-    return x[0] if squeeze else x
+    return x[:b].reshape(shape)

@@ -1,6 +1,10 @@
-"""Oracle for the NTT kernel: the pure-jnp radix-2 transform."""
+"""Oracle for the NTT kernel: the pure-jnp radix-2 transform.
+
+Calls ``poly.ntt_ref`` directly, NOT the backend-dispatching ``poly.ntt``
+— the oracle must stay the reference even when the active backend is the
+kernel under test."""
 from ...core import poly
 
 
 def ntt_ref(x, inverse: bool = False):
-    return poly.ntt(x, inverse=inverse)
+    return poly.ntt_ref(x, inverse=inverse)

@@ -1,13 +1,35 @@
-"""jit'd wrapper for the Poseidon-like permutation kernel."""
+"""jit'd wrapper + shape adapter for the Poseidon-like permutation kernel.
+
+The raw kernel (``poseidon.permute``) wants a flat ``(n, 16)`` batch with
+``n`` a multiple of its VMEM block.  Circuit-sized callers (Merkle level
+builds, sponge absorbs) show up with arbitrary leading batch shapes and
+non-tile-multiple row counts, so :func:`permute` here flattens, zero-pads
+the batch up to the tile, runs the kernel, and slices the padding back off
+— padding rows are independent states, so they cannot perturb real lanes.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from . import poseidon as K
+
+_U32 = jnp.uint32
+TILE = 64          # kernel batch block (states per grid step)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def permute(states, interpret: bool = True):
-    return K.permute(states, interpret=interpret)
+    """Backend entry point: (..., 16) states, any batch shape/count."""
+    shape = states.shape
+    flat = states.reshape(-1, 16).astype(_U32)
+    n = flat.shape[0]
+    if n == 0:
+        return states.astype(_U32)
+    pad = (-n) % TILE
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad, 16), _U32)], axis=0)
+    out = K.permute(flat, block=TILE, interpret=interpret)
+    return out[:n].reshape(shape)

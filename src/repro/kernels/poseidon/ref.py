@@ -1,6 +1,10 @@
-"""Oracle for the Poseidon-like permutation kernel."""
+"""Oracle for the Poseidon-like permutation kernel.
+
+Calls the pure-jnp path directly (``hashing.permute_ref``), NOT the
+backend-dispatching ``hashing.permute`` — the oracle must stay the
+reference even when the active backend is the kernel under test."""
 from ...core import hashing
 
 
 def permute_ref(states):
-    return hashing.permute(states)
+    return hashing.permute_ref(states)
