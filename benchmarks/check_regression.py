@@ -45,6 +45,7 @@ BASELINE_DIR = ROOT / "benchmarks" / "baselines"
 PAIRS = {                      # fresh (repo root) -> committed baseline
     "BENCH_wire.json": "wire.json",
     "BENCH_kernels.json": "kernels.json",
+    "BENCH_transparency.json": "transparency.json",
 }
 ALLOW_ENV = "ZKGRAPH_BENCH_ALLOW_REGRESSION"
 

@@ -1,0 +1,250 @@
+"""Checkpoint gossip between verifiers: pin the freshest consistent head.
+
+A transparency log only constrains an owner if its clients *compare notes*:
+a lone verifier that accepts whatever checkpoint the owner serves can be
+shown a private fork forever.  This module is the comparing-notes layer (the
+gossip protocol certificate-transparency deployments and transparency-backed
+verifiable-search systems assume):
+
+* a :class:`GossipMessage` — a wire-codable (payload kind 8,
+  ``docs/protocol.md`` §9) envelope carrying a signed-origin
+  :class:`~repro.core.transparency.Checkpoint`, an optional
+  :class:`~repro.core.transparency.ConsistencyProof` linking it to an older
+  head, and the origin's authenticator over the checkpoint bytes;
+* a :class:`GossipPeer` — the verifier-side state machine.  It pins the
+  freshest checkpoint it has *verified consistent* with everything it has
+  ever seen, **demands a consistency proof** before advancing across a
+  manifest revision (:class:`ConsistencyRequired`), ignores stale replays,
+  and raises :class:`EquivocationError` carrying **both** conflicting
+  checkpoints as evidence when two heads for the same tree size disagree or
+  an offered extension fails its consistency proof.
+
+The authenticator is a keyed sponge MAC over the canonical checkpoint bytes
+(``hash_bytes(0x02 || key || checkpoint_bytes)`` — domain-separated from the
+log's ``0x00`` leaf hash; §9).  It stands in for the log operator's
+signature: this repo's hash is a reproduction instance, not an audited
+signature scheme, but the *protocol shape* — origin-bound heads a relay
+cannot forge without the origin key — is the real one.
+
+Owner side: :func:`emit` builds the signed message straight from a
+:class:`TransparencyLog` (durable or in-process).  Verifier side:
+``GossipPeer.offer`` consumes messages from any source — the owner, another
+verifier relaying (:meth:`GossipPeer.head_message`), or hostile bytes via
+:func:`repro.core.wire.decode_gossip_message`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from . import hashing as H
+from . import wire
+from .transparency import Checkpoint, ConsistencyProof, verify_consistency
+
+_AUTH_PREFIX = b"\x02"          # domain-separates the MAC from leaf hashes
+
+__all__ = ["ConsistencyRequired", "EquivocationError", "GossipError",
+           "GossipMessage", "GossipPeer", "emit", "sign_checkpoint",
+           "verify_signature"]
+
+
+class GossipError(ValueError):
+    """A gossip offer was rejected before touching the peer's head: wrong
+    origin, missing/bad authenticator, or an empty (size-0) head."""
+
+
+class ConsistencyRequired(GossipError):
+    """The offered head is newer than the pinned one but carried no
+    consistency proof.  The peer refuses to advance blind — re-offer with
+    ``emit(log, key, since=peer.head.tree_size)``."""
+
+
+class EquivocationError(GossipError):
+    """Two checkpoints for the same log cannot both be honest.
+
+    Raised with the evidence attached: ``pinned`` (what this peer had
+    verified) and ``offered`` (the conflicting head).  Either two roots
+    disagree at one tree size (split view), or an offered extension failed
+    its consistency proof (history rewrite / forged proof).  This is the
+    alarm the whole transparency design exists to ring — callers should
+    publish both checkpoints, not swallow the exception."""
+
+    def __init__(self, pinned: Checkpoint, offered: Checkpoint, reason: str):
+        self.pinned = pinned
+        self.offered = offered
+        super().__init__(
+            f"equivocation detected ({reason}): pinned "
+            f"{pinned.origin!r}@{pinned.tree_size} root "
+            f"{_hex8(pinned.root)} vs offered @{offered.tree_size} root "
+            f"{_hex8(offered.root)}")
+
+
+def _hex8(root) -> str:
+    return np.asarray(root, np.uint32).astype("<u4").tobytes().hex()[:16] \
+        + "…"
+
+
+# ---------------------------------------------------------------------------
+# origin authentication (keyed sponge MAC over canonical checkpoint bytes)
+# ---------------------------------------------------------------------------
+def sign_checkpoint(key: bytes, cp: Checkpoint) -> np.ndarray:
+    """(8,) uint32 authenticator binding ``cp`` to the origin key."""
+    if not isinstance(key, (bytes, bytearray)) or not key:
+        raise GossipError("origin key must be non-empty bytes")
+    return H.hash_bytes(_AUTH_PREFIX + bytes(key) + cp.to_bytes())
+
+
+def verify_signature(key: bytes, cp: Checkpoint, auth) -> bool:
+    """Constant-shape check; ``False`` on any mismatch, never an
+    exception (hostile ``auth`` shapes included)."""
+    try:
+        got = np.asarray(auth, np.uint32)
+        if got.shape != (8,):
+            return False
+        return bool(np.array_equal(got, sign_checkpoint(key, cp)))
+    except (GossipError, ValueError, TypeError):
+        return False
+
+
+# ---------------------------------------------------------------------------
+# the wire envelope
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class GossipMessage:
+    """One gossip round's payload: a signed head, optionally linked to an
+    older head by a consistency proof (required to advance a peer whose
+    pinned head is older)."""
+    checkpoint: Checkpoint
+    consistency: Optional[ConsistencyProof]     # None: bootstrap offer
+    auth: np.ndarray                            # (8,) uint32 origin MAC
+
+    def to_bytes(self) -> bytes:
+        return wire.encode_gossip_message(self)
+
+    @staticmethod
+    def from_bytes(raw: bytes) -> "GossipMessage":
+        return wire.decode_gossip_message(raw)
+
+
+def emit(log, key: bytes, since: int = None) -> GossipMessage:
+    """Owner side: the signed gossip message for ``log``'s current head.
+
+    ``since`` attaches the consistency proof from that older tree size, so
+    a peer pinned there can advance; ``since=None`` is a bootstrap offer
+    (only a peer with no head yet will accept it past size agreement)."""
+    cp = log.checkpoint()
+    proof = None
+    if since is not None:
+        proof = log.consistency_proof(int(since), cp.tree_size)
+    return GossipMessage(cp, proof, sign_checkpoint(key, cp))
+
+
+# ---------------------------------------------------------------------------
+# the peer state machine
+# ---------------------------------------------------------------------------
+class GossipPeer:
+    """Verifier-side gossip state: origin-pinned, equivocation-alarmed.
+
+    The peer remembers every ``tree_size -> root`` it has verified
+    (``seen``), so a *stale* replay that contradicts history is caught just
+    like a conflicting fresh head.  ``offer`` returns ``True`` when the
+    pinned head advanced, ``False`` for duplicates and ignorable stale
+    offers, and raises on everything that must not be silent."""
+
+    def __init__(self, origin: str, auth_key: bytes = None):
+        self.origin = origin
+        self.auth_key = auth_key        # None: transport is pre-authenticated
+        self.head: Optional[Checkpoint] = None
+        self.seen: dict = {}            # tree_size -> (8,) root, verified
+        self._head_msg: Optional[GossipMessage] = None
+
+    @property
+    def pinned(self) -> Checkpoint:
+        """The freshest consistent head; raises until one was accepted."""
+        if self.head is None:
+            raise GossipError(
+                f"gossip peer for {self.origin!r} has no pinned head yet")
+        return self.head
+
+    def head_message(self) -> GossipMessage:
+        """The accepted message for this peer's head, for relaying to other
+        peers verbatim — the origin's authenticator travels with it, so a
+        relay cannot substitute its own head."""
+        if self._head_msg is None:
+            raise GossipError(
+                f"gossip peer for {self.origin!r} has nothing to relay")
+        return self._head_msg
+
+    def offer(self, msg: GossipMessage) -> bool:
+        cp = msg.checkpoint
+        if cp.origin != self.origin:
+            raise GossipError(
+                f"checkpoint for log {cp.origin!r} offered to a peer "
+                f"pinned on {self.origin!r}")
+        if cp.tree_size < 1:
+            raise GossipError("an empty (size-0) checkpoint pins nothing")
+        if self.auth_key is not None and not verify_signature(
+                self.auth_key, cp, msg.auth):
+            raise GossipError(
+                f"checkpoint @{cp.tree_size} failed origin authentication")
+        known = self.seen.get(int(cp.tree_size))
+        if known is not None and not np.array_equal(known, cp.root):
+            # split view: two roots for one tree size — stale or fresh,
+            # this is the equivocation alarm, with both heads as evidence
+            raise EquivocationError(
+                Checkpoint(self.origin, int(cp.tree_size), known), cp,
+                f"two roots for tree size {cp.tree_size}")
+        if self.head is None:
+            self._pin(msg)
+            return True
+        if cp.tree_size == self.head.tree_size:
+            return False                    # duplicate of the pinned head
+        if cp.tree_size < self.head.tree_size:
+            # stale replay: never regress.  If `known` matched above it is
+            # harmless history; if unseen, it is unverifiable backwards —
+            # either way the pinned head stands.
+            return False
+        if msg.consistency is None:
+            raise ConsistencyRequired(
+                f"offered head @{cp.tree_size} is ahead of the pinned "
+                f"@{self.head.tree_size} but carries no consistency proof")
+        if (msg.consistency.old_size, msg.consistency.new_size) != \
+                (self.head.tree_size, cp.tree_size):
+            raise ConsistencyRequired(
+                f"consistency proof links {msg.consistency.old_size} -> "
+                f"{msg.consistency.new_size}, not the pinned "
+                f"{self.head.tree_size} -> offered {cp.tree_size}")
+        if not verify_consistency(self.head, cp, msg.consistency):
+            # a correctly-shaped proof that fails: the offered head does
+            # not extend the pinned history — forged proof or forked log
+            raise EquivocationError(
+                self.head, cp,
+                f"offered head @{cp.tree_size} does not extend the pinned "
+                f"head @{self.head.tree_size} (consistency proof invalid)")
+        self._pin(msg)
+        return True
+
+    def _pin(self, msg: GossipMessage) -> None:
+        self.head = msg.checkpoint
+        self.seen[int(msg.checkpoint.tree_size)] = \
+            np.asarray(msg.checkpoint.root, np.uint32).copy()
+        self._head_msg = msg
+
+    def gossip_with(self, other: "GossipPeer") -> bool:
+        """One symmetric exchange: each peer offers the other its head
+        message.  Returns ``True`` if either head advanced; raises
+        :class:`EquivocationError` if their views conflict (the split-view
+        check two verifiers run against each other).  A peer whose head is
+        behind and receives a proofless newer head keeps its pin — advance
+        happens when a message with the right consistency proof arrives."""
+        advanced = False
+        for src, dst in ((self, other), (other, self)):
+            if src._head_msg is None:
+                continue
+            try:
+                advanced = dst.offer(src.head_message()) or advanced
+            except ConsistencyRequired:
+                pass        # behind, but not conflicting: keep the pin
+        return advanced

@@ -213,10 +213,10 @@ class ZKGraphSession:
     @classmethod
     def verifier(cls, commitments: CommitmentManifest = None,
                  cfg: pv.ProverConfig = None, *, checkpoint=None,
-                 inclusion=None, manifest_bytes=None):
+                 inclusion=None, manifest_bytes=None, gossip=None):
         """A verifier-side session: no database, trust root only.
 
-        Two bootstrap modes:
+        Three bootstrap modes:
 
         * ``verifier(manifest)`` — an in-process
           :class:`~repro.core.commit.CommitmentManifest` obtained out of
@@ -227,10 +227,24 @@ class ZKGraphSession:
           (:func:`repro.core.transparency.bootstrap_manifest`) before
           anything trusts them; a failed inclusion raises
           :class:`~repro.core.transparency.TransparencyError`.
+        * ``verifier(gossip=peer, inclusion=pf, manifest_bytes=raw)`` —
+          the deployment path: the checkpoint is the
+          :class:`~repro.core.gossip.GossipPeer`'s pinned head — the
+          freshest head that peer has verified consistent with every other
+          head it gossiped (``peer.pinned`` raises
+          :class:`~repro.core.gossip.GossipError` if nothing is pinned
+          yet), so the trust root is backed by the gossip network, not a
+          single served checkpoint.
 
         Either way the session pins the manifest digest, and :meth:`verify`
         rejects any bundle whose ``manifest_digest`` differs.
         """
+        if gossip is not None:
+            if checkpoint is not None:
+                raise TypeError(
+                    "pass either checkpoint= or gossip= (whose pinned head "
+                    "becomes the checkpoint), not both")
+            checkpoint = gossip.pinned
         if checkpoint is not None or inclusion is not None \
                 or manifest_bytes is not None:
             if commitments is not None:
@@ -265,7 +279,11 @@ class ZKGraphSession:
         Appends the canonical manifest bytes as a new leaf and returns
         ``(checkpoint, inclusion_proof, manifest_bytes)`` — exactly the
         bootstrap inputs of :meth:`verifier`, so the owner's publication and
-        the verifier's trust root are the same auditable artifact."""
+        the verifier's trust root are the same auditable artifact.  ``log``
+        may be an in-process :class:`~repro.core.transparency.
+        TransparencyLog` or a durable one (``TransparencyLog.open(path)``)
+        — with a durable log the append is fsync'd before the checkpoint is
+        returned, so a served checkpoint always survives an owner crash."""
         raw = self.commitments.to_bytes()
         cp = log.append(raw)
         pf = log.inclusion_proof(cp.tree_size - 1, cp.tree_size)

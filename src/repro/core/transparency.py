@@ -125,6 +125,18 @@ class TransparencyLog:
         self._entries: list = []     # raw manifest bytes, re-servable
         self._memo: dict = {}        # (lo, hi) -> subtree root
 
+    @staticmethod
+    def open(path, origin: str = None, checkpoint_every: int = 1):
+        """Open (or create) a *durable* log backed by the append-only file
+        store at ``path`` (:mod:`repro.core.logstore`): fsync'd appends,
+        periodic checkpoint records, torn-tail truncate-on-recovery, and a
+        replay that re-derives and cross-checks every stored checkpoint's
+        Merkle root.  Returns a
+        :class:`~repro.core.logstore.DurableTransparencyLog` (a drop-in
+        :class:`TransparencyLog` with ``.sync()`` / ``.close()``)."""
+        from .logstore import DurableTransparencyLog
+        return DurableTransparencyLog.open(path, origin, checkpoint_every)
+
     @property
     def size(self) -> int:
         return len(self._leaves)

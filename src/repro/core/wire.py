@@ -64,6 +64,7 @@ KIND_MANIFEST = 4
 KIND_CHECKPOINT = 5
 KIND_INCLUSION = 6
 KIND_CONSISTENCY = 7
+KIND_GOSSIP = 8      # additive in v2: old payloads remain valid
 
 # hard caps: a malformed length prefix can never trigger a large allocation
 MAX_STR = 4096
@@ -77,6 +78,7 @@ MAX_TABLES = 256             # manifest: registered base-table descriptors
 MAX_SIZES = 64               # manifest: published circuit sizes per table
 MAX_COLUMNS = 64             # manifest: named columns per table
 MAX_LOG_DEPTH = 64           # transparency log: audit/consistency path nodes
+MAX_EMBED = 1 << 20          # gossip: embedded checkpoint/proof message bytes
 
 # value tags
 _T_INT, _T_BOOL, _T_FLOAT, _T_STR, _T_ARR, _T_TUPLE, _T_LIST, _T_DICT = \
@@ -96,6 +98,7 @@ _F_M_VERSION, _F_M_NNODES, _F_M_EDGES, _F_M_TABLES, _F_M_ROOTS = \
 _F_C_ORIGIN, _F_C_SIZE, _F_C_ROOT = 0x50, 0x51, 0x52
 _F_I_INDEX, _F_I_SIZE, _F_I_PATH = 0x60, 0x61, 0x62
 _F_Y_OLD, _F_Y_NEW, _F_Y_PATH = 0x70, 0x71, 0x72
+_F_G_CHECKPOINT, _F_G_CONSIST, _F_G_AUTH = 0x80, 0x81, 0x82
 
 _DTYPES = {0: np.dtype("<u4"), 1: np.dtype("<i8")}
 _DTYPE_CODE = {np.dtype(np.uint32): 0, np.dtype(np.int64): 1}
@@ -948,3 +951,69 @@ def decode_consistency_proof(raw: bytes):
     path = _log_path(d, "consistency")
     d.done()
     return ConsistencyProof(old_size, new_size, path)
+
+
+# ---------------------------------------------------------------------------
+# gossip envelope (kind 8): signed checkpoint + optional consistency proof
+# ---------------------------------------------------------------------------
+def _embed(e: _Enc, raw: bytes, what: str):
+    """A complete inner wire message, length-prefixed.  Nesting whole
+    messages (their own header included) keeps one canonical encoding per
+    payload and reuses each inner codec's validation wholesale."""
+    if len(raw) > MAX_EMBED:
+        raise WireFormatError(
+            f"embedded {what} message too large: {len(raw)} > {MAX_EMBED}")
+    e.u32(len(raw))
+    e.buf += raw
+
+
+def _unembed(d: _Dec, what: str) -> bytes:
+    n = d.u32()
+    if n > MAX_EMBED:
+        raise WireFormatError(
+            f"embedded {what} length {n} > {MAX_EMBED}")
+    return d.take(n)
+
+
+def encode_gossip_message(msg) -> bytes:
+    """Canonical bytes for a :class:`repro.core.gossip.GossipMessage`."""
+    e = _Enc()
+    _header(e, KIND_GOSSIP)
+    e.u8(_F_G_CHECKPOINT)
+    _embed(e, encode_checkpoint(msg.checkpoint), "checkpoint")
+    e.u8(_F_G_CONSIST)
+    if msg.consistency is None:
+        e.u8(0)
+    else:
+        e.u8(1)
+        _embed(e, encode_consistency_proof(msg.consistency), "consistency")
+    e.u8(_F_G_AUTH)
+    auth = np.asarray(msg.auth)
+    if auth.shape != (8,):
+        raise WireFormatError(
+            f"gossip auth must be an (8,) digest, got shape {auth.shape}")
+    e.array(auth, dtype=np.uint32, ndim=1)
+    return bytes(e.buf)
+
+
+def decode_gossip_message(raw: bytes):
+    """Decode + validate canonical gossip bytes; the embedded checkpoint
+    and consistency proof pass through their own full decoders, so every
+    inner invariant (kinds, bounds, size relations) holds before a
+    :class:`~repro.core.gossip.GossipPeer` sees the message."""
+    from .gossip import GossipMessage
+    d = _Dec(raw)
+    _check_header(d, KIND_GOSSIP)
+    d.tag(_F_G_CHECKPOINT, "gossip.checkpoint")
+    checkpoint = decode_checkpoint(_unembed(d, "checkpoint"))
+    d.tag(_F_G_CONSIST, "gossip.consistency")
+    flag = d.u8()
+    if flag not in (0, 1):
+        raise WireFormatError(f"non-canonical consistency flag {flag}")
+    consistency = None
+    if flag:
+        consistency = decode_consistency_proof(_unembed(d, "consistency"))
+    d.tag(_F_G_AUTH, "gossip.auth")
+    auth = d.array(dtype=np.uint32, ndim=1, shape=(8,))
+    d.done()
+    return GossipMessage(checkpoint, consistency, auth)

@@ -42,8 +42,9 @@ def test_readme_quickstart_block_present_and_current():
     m = re.search(r"```python\n(.*?)```", readme, re.S)
     assert m, "README.md lost its quickstart code block"
     code = m.group(1)
-    # the snippet must exercise the documented trust path end to end
-    for needle in ("ZKGraphSession", "TransparencyLog", "publish_to",
-                   "verify_bytes", "checkpoint="):
+    # the snippet must exercise the documented trust path end to end:
+    # durable log, gossip-pinned head, byte-level verification
+    for needle in ("ZKGraphSession", "TransparencyLog.open", "publish_to",
+                   "verify_bytes", "GossipPeer", "gossip="):
         assert needle in code, f"README quickstart no longer uses {needle}"
     compile(code, "README.md#quickstart", "exec")    # at least parses

@@ -32,20 +32,17 @@ def test_ldbc_ic1_smoke():
 
 
 @pytest.mark.slow
-def test_serve_queries_smoke(tmp_path):
+def test_serve_queries_demo(tmp_path):
+    """The full multi-process deployment demo: durable log, owner
+    SIGKILL + torn-tail recovery, two gossiping verifier processes,
+    revision advance by consistency proof, equivocation detection.  The
+    driver asserts all of it internally; here we re-assert the summaries.
+    IC13 queue entries draw person2 from [9, 24), so keep >= 24 persons."""
     mod = load_example("serve_queries")
-    mod.STATE = str(tmp_path / "serve_state.json")
-    # IC13 queue entries draw person2 from [9, 24), so keep >= 24 persons
-    mod.main(["--queries", "3"], n_knows=48, n_persons=24, cfg=TINY)
-    assert not os.path.exists(mod.STATE)    # completed queue cleans up
-
-
-@pytest.mark.slow
-def test_serve_queries_resume(tmp_path):
-    mod = load_example("serve_queries")
-    mod.STATE = str(tmp_path / "serve_state.json")
-    mod.main(["--queries", "3", "--restart-demo"],
-             n_knows=48, n_persons=24, cfg=TINY)
-    assert os.path.exists(mod.STATE)        # crashed mid-queue: checkpoint
-    mod.main(["--queries", "3"], n_knows=48, n_persons=24, cfg=TINY)
-    assert not os.path.exists(mod.STATE)
+    out = mod.main(["--queries", "3", "--dir", str(tmp_path / "demo")],
+                   n_knows=48, n_persons=24, cfg=TINY)
+    assert out["owner"]["tree_size"] == 2          # manifest + revision
+    for name in ("v1", "v2"):
+        assert all(out[name]["results"].values())
+        assert out[name]["equivocation_detected"] is True
+    assert os.path.exists(tmp_path / "demo" / "transparency.log")

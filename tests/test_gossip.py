@@ -1,0 +1,358 @@
+"""Checkpoint-gossip adversarial coverage (repro/core/gossip.py).
+
+The satellite paths the issue names are all here, running on every PR:
+stale-checkpoint replay, consistency-proof forgery across a manifest
+revision, and split-view equivocation between two peers — plus origin
+authentication, the wire envelope treating every byte as hostile, and the
+session bootstrap from a gossip-pinned head.
+"""
+import numpy as np
+import pytest
+
+from repro.core import gossip as gp
+from repro.core import wire
+from repro.core.session import WireFormatError, ZKGraphSession
+from repro.core.transparency import (Checkpoint, ConsistencyProof,
+                                     TransparencyLog)
+
+KEY = b"test-origin-key"
+ORIGIN = "gossip-log"
+
+
+@pytest.fixture()
+def log():
+    log = TransparencyLog(ORIGIN)
+    for i in range(6):
+        log.append(b"manifest-rev-%d" % i)
+    return log
+
+
+@pytest.fixture()
+def fork(log):
+    """Same origin, same length, different history from leaf 1 on."""
+    fork = TransparencyLog(ORIGIN)
+    fork.append(log.entry(0))
+    for i in range(1, log.size):
+        fork.append(b"FORKED-rev-%d" % i)
+    return fork
+
+
+def pinned_peer(log, size=3):
+    peer = gp.GossipPeer(ORIGIN, KEY)
+    assert peer.offer(gp.GossipMessage(log.checkpoint(size), None,
+                                       gp.sign_checkpoint(
+                                           KEY, log.checkpoint(size))))
+    return peer
+
+
+def msg_at(log, size, since=None):
+    cp = log.checkpoint(size)
+    proof = log.consistency_proof(since, size) if since else None
+    return gp.GossipMessage(cp, proof, gp.sign_checkpoint(KEY, cp))
+
+
+# ---------------------------------------------------------------------------
+# head pinning and advancement
+# ---------------------------------------------------------------------------
+def test_bootstrap_then_advance_with_proof(log):
+    peer = gp.GossipPeer(ORIGIN, KEY)
+    with pytest.raises(gp.GossipError, match="no pinned head"):
+        peer.pinned
+    assert peer.offer(msg_at(log, 2)) is True
+    assert peer.pinned.tree_size == 2
+    assert peer.offer(msg_at(log, 5, since=2)) is True
+    assert peer.pinned.tree_size == 5
+    assert np.array_equal(peer.pinned.root, log.root(5))
+
+
+def test_advance_without_proof_is_demanded_not_accepted(log):
+    peer = pinned_peer(log, 3)
+    with pytest.raises(gp.ConsistencyRequired):
+        peer.offer(msg_at(log, 6))
+    assert peer.pinned.tree_size == 3          # head unchanged
+    # a proof for the WRONG span is demanded again, not misused
+    with pytest.raises(gp.ConsistencyRequired, match="links 2 -> 6"):
+        peer.offer(msg_at(log, 6, since=2))
+    assert peer.offer(msg_at(log, 6, since=3)) is True
+
+
+def test_duplicate_head_is_a_noop(log):
+    peer = pinned_peer(log, 4)
+    assert peer.offer(msg_at(log, 4)) is False
+    assert peer.pinned.tree_size == 4
+
+
+def test_empty_checkpoint_rejected(log):
+    peer = gp.GossipPeer(ORIGIN, KEY)
+    cp = Checkpoint(ORIGIN, 0, log.root(0))
+    with pytest.raises(gp.GossipError, match="size-0"):
+        peer.offer(gp.GossipMessage(cp, None, gp.sign_checkpoint(KEY, cp)))
+
+
+def test_cross_origin_head_rejected(log):
+    peer = gp.GossipPeer("other-log", KEY)
+    with pytest.raises(gp.GossipError, match="pinned on"):
+        peer.offer(msg_at(log, 2))
+
+
+# ---------------------------------------------------------------------------
+# stale-checkpoint replay
+# ---------------------------------------------------------------------------
+def test_stale_replay_never_regresses_the_head(log):
+    peer = gp.GossipPeer(ORIGIN, KEY)
+    peer.offer(msg_at(log, 2))
+    peer.offer(msg_at(log, 5, since=2))
+    # replaying both an already-seen and a never-seen older checkpoint
+    assert peer.offer(msg_at(log, 2)) is False
+    assert peer.offer(msg_at(log, 4)) is False
+    assert peer.pinned.tree_size == 5
+
+
+def test_stale_replay_that_contradicts_history_is_equivocation(log, fork):
+    peer = gp.GossipPeer(ORIGIN, KEY)
+    peer.offer(msg_at(log, 3))
+    peer.offer(msg_at(log, 6, since=3))
+    with pytest.raises(gp.EquivocationError) as exc:
+        peer.offer(msg_at(fork, 3))            # same size 3, forked root
+    assert exc.value.pinned.tree_size == exc.value.offered.tree_size == 3
+    assert np.array_equal(exc.value.pinned.root, log.root(3))
+    assert np.array_equal(exc.value.offered.root, fork.root(3))
+
+
+# ---------------------------------------------------------------------------
+# consistency-proof forgery across a manifest revision
+# ---------------------------------------------------------------------------
+def test_forged_consistency_proof_raises_equivocation(log):
+    peer = pinned_peer(log, 3)
+    honest = log.consistency_proof(3, 6)
+    for row in range(honest.path.shape[0]):
+        forged_path = honest.path.copy()
+        forged_path[row, 0] ^= 1
+        forged = gp.GossipMessage(
+            log.checkpoint(6),
+            ConsistencyProof(3, 6, forged_path),
+            gp.sign_checkpoint(KEY, log.checkpoint(6)))
+        with pytest.raises(gp.EquivocationError, match="does not extend"):
+            peer.offer(forged)
+        assert peer.pinned.tree_size == 3      # alarm, no state change
+
+
+def test_forked_head_with_its_own_valid_proof_is_equivocation(log, fork):
+    """The fork CAN prove its own 3 -> 6 consistency — but not against the
+    peer's honestly-pinned head, whose root differs at size 3... and when
+    sizes collide exactly, the split view fires first."""
+    peer = pinned_peer(log, 3)
+    forked = gp.GossipMessage(fork.checkpoint(6),
+                              fork.consistency_proof(3, 6),
+                              gp.sign_checkpoint(KEY, fork.checkpoint(6)))
+    with pytest.raises(gp.EquivocationError):
+        peer.offer(forked)
+    evidence = None
+    try:
+        peer.offer(forked)
+    except gp.EquivocationError as e:
+        evidence = e
+    assert evidence.pinned.tree_size == 3      # both heads attached
+    assert evidence.offered.tree_size == 6
+
+
+# ---------------------------------------------------------------------------
+# split-view equivocation between two peers (the acceptance criterion)
+# ---------------------------------------------------------------------------
+def test_split_view_between_two_peers_raises_with_both_checkpoints(log,
+                                                                   fork):
+    """Two GossipPeers fed conflicting heads for the same tree size: the
+    moment they gossip with each other, EquivocationError fires carrying
+    both conflicting checkpoints as evidence."""
+    v1 = pinned_peer(log, 6)                   # honest view
+    v2 = pinned_peer(fork, 6)                  # the owner's forked view
+    with pytest.raises(gp.EquivocationError) as exc:
+        v1.gossip_with(v2)
+    assert exc.value.pinned.tree_size == exc.value.offered.tree_size == 6
+    roots = {exc.value.pinned.root.tobytes(),
+             exc.value.offered.root.tobytes()}
+    assert roots == {np.asarray(log.root(6), np.uint32).tobytes(),
+                     np.asarray(fork.root(6), np.uint32).tobytes()}
+    # and the direction is symmetric
+    with pytest.raises(gp.EquivocationError):
+        v2.gossip_with(v1)
+
+
+def test_agreeing_peers_gossip_without_advance(log):
+    v1 = pinned_peer(log, 6)
+    v2 = pinned_peer(log, 6)
+    assert v1.gossip_with(v2) is False
+
+
+def test_behind_peer_keeps_pin_until_proof_arrives(log):
+    """gossip_with between peers at different sizes must not regress or
+    blind-advance: the behind peer demands a proof (swallowed as
+    non-conflicting), then advances when the owner supplies one."""
+    ahead = pinned_peer(log, 6)
+    behind = pinned_peer(log, 3)
+    assert ahead.gossip_with(behind) is False
+    assert behind.pinned.tree_size == 3
+    assert behind.offer(msg_at(log, 6, since=3)) is True
+    assert behind.gossip_with(ahead) is False  # now in agreement
+
+
+# ---------------------------------------------------------------------------
+# origin authentication
+# ---------------------------------------------------------------------------
+def test_bad_or_missing_signature_rejected(log):
+    peer = gp.GossipPeer(ORIGIN, KEY)
+    cp = log.checkpoint(2)
+    wrong_key = gp.GossipMessage(cp, None,
+                                 gp.sign_checkpoint(b"not-the-key", cp))
+    with pytest.raises(gp.GossipError, match="authentication"):
+        peer.offer(wrong_key)
+    tampered = gp.sign_checkpoint(KEY, cp).copy()
+    tampered[0] ^= 1
+    with pytest.raises(gp.GossipError, match="authentication"):
+        peer.offer(gp.GossipMessage(cp, None, tampered))
+    with pytest.raises(gp.GossipError, match="authentication"):
+        peer.offer(gp.GossipMessage(cp, None, np.zeros((3,), np.uint32)))
+
+
+def test_signature_binds_the_exact_checkpoint(log):
+    cp2, cp3 = log.checkpoint(2), log.checkpoint(3)
+    auth2 = gp.sign_checkpoint(KEY, cp2)
+    assert gp.verify_signature(KEY, cp2, auth2)
+    assert not gp.verify_signature(KEY, cp3, auth2)      # size swap
+    assert not gp.verify_signature(KEY, Checkpoint(
+        "other-log", cp2.tree_size, cp2.root), auth2)    # origin swap
+    assert not gp.verify_signature(KEY, cp2, None)
+    assert not gp.verify_signature(b"other", cp2, auth2)
+
+
+def test_keyless_peer_skips_mac_but_still_detects_equivocation(log, fork):
+    """auth_key=None models a pre-authenticated transport: MAC checks are
+    skipped, the split-view alarm is not."""
+    peer = gp.GossipPeer(ORIGIN, auth_key=None)
+    junk_auth = np.zeros(8, np.uint32)
+    assert peer.offer(gp.GossipMessage(log.checkpoint(3), None, junk_auth))
+    with pytest.raises(gp.EquivocationError):
+        peer.offer(gp.GossipMessage(fork.checkpoint(3), None, junk_auth))
+
+
+def test_empty_key_rejected(log):
+    with pytest.raises(gp.GossipError, match="non-empty"):
+        gp.sign_checkpoint(b"", log.checkpoint(2))
+
+
+# ---------------------------------------------------------------------------
+# the wire envelope (kind 8) treats every byte as hostile
+# ---------------------------------------------------------------------------
+def test_gossip_message_roundtrip_canonical(log):
+    for msg in (gp.emit(log, KEY), gp.emit(log, KEY, since=2)):
+        raw = msg.to_bytes()
+        rt = gp.GossipMessage.from_bytes(raw)
+        assert rt.to_bytes() == raw
+        assert rt.checkpoint.to_bytes() == msg.checkpoint.to_bytes()
+        assert (rt.consistency is None) == (msg.consistency is None)
+        if rt.consistency is not None:
+            assert rt.consistency.to_bytes() == msg.consistency.to_bytes()
+        assert np.array_equal(rt.auth, msg.auth)
+
+
+def test_gossip_wire_truncation_and_trailing_rejected(log):
+    raw = gp.emit(log, KEY, since=2).to_bytes()
+    header = len(wire.MAGIC) + 3
+    for cut in (0, 3, header - 1, header, header + 4, len(raw) // 2,
+                len(raw) - 1):
+        with pytest.raises(WireFormatError):
+            gp.GossipMessage.from_bytes(raw[:cut])
+    with pytest.raises(WireFormatError):
+        gp.GossipMessage.from_bytes(raw + b"\x00")
+
+
+def test_gossip_wire_kind_confusion_rejected(log):
+    with pytest.raises(WireFormatError):
+        gp.GossipMessage.from_bytes(log.checkpoint().to_bytes())
+    with pytest.raises(WireFormatError):
+        from repro.core.transparency import Checkpoint as CP
+        CP.from_bytes(gp.emit(log, KEY).to_bytes())
+
+
+def test_gossip_wire_non_canonical_flag_rejected(log):
+    raw = bytearray(gp.emit(log, KEY).to_bytes())
+    # the consistency flag byte follows the embedded checkpoint message
+    cp_len = len(log.checkpoint().to_bytes())
+    flag_at = len(wire.MAGIC) + 3 + 1 + 4 + cp_len + 1
+    assert raw[flag_at] == 0
+    raw[flag_at] = 2
+    with pytest.raises(WireFormatError, match="flag"):
+        gp.GossipMessage.from_bytes(bytes(raw))
+
+
+def test_gossip_wire_embedded_message_validated(log):
+    """The embedded checkpoint passes through decode_checkpoint wholesale:
+    corrupting its inner bytes fails the inner decoder."""
+    msg = gp.emit(log, KEY)
+    raw = bytearray(msg.to_bytes())
+    raw[len(wire.MAGIC) + 3 + 1 + 4] ^= 0xFF    # embedded MAGIC byte
+    with pytest.raises(WireFormatError):
+        gp.GossipMessage.from_bytes(bytes(raw))
+
+
+def test_gossip_wire_byte_flip_fuzz_never_crashes(log):
+    raw = gp.emit(log, KEY, since=3).to_bytes()
+    rng = np.random.default_rng(7)
+    peer = pinned_peer(log, 3)
+    for pos in rng.integers(0, len(raw), size=64):
+        flipped = bytearray(raw)
+        flipped[pos] ^= 0x10
+        try:
+            msg = gp.GossipMessage.from_bytes(bytes(flipped))
+        except WireFormatError:
+            continue
+        # survived the codec: the peer must still fail closed (bad MAC,
+        # bad proof, or equivocation) or accept a byte-identical message
+        try:
+            peer.offer(msg)
+        except gp.GossipError:
+            pass
+        assert peer.pinned.tree_size in (3, 6)
+
+
+def test_oversized_embed_rejected():
+    e = wire._Enc()
+    e.buf += wire.MAGIC
+    e.u16(wire.WIRE_VERSION)
+    e.u8(wire.KIND_GOSSIP)
+    e.u8(wire._F_G_CHECKPOINT)
+    e.u32(wire.MAX_EMBED + 1)
+    e.buf += b"\x00" * 64
+    with pytest.raises(WireFormatError, match="embedded"):
+        wire.decode_gossip_message(bytes(e.buf))
+
+
+# ---------------------------------------------------------------------------
+# session bootstrap from a gossip-pinned head
+# ---------------------------------------------------------------------------
+def test_verifier_bootstraps_from_gossip_pinned_head(owner, bundle,
+                                                     tiny_cfg):
+    log = TransparencyLog("session-gossip-log")
+    checkpoint, inclusion, raw = owner.publish_to(log)
+    peer = gp.GossipPeer("session-gossip-log", KEY)
+    peer.offer(gp.GossipMessage(checkpoint, None,
+                                gp.sign_checkpoint(KEY, checkpoint)))
+    v = ZKGraphSession.verifier(cfg=tiny_cfg, gossip=peer,
+                                inclusion=inclusion, manifest_bytes=raw)
+    assert v.verify(bundle) is True
+
+
+def test_verifier_gossip_bootstrap_fails_closed(owner, tiny_cfg):
+    log = TransparencyLog("session-gossip-log")
+    checkpoint, inclusion, raw = owner.publish_to(log)
+    empty = gp.GossipPeer("session-gossip-log", KEY)
+    with pytest.raises(gp.GossipError, match="no pinned head"):
+        ZKGraphSession.verifier(cfg=tiny_cfg, gossip=empty,
+                                inclusion=inclusion, manifest_bytes=raw)
+    pinned = gp.GossipPeer("session-gossip-log", KEY)
+    pinned.offer(gp.GossipMessage(checkpoint, None,
+                                  gp.sign_checkpoint(KEY, checkpoint)))
+    with pytest.raises(TypeError, match="not both"):
+        ZKGraphSession.verifier(cfg=tiny_cfg, gossip=pinned,
+                                checkpoint=checkpoint, inclusion=inclusion,
+                                manifest_bytes=raw)

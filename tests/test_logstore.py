@@ -1,0 +1,452 @@
+"""Durable log-store crash and adversarial coverage.
+
+The durability claims of repro/core/logstore.py are gated here, on every PR
+(none of these are slow-marked; CI additionally runs this file in a
+dedicated ``logstore-recovery`` step):
+
+* acknowledged appends survive ``kill -9`` — asserted with a real
+  SIGKILLed writer subprocess, at a random moment, repeatedly;
+* a torn tail record (simulated crash mid-write, at EVERY byte offset of
+  the final record) is detected and truncated back to the last intact
+  record, and the recovered log's roots are byte-identical to a fresh
+  in-memory log over the recovered entries;
+* non-crash corruption — bad magic, mid-file damage with intact records
+  after it, checkpoint records whose roots don't match the re-derived
+  tree — fails closed with ``LogStoreError``, never a silent repair.
+"""
+import os
+import signal
+import struct
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import logstore as ls
+from repro.core.transparency import Checkpoint, TransparencyLog
+
+ENTRIES = [b"manifest-rev-%d" % i + bytes(range(i % 7)) for i in range(9)]
+
+
+def fresh_store(path, entries=ENTRIES, checkpoint_every=1):
+    log = ls.DurableTransparencyLog.open(path, "t-log",
+                                         checkpoint_every=checkpoint_every)
+    for e in entries:
+        log.append(e)
+    log.close()
+    return path
+
+
+def expected_root(entries):
+    mem = TransparencyLog("t-log")
+    for e in entries:
+        mem.append(e)
+    return mem.root()
+
+
+def record_spans(raw):
+    """[(offset, kind, payload, end)] for every intact record, in order."""
+    pos, spans = len(ls.STORE_MAGIC), []
+    while pos < len(raw):
+        rec = ls._parse_record(raw, pos)
+        if rec is None:
+            break
+        kind, payload, end = rec
+        spans.append((pos, kind, payload, end))
+        pos = end
+    return spans
+
+
+def append_record(path, kind, payload):
+    """Append one framed record at the file's current tail offset."""
+    offset = os.path.getsize(path)
+    with open(path, "ab") as fh:
+        fh.write(ls.frame_record(kind, payload, offset))
+
+
+# ---------------------------------------------------------------------------
+# round trip + durability basics
+# ---------------------------------------------------------------------------
+def test_reopen_preserves_entries_and_roots(tmp_path):
+    path = fresh_store(tmp_path / "log.bin")
+    log = TransparencyLog.open(path)            # the front door
+    assert isinstance(log, ls.DurableTransparencyLog)
+    assert log.origin == "t-log"                # adopted from the store
+    assert log.recovered_bytes == 0
+    assert log.size == len(ENTRIES)
+    assert [log.entry(i) for i in range(log.size)] == ENTRIES
+    for size in range(1, log.size + 1):
+        assert np.array_equal(log.root(size), expected_root(ENTRIES[:size]))
+    log.sync()
+    log.close()
+
+
+def test_append_is_on_disk_before_checkpoint_returns(tmp_path):
+    """No close(), no extra flush: the bytes an append acknowledged must
+    already be replayable by an independent reader (fsync'd write-through)."""
+    path = tmp_path / "log.bin"
+    log = ls.DurableTransparencyLog.open(path, "t-log")
+    cp = log.append(b"only-entry")
+    origin, entries, checkpoints, intact = ls.replay(path.read_bytes())
+    assert origin == "t-log" and entries == [b"only-entry"]
+    assert checkpoints and checkpoints[-1][1].tree_size == 1
+    assert np.array_equal(checkpoints[-1][1].root, cp.root)
+    log.close()
+
+
+def test_checkpoint_every_n_appends(tmp_path):
+    path = fresh_store(tmp_path / "log.bin", checkpoint_every=4)
+    _, entries, checkpoints, _ = ls.replay(path.read_bytes())
+    assert len(entries) == 9
+    assert [cp.tree_size for _, cp in checkpoints] == [4, 8]
+    log = TransparencyLog.open(path)
+    assert log.last_stored_checkpoint.tree_size == 8
+    log.append(b"ninth-to-twelfth" * 1)
+    log.close()
+
+
+def test_open_adopts_or_rejects_origin(tmp_path):
+    path = fresh_store(tmp_path / "log.bin")
+    assert TransparencyLog.open(path, "t-log").origin == "t-log"
+    with pytest.raises(ls.LogStoreError, match="belongs to"):
+        TransparencyLog.open(path, "other-log")
+
+
+def test_closed_store_refuses_appends(tmp_path):
+    log = ls.DurableTransparencyLog.open(tmp_path / "log.bin", "t-log")
+    log.close()
+    with pytest.raises(ls.LogStoreError, match="closed"):
+        log.append(b"x")
+
+
+def test_failed_write_poisons_store_and_rolls_back_memory(tmp_path):
+    """A write that dies mid-record (disk full, I/O error) may leave junk
+    at an unknowable offset: the store must poison itself (no further
+    appends framed against a stale offset, which replay would silently
+    truncate as a torn tail) and the in-memory tree must roll back so it
+    never runs ahead of disk.  Reopening recovers the intact prefix."""
+    path = tmp_path / "log.bin"
+    log = ls.DurableTransparencyLog.open(path, "t-log")
+    log.append(b"survives")
+    root_before = log.root()
+
+    class _DyingFh:
+        def write(self, data):
+            # the classic partial failure: a few bytes land (inside the
+            # entry record's frame, so the tail is genuinely torn), then
+            # the device reports ENOSPC
+            with open(path, "ab") as fh:
+                fh.write(data[:10])
+            raise OSError(28, "No space left on device")
+
+        def close(self):
+            pass
+
+    log._fh.close()
+    log._fh = _DyingFh()
+    with pytest.raises(OSError):
+        log.append(b"never-acknowledged")
+    assert log.size == 1                      # memory rolled back
+    assert np.array_equal(log.root(), root_before)
+    with pytest.raises(ls.LogStoreError, match="poisoned|closed"):
+        log.append(b"refused")                # poisoned until reopened
+    reopened = TransparencyLog.open(path)     # junk truncated as torn tail
+    assert reopened.size == 1
+    assert reopened.entry(0) == b"survives"
+    assert reopened.recovered_bytes > 0
+    assert np.array_equal(reopened.root(), root_before)
+    reopened.append(b"post-recovery")         # fully writable again
+    reopened.sync()
+    reopened.close()
+
+
+# ---------------------------------------------------------------------------
+# torn-tail recovery (the acceptance criterion)
+# ---------------------------------------------------------------------------
+def test_torn_tail_truncated_at_every_cut_of_the_last_record(tmp_path):
+    """Simulated crash mid-append: cut the file at EVERY byte inside the
+    final record.  Reopening must recover to the intact prefix with
+    byte-identical roots, and the store must keep working."""
+    path = fresh_store(tmp_path / "log.bin")
+    raw = path.read_bytes()
+    # the last record is the checkpoint for entry 9; the one before it the
+    # entry itself — find the final ENTRY record's start to cut inside both
+    _, _, _, intact = ls.replay(raw)
+    assert intact == len(raw)
+    entry_spans = [s for s in record_spans(raw) if s[1] == ls.REC_ENTRY]
+    entry_start, _, payload, entry_end = entry_spans[-1]
+    assert payload == ENTRIES[-1]
+    for cut in range(entry_start + 1, len(raw)):
+        path.write_bytes(raw[:cut])
+        log = TransparencyLog.open(path)
+        # entry record torn -> lose the last entry; entry intact but its
+        # checkpoint record torn -> all entries survive
+        kept = ENTRIES if cut >= entry_end else ENTRIES[:-1]
+        assert log.size == len(kept), f"cut at {cut}"
+        torn_from = entry_end if kept == ENTRIES else entry_start
+        assert log.recovered_bytes == max(0, cut - torn_from), f"cut {cut}"
+        assert np.array_equal(log.root(), expected_root(kept)), \
+            f"root diverged after recovery at cut {cut}"
+        log.append(b"post-recovery")         # the store stays writable
+        assert np.array_equal(log.root(),
+                              expected_root(kept + [b"post-recovery"]))
+        log.sync()
+        log.close()
+
+
+def test_recovery_lands_on_last_intact_checkpoint(tmp_path):
+    """With checkpoint_every=1 a torn ENTRY record recovers to exactly the
+    state of the last intact checkpoint record — byte-identical root."""
+    path = fresh_store(tmp_path / "log.bin")
+    raw = path.read_bytes()
+    start, _, _, end = [s for s in record_spans(raw)
+                        if s[1] == ls.REC_ENTRY][-1]
+    path.write_bytes(raw[: start + (end - start) // 2])
+    log = TransparencyLog.open(path)
+    stored = log.last_stored_checkpoint
+    assert stored is not None and stored.tree_size == log.size == 8
+    assert np.array_equal(stored.root, expected_root(ENTRIES[:-1]))
+    log.close()
+
+
+def test_torn_store_header_reinitializes(tmp_path):
+    path = tmp_path / "log.bin"
+    path.write_bytes(ls.STORE_MAGIC[:5])     # crash during store creation
+    log = ls.DurableTransparencyLog.open(path, "t-log")
+    assert log.size == 0 and log.recovered_bytes == 5
+    log.append(b"first")
+    log.close()
+    assert TransparencyLog.open(path).size == 1
+
+
+def test_torn_origin_record_reinitializes(tmp_path):
+    path = tmp_path / "log.bin"
+    full = ls.STORE_MAGIC + ls.frame_record(ls.REC_ORIGIN, b"t-log",
+                                           len(ls.STORE_MAGIC))
+    path.write_bytes(full[:-3])              # crash writing the origin
+    log = ls.DurableTransparencyLog.open(path, "t-log")
+    assert log.size == 0
+    log.append(b"first")
+    log.sync()
+    log.close()
+
+
+# ---------------------------------------------------------------------------
+# kill-during-append: a real SIGKILLed writer process
+# ---------------------------------------------------------------------------
+_WRITER = """
+import sys, time
+sys.path.insert(0, {src!r})
+from repro.core import logstore as ls
+log = ls.DurableTransparencyLog.open({path!r}, "kill-log")
+print("ready", flush=True)
+i = log.size
+while True:
+    log.append(b"entry-%06d" % i)
+    i += 1
+"""
+
+
+@pytest.mark.parametrize("grace", [0.05, 0.25])
+def test_kill_during_append_recovers_to_intact_prefix(tmp_path, grace):
+    """SIGKILL a live writer at an arbitrary moment; the reopened store
+    must hold an intact prefix of what the writer wrote, in order, with
+    byte-identical re-derived roots — twice, to cover a recovered store
+    being killed again."""
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    path = str(tmp_path / "log.bin")
+    sizes = []
+    for round_ in range(2):
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _WRITER.format(src=src, path=path)],
+            stdout=subprocess.PIPE)
+        assert proc.stdout.readline().strip() == b"ready"
+        deadline = time.time() + 30
+        while not os.path.exists(path) and time.time() < deadline:
+            time.sleep(0.01)
+        time.sleep(grace)                      # let it race mid-append
+        proc.send_signal(signal.SIGKILL)
+        proc.wait()
+        log = TransparencyLog.open(path)
+        sizes.append(log.size)
+        entries = [log.entry(i) for i in range(log.size)]
+        assert entries == [b"entry-%06d" % i for i in range(log.size)], \
+            "recovered entries are not the writer's prefix"
+        if log.size:
+            assert np.array_equal(log.root(), expected_root(entries))
+        log.sync()
+        log.close()
+    assert sizes[1] >= sizes[0], "recovery lost acknowledged appends"
+
+
+# ---------------------------------------------------------------------------
+# non-crash corruption fails closed
+# ---------------------------------------------------------------------------
+def test_foreign_file_rejected(tmp_path):
+    path = tmp_path / "notalog.bin"
+    path.write_bytes(b"GIF89a, definitely not a log store" * 4)
+    with pytest.raises(ls.LogStoreError, match="magic"):
+        TransparencyLog.open(path)
+
+
+def test_midfile_corruption_with_intact_tail_rejected(tmp_path):
+    """Damage an EARLY record while later records stay intact: that state
+    is unreachable by a crash (append-only writes tear only the tail), so
+    recovery must refuse to 'repair' it."""
+    path = fresh_store(tmp_path / "log.bin")
+    raw = bytearray(path.read_bytes())
+    first = ls.STORE_MAGIC + ls.frame_record(ls.REC_ORIGIN, b"t-log",
+                                            len(ls.STORE_MAGIC))
+    raw[len(first) + 7] ^= 0xFF            # inside the first entry payload
+    path.write_bytes(bytes(raw))
+    with pytest.raises(ls.LogStoreError, match="torn tail"):
+        TransparencyLog.open(path)
+
+
+def test_tampered_checkpoint_root_rejected(tmp_path):
+    """A stored checkpoint record that passes CRC but whose root does not
+    match the tree re-derived from the entries is tampering, not a crash:
+    open() must raise, not truncate."""
+    path = tmp_path / "log.bin"
+    log = ls.DurableTransparencyLog.open(path, "t-log")
+    log.append(b"honest-entry")
+    log.close()
+    evil = Checkpoint("t-log", 1, np.arange(8, dtype=np.uint32))
+    append_record(path, ls.REC_CHECKPOINT, evil.to_bytes())
+    with pytest.raises(ls.LogStoreError, match="re-derived"):
+        TransparencyLog.open(path)
+
+
+def test_checkpoint_beyond_entries_rejected(tmp_path):
+    path = tmp_path / "log.bin"
+    log = ls.DurableTransparencyLog.open(path, "t-log")
+    cp = log.append(b"the-entry")
+    log.close()
+    ahead = Checkpoint("t-log", 2, cp.root)
+    append_record(path, ls.REC_CHECKPOINT, ahead.to_bytes())
+    with pytest.raises(ls.LogStoreError, match="entries precede"):
+        TransparencyLog.open(path)
+
+
+def test_cross_origin_checkpoint_record_rejected(tmp_path):
+    path = tmp_path / "log.bin"
+    log = ls.DurableTransparencyLog.open(path, "t-log")
+    cp = log.append(b"the-entry")
+    log.close()
+    alien = Checkpoint("other-log", 1, cp.root)
+    append_record(path, ls.REC_CHECKPOINT, alien.to_bytes())
+    with pytest.raises(ls.LogStoreError, match="origin"):
+        TransparencyLog.open(path)
+
+
+def test_malformed_stored_checkpoint_payload_rejected(tmp_path):
+    path = tmp_path / "log.bin"
+    log = ls.DurableTransparencyLog.open(path, "t-log")
+    log.append(b"the-entry")
+    log.close()
+    append_record(path, ls.REC_CHECKPOINT, b"not a checkpoint")
+    with pytest.raises(ls.LogStoreError, match="malformed"):
+        TransparencyLog.open(path)
+
+
+def test_duplicate_or_late_origin_record_rejected(tmp_path):
+    path = fresh_store(tmp_path / "log.bin")
+    append_record(path, ls.REC_ORIGIN, b"t-log")
+    with pytest.raises(ls.LogStoreError, match="origin record"):
+        TransparencyLog.open(path)
+
+
+def test_oversized_record_never_allocates(tmp_path):
+    """A torn length prefix claiming 4 GiB must be treated as torn tail
+    framing, not an allocation."""
+    path = fresh_store(tmp_path / "log.bin")
+    with open(path, "ab") as fh:
+        fh.write(struct.pack("<BI", ls.REC_ENTRY, 0xFFFFFFFF) + b"junk")
+    log = TransparencyLog.open(path)
+    assert log.size == len(ENTRIES)
+    log.close()
+
+
+def test_sync_detects_external_divergence(tmp_path):
+    """sync() audits disk against memory: an externally rewritten file (a
+    second writer, a hostile edit) raises even when the file itself is a
+    well-formed store."""
+    path = tmp_path / "log.bin"
+    log = ls.DurableTransparencyLog.open(path, "t-log")
+    log.append(b"mine")
+    other = tmp_path / "other.bin"
+    rewrite = ls.DurableTransparencyLog.open(other, "t-log")
+    rewrite.append(b"theirs")
+    rewrite.close()
+    path.write_bytes(other.read_bytes())
+    with pytest.raises(ls.LogStoreError, match="diverge"):
+        log.sync()
+    log.close()
+
+
+def test_replay_record_helpers_roundtrip():
+    framed = ls.frame_record(ls.REC_ENTRY, b"payload", 1)
+    kind, payload, end = ls._parse_record(b"\x00" + framed, 1)
+    assert (kind, payload, end) == (ls.REC_ENTRY, b"payload",
+                                    1 + len(framed))
+    # CRC covers offset+kind+length+payload: flipping any header/payload
+    # byte breaks it, and so does shifting the record to another offset
+    for pos in (0, 3, 7, len(framed) - 1):
+        bad = bytearray(framed)
+        bad[pos] ^= 1
+        assert ls._parse_record(b"\x00" + bytes(bad), 1) is None
+    assert ls._parse_record(framed, 0) is None       # position-bound
+    assert ls._parse_record(b"\x00\x00" + framed, 2) is None
+
+
+def test_embedded_store_bytes_cannot_brick_recovery(tmp_path):
+    """A torn entry whose payload IS a complete store (embedded framed
+    records) must still classify as a torn tail: position-bound CRCs stop
+    the embedded frames from masquerading as real records, so recovery
+    truncates instead of refusing forever."""
+    inner = tmp_path / "inner.bin"
+    ilog = ls.DurableTransparencyLog.open(inner, "t-log")
+    ilog.append(b"inner-entry")
+    ilog.close()
+    inner_bytes = inner.read_bytes()
+
+    path = tmp_path / "outer.bin"
+    olog = ls.DurableTransparencyLog.open(path, "t-log")
+    olog.append(b"first-entry")
+    olog.append(inner_bytes)          # a store's bytes as a leaf: legal
+    olog.close()
+    raw = path.read_bytes()
+    start, _, payload, end = [s for s in record_spans(raw)
+                              if s[1] == ls.REC_ENTRY][-1]
+    assert payload == inner_bytes
+    # tear the outer entry mid-payload, INSIDE the embedded store, leaving
+    # whole embedded frames between the tear and EOF
+    cut = start + 5 + len(inner_bytes) - 3
+    path.write_bytes(raw[:cut])
+    log = TransparencyLog.open(path)             # must not raise
+    assert log.size == 1 and log.entry(0) == b"first-entry"
+    assert log.recovered_bytes == cut - start
+    log.append(inner_bytes)                      # the append can be redone
+    assert log.entry(1) == inner_bytes
+    log.sync()
+    log.close()
+
+
+# ---------------------------------------------------------------------------
+# the durable log is a drop-in TransparencyLog for the session API
+# ---------------------------------------------------------------------------
+def test_publish_to_durable_log_bootstraps_verifier(tmp_path, owner, bundle,
+                                                    tiny_cfg):
+    from repro.core.session import ZKGraphSession
+    log = TransparencyLog.open(tmp_path / "log.bin", "session-log")
+    checkpoint, inclusion, raw = owner.publish_to(log)
+    log.close()
+    reopened = TransparencyLog.open(tmp_path / "log.bin")
+    assert np.array_equal(reopened.checkpoint().root, checkpoint.root)
+    v = ZKGraphSession.verifier(cfg=tiny_cfg, checkpoint=checkpoint,
+                                inclusion=inclusion, manifest_bytes=raw)
+    assert v.verify(bundle) is True
+    reopened.close()

@@ -14,6 +14,7 @@ from pathlib import Path
 import numpy as np
 import pytest
 
+from repro.core import gossip as gp
 from repro.core import transparency as tl
 from repro.core import wire
 from repro.core.commit import (CommitmentManifest, MANIFEST_VERSION,
@@ -73,6 +74,15 @@ def _u32s_to_bytes(digest: np.ndarray) -> bytes:
     return np.asarray(digest, np.uint32).astype("<u4").tobytes()
 
 
+VECTOR_GOSSIP_KEY = b"zkgraph-vector-gossip-key"
+
+
+def build_gossip() -> gp.GossipMessage:
+    """The vector log's size-5 head as a signed gossip message carrying
+    the 3 -> 5 consistency proof (docs/protocol.md §9)."""
+    return gp.emit(build_log(), VECTOR_GOSSIP_KEY, since=3)
+
+
 def vectors() -> dict:
     manifest_raw = build_manifest().to_bytes()
     log = build_log()
@@ -85,7 +95,26 @@ def vectors() -> dict:
         "inclusion_leaf0_size5.hex": log.inclusion_proof(0).to_bytes(),
         "consistency_3_to_5.hex": log.consistency_proof(3).to_bytes(),
         "value_kitchen_sink.hex": build_value(),
+        "gossip_head_3_to_5.hex": build_gossip().to_bytes(),
+        "logstore_5_leaves.hex": build_store_bytes(),
     }
+
+
+def build_store_bytes() -> bytes:
+    """The exact on-disk bytes of a durable store holding the vector log
+    (docs/protocol.md §9): magic, origin record, and per append an entry
+    record followed by its checkpoint record — all CRC-framed and
+    position-bound (each record's CRC covers its file offset)."""
+    from repro.core import logstore as ls
+    log = build_log()
+    out = bytearray(ls.STORE_MAGIC)
+    out += ls.frame_record(ls.REC_ORIGIN, log.origin.encode("utf-8"),
+                           len(out))
+    for i in range(log.size):
+        out += ls.frame_record(ls.REC_ENTRY, log.entry(i), len(out))
+        out += ls.frame_record(ls.REC_CHECKPOINT,
+                               log.checkpoint(i + 1).to_bytes(), len(out))
+    return bytes(out)
 
 
 def _read(name: str) -> bytes:
@@ -147,6 +176,41 @@ def test_value_vector_decodes_to_expected_object():
     assert bytes(e.buf) == raw
 
 
+def test_gossip_vector_verifies_end_to_end():
+    raw = _read("gossip_head_3_to_5.hex")
+    msg = gp.GossipMessage.from_bytes(raw)
+    assert msg.to_bytes() == raw
+    assert gp.verify_signature(VECTOR_GOSSIP_KEY, msg.checkpoint, msg.auth)
+    cp3 = tl.Checkpoint.from_bytes(_read("checkpoint_size3.hex"))
+    assert tl.verify_consistency(cp3, msg.checkpoint, msg.consistency)
+    # a peer pinned at the size-3 vector checkpoint advances on exactly it
+    peer = gp.GossipPeer("zkgraph-vector-log", VECTOR_GOSSIP_KEY)
+    peer.offer(gp.GossipMessage(cp3, None,
+                                gp.sign_checkpoint(VECTOR_GOSSIP_KEY, cp3)))
+    assert peer.offer(msg) is True
+    assert peer.pinned.tree_size == 5
+
+
+def test_logstore_vector_replays_to_the_vector_log():
+    from repro.core import logstore as ls
+    raw = _read("logstore_5_leaves.hex")
+    origin, entries, checkpoints, intact = ls.replay(raw)
+    assert intact == len(raw)
+    assert origin == "zkgraph-vector-log"
+    log = build_log()
+    assert entries == [log.entry(i) for i in range(log.size)]
+    assert [cp.tree_size for _, cp in checkpoints] == [1, 2, 3, 4, 5]
+    assert np.array_equal(checkpoints[-1][1].root, log.root())
+    # and a torn tail inside the final (checkpoint) record truncates back
+    # to exactly the end of the last intact record
+    last_cp = log.checkpoint(5).to_bytes()
+    last_start = len(raw) - (5 + len(last_cp) + 4)   # hdr + payload + crc
+    assert ls.frame_record(ls.REC_CHECKPOINT, last_cp, last_start) \
+        == raw[last_start:]
+    _, entries, _, intact2 = ls.replay(raw[:-5])
+    assert len(entries) == 5 and intact2 == last_start
+
+
 def test_wire_constants_pinned():
     """The spec constants in docs/protocol.md §1 are written against these
     values; bump the doc and regenerate vectors when changing them."""
@@ -154,7 +218,8 @@ def test_wire_constants_pinned():
     assert wire.WIRE_VERSION == 2
     assert (wire.KIND_BUNDLE, wire.KIND_PROOF, wire.KIND_FRI,
             wire.KIND_MANIFEST, wire.KIND_CHECKPOINT, wire.KIND_INCLUSION,
-            wire.KIND_CONSISTENCY) == (1, 2, 3, 4, 5, 6, 7)
+            wire.KIND_CONSISTENCY, wire.KIND_GOSSIP) == (1, 2, 3, 4, 5, 6,
+                                                         7, 8)
 
 
 if __name__ == "__main__":
