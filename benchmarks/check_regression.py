@@ -46,6 +46,7 @@ PAIRS = {                      # fresh (repo root) -> committed baseline
     "BENCH_wire.json": "wire.json",
     "BENCH_kernels.json": "kernels.json",
     "BENCH_transparency.json": "transparency.json",
+    "BENCH_serving.json": "serving.json",
 }
 ALLOW_ENV = "ZKGRAPH_BENCH_ALLOW_REGRESSION"
 

@@ -528,6 +528,102 @@ def kernels(rows: int = 256):
 
 
 # ---------------------------------------------------------------------------
+# serving: ProofService throughput vs a sequential prove loop, same run
+# ---------------------------------------------------------------------------
+def serving(rows: int = 128):
+    """Concurrent serving throughput (repro.serve.ProofService) against a
+    sequential ``session.prove`` loop over the SAME query mix, measured in
+    the same run with warm jit caches.  Lane-batched proving amortizes the
+    per-dispatch overhead every solo prove pays, so queries/sec should grow
+    with concurrency while each bundle stays wire-byte-identical to its
+    solo prove (asserted below, timings aside).  Emits
+    ``BENCH_serving.json``; latency leaves are gated by
+    ``benchmarks/check_regression.py`` against baselines/serving.json."""
+    import json
+    import time
+
+    from repro.core.session import ProofBundle
+    from repro.serve import ProofService
+
+    def strip_timings(raw: bytes) -> bytes:
+        bundle = ProofBundle.from_bytes(raw)
+        for sp in bundle.steps:
+            sp.proof.timings = {}
+        return bundle.to_bytes()
+
+    db = db_with_rows(rows)
+    session = ZKGraphSession(db, BENCH_CFG)
+    queries = [("IS5", dict(message=(1 << 20) + 7 + i)) for i in range(16)]
+
+    def serve(n):
+        """Submit queries[:n] concurrently; max_batch=n + a long deadline
+        means exactly one size-triggered flush per full batch, so the jit
+        cache sees one lane count per concurrency level."""
+        latencies = []
+        t0 = time.perf_counter()
+        with ProofService(session, max_batch=n, flush_interval=5.0) as svc:
+            futs = []
+            for q, p in queries[:n]:
+                ts = time.perf_counter()
+                fut = svc.submit(q, p)
+                fut.add_done_callback(
+                    lambda _f, ts=ts: latencies.append(
+                        (time.perf_counter() - ts) * 1e6))
+                futs.append(fut)
+            bundles = [f.result() for f in futs]
+            stats = svc.stats()
+        total_us = (time.perf_counter() - t0) * 1e6
+        return bundles, latencies, stats, total_us
+
+    # warm every shape the measured runs will hit: the solo prover (c=1
+    # degrades to it; also the sequential baseline) and each padded lane
+    # count the service flushes at
+    session.prove(*queries[0])
+    for n in (4, 16):
+        serve(n)
+
+    results = {}
+    for conc in (1, 4, 16):
+        seq_bundles, seq_us = timed(
+            lambda n=conc: [session.prove(q, p) for q, p in queries[:n]])
+        bundles, lat, stats, svc_us = serve(conc)
+        for got, want in zip(bundles, seq_bundles):
+            assert strip_timings(got.to_bytes()) == \
+                strip_timings(want.to_bytes()), \
+                "serviced bundle bytes diverged from the sequential prover"
+        qps = conc / (svc_us / 1e6)
+        seq_qps = conc / (seq_us / 1e6)
+        speedup = seq_us / svc_us
+        occ = stats["batch_occupancy"]
+        results[f"concurrency_{conc}"] = dict(
+            queries=conc,
+            service_total_us=round(svc_us, 1),
+            sequential_total_us=round(seq_us, 1),
+            qps=round(qps, 3), sequential_qps=round(seq_qps, 3),
+            speedup=round(speedup, 3),
+            latency_p50_us=round(float(np.percentile(lat, 50)), 1),
+            latency_p95_us=round(float(np.percentile(lat, 95)), 1),
+            occupancy_mean=round(occ["mean"], 2),
+            batches=stats["counters"]["batches"],
+            pad_lanes=stats["counters"]["pad_lanes"])
+        yield (f"serving/c{conc}/service_total", svc_us,
+               f"qps={qps:.2f};speedup={speedup:.2f}x;"
+               f"occupancy={occ['mean']:.1f}")
+        yield (f"serving/c{conc}/sequential_total", seq_us,
+               f"qps={seq_qps:.2f}")
+        yield (f"serving/c{conc}/latency_p95", float(np.percentile(lat, 95)),
+               f"p50={np.percentile(lat, 50):.0f}us")
+
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(dict(rows=rows, query="IS5", cfg=dict(
+            blowup=BENCH_CFG.blowup, n_queries=BENCH_CFG.n_queries,
+            fri_final_size=BENCH_CFG.fri_final_size), results=results),
+            f, indent=2, sort_keys=True)
+    yield ("serving/BENCH_serving.json", 0.0,
+           f"speedup_c16={results['concurrency_16']['speedup']:.2f}x")
+
+
+# ---------------------------------------------------------------------------
 # Fig 8: scalability with database size
 # ---------------------------------------------------------------------------
 def fig8():
@@ -550,4 +646,5 @@ def fig8():
 ALL = {"table1": table1, "table2": table2, "table3": table3, "fig6a": fig6a,
        "fig6b": fig6b, "table4": table4, "fig7": fig7, "fig8": fig8,
        "cachewin": cachewin, "wire": wire_codec,
-       "transparency": transparency_bench, "kernels": kernels}
+       "transparency": transparency_bench, "kernels": kernels,
+       "serving": serving}

@@ -50,6 +50,7 @@ from repro.core import prover as pv
 from repro.core.session import ZKGraphSession
 from repro.core.transparency import InclusionProof, TransparencyLog
 from repro.graphdb import ldbc
+from repro.serve import ProofService
 
 CFG = pv.ProverConfig(blowup=4, n_queries=16, fri_final_size=16)
 ORIGIN = "zkgraph-serve-log"
@@ -80,6 +81,17 @@ def query_queue(db, n):
 # ---------------------------------------------------------------------------
 # shared helpers: atomic byte exchange through the work dir
 # ---------------------------------------------------------------------------
+def _strip_timings(raw: bytes) -> bytes:
+    """Re-encode bundle bytes with per-step prover timings zeroed: timings
+    are host-side telemetry carried in the wire format, and the only field
+    where a batched and a solo prove may legitimately differ."""
+    from repro.core.session import ProofBundle
+    bundle = ProofBundle.from_bytes(raw)
+    for sp in bundle.steps:
+        sp.proof.timings = {}
+    return bundle.to_bytes()
+
+
 def atomic_write(path: Path, data: bytes) -> None:
     tmp = path.with_suffix(path.suffix + ".tmp")
     tmp.write_bytes(data)
@@ -142,15 +154,35 @@ def run_owner(args) -> None:
 
     spool = d / "bundles"
     spool.mkdir(exist_ok=True)
-    for i, (kind, params) in enumerate(query_queue(db, args.queries)):
-        out = spool / f"q{i}.bin"
-        if out.exists():
-            continue            # proven before the crash: resume after it
-        t0 = time.time()
-        bundle = session.prove(kind, params)
-        atomic_write(out, bundle.to_bytes())
-        print(f"[owner] q{i} {kind:5s} proven in {time.time() - t0:.1f}s "
-              f"({len(bundle.steps)} ops)", flush=True)
+    pending = [(i, kind, params)
+               for i, (kind, params) in enumerate(query_queue(db,
+                                                              args.queries))
+               if not (spool / f"q{i}.bin").exists()]
+    # all unproven queries ride ONE ProofService: same-shaped steps from
+    # different queries share lane-batched proves, and each returned bundle
+    # is wire-byte-identical to a solo session.prove (spot-checked below)
+    if pending:
+        with ProofService(session, max_batch=4, flush_interval=0.25) as svc:
+            t0 = time.time()
+            futs = [(i, kind, svc.submit(kind, params))
+                    for i, kind, params in pending]
+            for i, kind, fut in futs:
+                bundle = fut.result()
+                atomic_write(spool / f"q{i}.bin", bundle.to_bytes())
+                print(f"[owner] q{i} {kind:5s} spooled at "
+                      f"{time.time() - t0:.1f}s ({len(bundle.steps)} ops)",
+                      flush=True)
+            occupancy = svc.stats()["batch_occupancy"]
+        print(f"[owner] served {len(pending)} queries, mean batch "
+              f"occupancy {occupancy['mean']:.2f}", flush=True)
+        # byte-for-byte spot check: re-prove one serviced query solo and
+        # compare wire bytes (timings are telemetry, not proof material)
+        i0, kind0, params0 = pending[0]
+        serviced = (spool / f"q{i0}.bin").read_bytes()
+        solo = session.prove(kind0, params0)
+        assert _strip_timings(serviced) == _strip_timings(solo.to_bytes()), \
+            "serviced bundle bytes diverged from the solo prover"
+        print(f"[owner] q{i0} re-proven solo: bytes identical", flush=True)
 
     if log.size < 2:            # manifest revision: the log must only GROW
         session.publish_to(log)

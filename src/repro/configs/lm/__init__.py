@@ -1,0 +1,8 @@
+"""LM-architecture configs for the training substrate (quarantined).
+
+These back the ``--arch`` grid of ``repro.launch`` / ``repro.models`` —
+training-substrate material, not part of the ZK proving path.  They live in
+their own subpackage so importing :mod:`repro.configs.registry` (or the
+serving/proving stack) never has to wade through them: the registry resolves
+each module lazily by dotted path on first ``get_config`` call.
+"""

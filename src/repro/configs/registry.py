@@ -6,16 +6,16 @@ from dataclasses import dataclass
 import importlib
 
 ARCHS = {
-    "internvl2-2b": "repro.configs.internvl2_2b",
-    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
-    "starcoder2-3b": "repro.configs.starcoder2_3b",
-    "starcoder2-15b": "repro.configs.starcoder2_15b",
-    "qwen1.5-32b": "repro.configs.qwen1_5_32b",
-    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
-    "dbrx-132b": "repro.configs.dbrx_132b",
-    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
-    "whisper-base": "repro.configs.whisper_base",
-    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "internvl2-2b": "repro.configs.lm.internvl2_2b",
+    "internlm2-1.8b": "repro.configs.lm.internlm2_1_8b",
+    "starcoder2-3b": "repro.configs.lm.starcoder2_3b",
+    "starcoder2-15b": "repro.configs.lm.starcoder2_15b",
+    "qwen1.5-32b": "repro.configs.lm.qwen1_5_32b",
+    "mixtral-8x22b": "repro.configs.lm.mixtral_8x22b",
+    "dbrx-132b": "repro.configs.lm.dbrx_132b",
+    "zamba2-1.2b": "repro.configs.lm.zamba2_1_2b",
+    "whisper-base": "repro.configs.lm.whisper_base",
+    "falcon-mamba-7b": "repro.configs.lm.falcon_mamba_7b",
 }
 
 

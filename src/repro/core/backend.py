@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import contextlib
 import os
+import threading
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -80,7 +81,21 @@ class ComputeBackend:
 
 
 _REGISTRY: dict = {}
-_SCOPES: list = []             # explicit use() stack, innermost last
+# explicit use() stacks, innermost last — PER THREAD.  A proving service
+# runs concurrent pipeline workers; a shared stack would interleave their
+# push/pops and corrupt every thread's selection, so each thread gets its
+# own.  Consequence: a worker thread does NOT inherit the spawning thread's
+# scope — cross-thread pinning must be explicit (resolve_name() in the
+# submitting thread, use(name) in the worker; ProofService does exactly
+# this, and Keys.backend does it for keygen/prove).
+_TLS = threading.local()
+
+
+def _scopes() -> list:
+    scopes = getattr(_TLS, "scopes", None)
+    if scopes is None:
+        scopes = _TLS.scopes = []
+    return scopes
 
 
 def register(backend: ComputeBackend) -> ComputeBackend:
@@ -102,9 +117,11 @@ def get(name: str) -> ComputeBackend:
 
 
 def active_name() -> str:
-    """The currently selected backend name (scope > env var > default)."""
-    if _SCOPES:
-        return _SCOPES[-1]
+    """The currently selected backend name (this thread's scope > env var >
+    default)."""
+    scopes = _scopes()
+    if scopes:
+        return scopes[-1]
     env = os.environ.get(ENV_VAR)
     if env:
         get(env)               # validate eagerly: typos fail loudly
@@ -129,14 +146,20 @@ def resolve_name(name: str = None) -> str:
 def use(name: str = None):
     """Pin the active backend within a ``with`` block (nests, restores).
 
+    The pin is *thread-local*: concurrent pipeline workers can each pin a
+    backend without perturbing one another, and a scope entered on one
+    thread is invisible to every other (pass ``resolve_name()`` across the
+    thread boundary to hand a selection over).
+
     ``name=None`` pins whatever is active at entry — used by
     ``keygen``/``prove`` to freeze ``cfg.backend`` resolution for the whole
     call even if the environment changes mid-proof."""
-    _SCOPES.append(resolve_name(name))
+    scopes = _scopes()
+    scopes.append(resolve_name(name))
     try:
-        yield _REGISTRY[_SCOPES[-1]]
+        yield _REGISTRY[scopes[-1]]
     finally:
-        _SCOPES.pop()
+        scopes.pop()
 
 
 def probe(name: str) -> tuple:

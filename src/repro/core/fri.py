@@ -111,6 +111,65 @@ def fri_prove(codeword: jnp.ndarray, tx: Transcript, cfg: FriConfig) -> FriProof
     return FriProof(roots, final_codeword, q_idx, openings)
 
 
+# ---------------------------------------------------------------------------
+# lane-batched proving (repro.core.prover_batch): L same-length codewords
+# fold/commit/open in lockstep with per-lane challenges.  Lane l's FriProof
+# is bit-identical to ``fri_prove(codewords[l], solo_tx, cfg)`` when the
+# transcripts agree — every op below is the solo op with a leading lane dim.
+# ---------------------------------------------------------------------------
+def _fold_lanes(codewords: jnp.ndarray, beta: jnp.ndarray,
+                shift: int) -> jnp.ndarray:
+    """One fold of (L, N, 4) codewords with per-lane betas (L, 4)."""
+    n = codewords.shape[1]
+    half = n // 2
+    lo, hi = codewords[:, :half], codewords[:, half:]
+    inv2 = pow(2, F.P - 2, F.P)
+    inv_pts = poly.domain_points(n, 1)
+    inv_pts = F.finv(F.fmul(inv_pts[:half], _U32(shift)))
+    even = F.emul_fp(F.eadd(lo, hi), jnp.full((half,), inv2, _U32))
+    odd = F.emul_fp(F.esub(lo, hi), F.fmul(inv_pts, _U32(inv2)))
+    return F.eadd(even, F.emul(beta[:, None, :], odd))
+
+
+def fri_prove_lanes(codewords: jnp.ndarray, btx, cfg: FriConfig) -> list:
+    """codewords: (L, N, 4) on cfg.shift * H_N; ``btx`` a
+    :class:`~repro.core.transcript.BatchedTranscript` with L lanes.
+    Returns one :class:`FriProof` per lane."""
+    lanes, n = codewords.shape[0], codewords.shape[1]
+    trees = []
+    roots = []                 # per committed layer: (L, 8) np
+    words = []
+    shift = cfg.shift
+    cur = codewords
+    while cur.shape[1] > cfg.final_size:
+        half = cur.shape[1] // 2
+        leaves = jnp.concatenate([cur[:, :half], cur[:, half:]], axis=-1)
+        tree = merkle.commit_lanes(leaves)
+        trees.append(tree)
+        words.append(cur)
+        layer_roots = np.asarray(tree.roots)
+        roots.append(layer_roots)
+        btx.absorb_digest(layer_roots)
+        beta = jnp.asarray(btx.challenge_ext())         # (L, 4)
+        cur = _fold_lanes(cur, beta, shift)
+        shift = shift * shift % F.P
+    final_codewords = np.asarray(cur)                   # (L, final, 4)
+    btx.absorb(final_codewords.reshape(lanes, -1))
+
+    q_idx = btx.challenge_indices(cfg.n_queries, n // 2)   # (L, q)
+    openings = []              # per layer: (rows (L,q,8), paths (L,q,d,8))
+    idx = jnp.asarray(q_idx)
+    for tree, word in zip(trees, words):
+        half = word.shape[1] // 2
+        idx = idx % half
+        rows, paths = merkle.open_lanes(tree, idx)
+        openings.append((np.asarray(rows), np.asarray(paths)))
+    return [
+        FriProof([r[l] for r in roots], final_codewords[l], q_idx[l],
+                 [(rows[l], paths[l]) for rows, paths in openings])
+        for l in range(lanes)]
+
+
 def fri_verify(proof: FriProof, tx: Transcript, cfg: FriConfig, n: int):
     """Replay the transcript and check folds/paths/degree.
 

@@ -60,6 +60,50 @@ def open_at(tree: MerkleTree, indices: jnp.ndarray):
     return rows, path
 
 
+# ---------------------------------------------------------------------------
+# lane-batched trees (repro.core.prover_batch): L same-shaped commitments in
+# one pass.  ``hash_rows``/``compress`` support leading batch dims and every
+# hash is row-independent, so lane l of the batched tree is bit-identical to
+# ``commit(rows[l])`` — one permutation dispatch per level instead of L.
+# ---------------------------------------------------------------------------
+@dataclass
+class BatchedMerkleTree:
+    leaves: jnp.ndarray          # (L, n, width) committed rows
+    layers: list                 # [(L,n,8), (L,n/2,8), ..., (L,1,8)]
+
+    @property
+    def roots(self) -> jnp.ndarray:
+        return self.layers[-1][:, 0]                    # (L, 8)
+
+
+def commit_lanes(rows: jnp.ndarray) -> BatchedMerkleTree:
+    """rows: (L, n, width) with n a power of two — L trees in lockstep."""
+    n = rows.shape[1]
+    assert n & (n - 1) == 0, "leaf count must be a power of two"
+    layer = H.hash_rows(rows)                           # (L, n, 8)
+    layers = [layer]
+    while layer.shape[1] > 1:
+        layer = H.compress(layer[:, 0::2], layer[:, 1::2])
+        layers.append(layer)
+    return BatchedMerkleTree(leaves=rows, layers=layers)
+
+
+def open_lanes(tree: BatchedMerkleTree, indices: jnp.ndarray):
+    """Open per-lane leaves at ``indices`` (L, k).
+
+    Returns (rows (L,k,width), path (L,k,d,8)) — lane l equals
+    ``open_at(tree_l, indices[l])``."""
+    idx = jnp.asarray(indices)
+    rows = jnp.take_along_axis(tree.leaves, idx[:, :, None], axis=1)
+    sibs = []
+    for layer in tree.layers[:-1]:
+        sibs.append(jnp.take_along_axis(layer, (idx ^ 1)[:, :, None], axis=1))
+        idx = idx // 2
+    path = jnp.stack(sibs, axis=2) if sibs else \
+        jnp.zeros(idx.shape + (0, 8), _U32)
+    return rows, path
+
+
 def compress_pair(left, right) -> np.ndarray:
     """Numpy-facing 2-to-1 node hash: (8,), (8,) -> (8,) uint32.
 

@@ -48,6 +48,7 @@ previous steps' (already verified) public outputs.
 from __future__ import annotations
 
 import hashlib
+import threading
 from dataclasses import dataclass, field as dc_field
 
 import numpy as np
@@ -105,13 +106,25 @@ class KeygenCache:
     Shared by prover and verifier sessions; ``ensure`` attaches cached keys
     to an operator.  The resolved backend name is part of the key (cached
     ``Keys`` hold backend-produced buffers; PK/LDE caches never cross
-    backends).  Bounded: oldest entries are evicted past ``max_entries`` so
-    a long-lived verifier fed ever-fresh shapes cannot grow it without
-    limit."""
+    backends — this also covers the fixed-column LDE cache the Keys carry).
+    Bounded: oldest entries are evicted past ``max_entries`` so a
+    long-lived verifier fed ever-fresh shapes cannot grow it without limit.
+
+    Thread-safe with single-flight misses: concurrent ``ensure`` calls for
+    the same key (the proving-service hot path — many queries hit the same
+    circuit shapes) run keygen exactly once; the other callers block on the
+    leader's in-flight event and reuse its Keys (``waits`` counts them).
+    Distinct keys keygen concurrently — only bookkeeping is locked, never
+    the keygen compute itself."""
     entries: dict = dc_field(default_factory=dict)
     hits: int = 0
     misses: int = 0
+    waits: int = 0          # ensure() calls that blocked on another's keygen
     max_entries: int = 128
+    _lock: threading.Lock = dc_field(default_factory=threading.Lock,
+                                     repr=False, compare=False)
+    _inflight: dict = dc_field(default_factory=dict, repr=False,
+                               compare=False)   # key -> threading.Event
 
     @staticmethod
     def _key(op, cfg: pv.ProverConfig):
@@ -126,22 +139,46 @@ class KeygenCache:
     def ensure(self, op, cfg: pv.ProverConfig):
         """Attach (possibly cached) keys to ``op``; keygen on first sight."""
         key = self._key(op, cfg)
-        keys = self.entries.get(key)
-        if keys is None:
-            self.misses += 1
+        while True:
+            wait_on = None
+            with self._lock:
+                keys = self.entries.get(key)
+                if keys is not None:
+                    self.hits += 1
+                    self.entries[key] = self.entries.pop(key)  # LRU refresh
+                    op.keys = keys
+                    return op
+                flight = self._inflight.get(key)
+                if flight is None:
+                    # this caller is the flight leader: keygen outside the
+                    # lock (other keys must not serialize behind it)
+                    flight = self._inflight[key] = threading.Event()
+                    break
+                self.waits += 1
+                wait_on = flight
+            wait_on.wait()
+            # leader finished (or failed): re-check the cache / re-elect
+        try:
             keys = pv.keygen(op.circuit, cfg)
+        except BaseException:
+            with self._lock:
+                self._inflight.pop(key, None)
+            flight.set()        # waiters wake, re-check, one re-leads
+            raise
+        with self._lock:
+            self.misses += 1
             self.entries[key] = keys
             while len(self.entries) > self.max_entries:
                 self.entries.pop(next(iter(self.entries)))
-        else:
-            self.hits += 1
-            self.entries[key] = self.entries.pop(key)   # LRU: refresh on hit
+            self._inflight.pop(key, None)
+        flight.set()
         op.keys = keys
         return op
 
     def stats(self) -> dict:
-        return dict(hits=self.hits, misses=self.misses,
-                    entries=len(self.entries))
+        with self._lock:
+            return dict(hits=self.hits, misses=self.misses, waits=self.waits,
+                        entries=len(self.entries))
 
 
 # ---------------------------------------------------------------------------
@@ -296,14 +333,47 @@ class ZKGraphSession:
 
     def prove(self, qname: str, params: dict) -> ProofBundle:
         run = self.run_query(qname, params)
-        steps = []
-        for st in run.steps:
-            self.cache.ensure(st.op, self.cfg)
-            proof = st.op.prove(st.advice, st.instance, st.data)
-            steps.append(StepProof(st.kind, st.shape, st.data_desc,
-                                   st.instance, proof))
+        steps = [self.prove_step(st) for st in run.steps]
         return ProofBundle(qname, dict(params), steps, run.result, self.cfg,
                            self.commitments.digest())
+
+    # -- step-level prove entry points (the batcher's call surface) ----------
+    def step_shape_key(self, st: ir.Step):
+        """The batching key for one executed plan step: two steps with equal
+        keys share circuit structure, prover config, and compute backend, so
+        their witnesses can ride one lane-batched prove
+        (:func:`repro.core.prover_batch.prove_batch`).  This is exactly the
+        keygen-cache key — same Keys, same transcript schedule."""
+        return self.cache._key(st.op, self.cfg)
+
+    def prove_step(self, st: ir.Step) -> StepProof:
+        """Prove one executed plan step solo (keygen-cached)."""
+        self.cache.ensure(st.op, self.cfg)
+        proof = st.op.prove(st.advice, st.instance, st.data)
+        return StepProof(st.kind, st.shape, st.data_desc, st.instance, proof)
+
+    def prove_steps(self, steps: list) -> list:
+        """Prove same-shaped steps as ONE lane-batched pass.
+
+        Every step must carry the same :meth:`step_shape_key` (asserted) —
+        the lanes share Keys and per-phase dispatch, and each lane's proof
+        bytes are identical to what :meth:`prove_step` would have produced
+        for it alone.  One step degrades to the solo path."""
+        if len(steps) == 1:
+            return [self.prove_step(steps[0])]
+        from . import prover_batch as pvb
+        key0 = self.step_shape_key(steps[0])
+        for st in steps[1:]:
+            assert self.step_shape_key(st) == key0, \
+                "prove_steps lanes must share one circuit shape"
+        for st in steps:
+            self.cache.ensure(st.op, self.cfg)
+        keys = steps[0].op.keys
+        proofs = pvb.prove_batch(
+            keys, [(st.advice, st.instance, st.data) for st in steps],
+            label=steps[0].op.name)
+        return [StepProof(st.kind, st.shape, st.data_desc, st.instance, pf)
+                for st, pf in zip(steps, proofs)]
 
     # -- verifier side ------------------------------------------------------
     def verify_bytes(self, raw: bytes,

@@ -59,3 +59,72 @@ class Transcript:
         """n query indices in [0, domain_size) (power of two)."""
         lanes = self._squeeze_lanes(n)
         return (lanes % np.uint32(domain_size)).astype(np.int64)
+
+
+class BatchedTranscript:
+    """``lanes`` independent Fiat-Shamir transcripts advanced in lockstep.
+
+    Same-shaped proofs follow the *identical* absorb/squeeze schedule — only
+    the absorbed values differ per lane — so a batch of them can share every
+    permutation dispatch: the states are an ``(L, 16)`` matrix and each
+    sponge block is ONE batched :func:`hashing.permute` call instead of L.
+
+    Bit-identity invariant (asserted by ``tests/test_serve.py``): lane ``l``
+    of this object, fed lane ``l``'s values, produces exactly the state
+    sequence of a solo :class:`Transcript` fed the same values — ``permute``
+    is row-independent under every compute backend, and the block schedule
+    below mirrors :meth:`Transcript.absorb` verbatim.
+    """
+
+    def __init__(self, label: str = "zkgraph", lanes: int = 1):
+        self.lanes = lanes
+        self._state = np.zeros((lanes, H.WIDTH), np.uint32)
+        vals = np.frombuffer(
+            label.encode().ljust((len(label.encode()) + 3) // 4 * 4, b"\0"),
+            np.uint32)
+        self.absorb_shared(vals % np.uint32(F.P))
+
+    # -- absorption ---------------------------------------------------------
+    def absorb(self, values):
+        """values: array-like reshapable to (lanes, m) field elements."""
+        vals = np.asarray(values, np.uint64).reshape(self.lanes, -1) \
+            % np.uint64(F.P)
+        vals = vals.astype(np.uint32)
+        pos = 0
+        while pos < vals.shape[1]:
+            blk = vals[:, pos:pos + H.RATE]
+            st = self._state.copy()
+            st[:, :blk.shape[1]] = (
+                st[:, :blk.shape[1]].astype(np.uint64) + blk
+            ) % np.uint64(F.P)
+            self._state = np.asarray(H.permute(st))
+            pos += H.RATE
+
+    def absorb_shared(self, values):
+        """Absorb the same flat values into every lane (circuit digests,
+        shared labels — anything lane-independent)."""
+        v = np.asarray(values, np.uint64).reshape(-1)
+        self.absorb(np.broadcast_to(v, (self.lanes, v.size)))
+
+    def absorb_digest(self, digests):
+        """digests: (lanes, 8) — one Merkle root per lane."""
+        self.absorb(np.asarray(digests))
+
+    # -- squeezing ----------------------------------------------------------
+    def _squeeze_lanes(self, k: int) -> np.ndarray:
+        out = []
+        got = 0
+        while got < k:
+            out.append(self._state[:, :H.RATE].copy())
+            self._state = np.asarray(H.permute(self._state))
+            got += H.RATE
+        return np.concatenate(out, axis=1)[:, :k].astype(np.uint32)
+
+    def challenge_ext(self) -> np.ndarray:
+        """One Fp4 challenge per lane, shape (lanes, 4) uint32."""
+        return self._squeeze_lanes(4)
+
+    def challenge_indices(self, n: int, domain_size: int) -> np.ndarray:
+        """(lanes, n) query indices in [0, domain_size) (power of two)."""
+        lanes = self._squeeze_lanes(n)
+        return (lanes % np.uint32(domain_size)).astype(np.int64)

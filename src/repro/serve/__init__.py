@@ -1,0 +1,19 @@
+"""Concurrent verifiable-query serving (`docs/serving.md`).
+
+The serving layer turns a :class:`~repro.core.session.ZKGraphSession` into a
+multi-tenant proving service: concurrent query submissions are decomposed
+into plan steps, same-shaped steps from *different* queries are routed into
+shared shape-keyed batch queues, and each flushed batch rides one
+lane-batched prover pass (:mod:`repro.core.prover_batch`) — so commitment,
+constraint, and FRI dispatches amortize across queries while every returned
+bundle stays wire-byte-identical to a solo prove.
+"""
+from .batching import BatchReady, ShapeBatcher, StepSlot
+from .metrics import Histogram, ServiceMetrics
+from .pipeline import Stage
+from .placement import Placement, serving_mesh
+from .service import ProofService, ServiceClosed
+
+__all__ = ["BatchReady", "Histogram", "Placement", "ProofService",
+           "ServiceClosed", "ServiceMetrics", "ShapeBatcher", "Stage",
+           "StepSlot", "serving_mesh"]

@@ -1,0 +1,68 @@
+"""Bounded-queue pipeline stages for the proving service.
+
+A :class:`Stage` is one worker thread draining one bounded queue.  The
+bounded queues ARE the backpressure: when a downstream stage falls behind,
+upstream ``put`` calls block, and ultimately :meth:`ProofService.submit`
+itself blocks — admission control without any explicit token scheme.
+
+On this container the prover is effectively single-core, so the win from
+pipelining is *overlap of host-side phases* (witness building, transcript
+bookkeeping, result assembly) with device dispatch of the previous batch —
+plus the batching itself, which is where the throughput lives
+(`docs/serving.md`).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+_STOP = object()
+
+
+class Stage:
+    """One pipeline stage: ``handler(item)`` on a dedicated worker thread.
+
+    ``on_error(item, exc)`` is invoked (on the worker) when the handler
+    raises; the stage keeps running — one poisoned query must not take the
+    service down.  ``maxsize`` bounds the inbox; full inboxes block
+    producers (backpressure).
+    """
+
+    def __init__(self, name: str, handler, maxsize: int = 8, on_error=None):
+        self.name = name
+        self.inbox: "queue.Queue" = queue.Queue(maxsize=maxsize)
+        self._handler = handler
+        self._on_error = on_error
+        self._thread = threading.Thread(target=self._run,
+                                        name=f"zkserve-{name}", daemon=True)
+
+    def start(self):
+        self._thread.start()
+        return self
+
+    def put(self, item, timeout: float = None):
+        self.inbox.put(item, timeout=timeout)
+
+    def _run(self):
+        while True:
+            item = self.inbox.get()
+            if item is _STOP:
+                self.inbox.task_done()
+                return
+            try:
+                self._handler(item)
+            except BaseException as exc:      # noqa: BLE001 — stage survives
+                if self._on_error is not None:
+                    self._on_error(item, exc)
+            finally:
+                self.inbox.task_done()
+
+    def stop(self, wait: bool = True):
+        """Send the stop sentinel; with ``wait`` join the worker after it
+        drains everything already queued ahead of the sentinel."""
+        self.inbox.put(_STOP)
+        if wait:
+            self._thread.join()
+
+    def depth(self) -> int:
+        return self.inbox.qsize()

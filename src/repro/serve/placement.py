@@ -1,0 +1,60 @@
+"""Device-mesh placement for lane-batched proving.
+
+Wires the training substrate's mesh/sharding helpers (`repro.launch.mesh`,
+`repro.launch.sharding`) into the serving path: the lane axis of a batched
+prove is data-parallel by construction (lanes never interact), so a batch of
+L witnesses shards its leading axis across the mesh's ``data`` axis and each
+device proves its lane slice under the same jitted computation.
+
+On this container there is a single device, so the mesh degrades to
+``(1, 1)`` and placement is an explicit no-op-shaped ``device_put`` — but
+the same code path scales the lane axis out on a real pod
+(:func:`repro.launch.mesh.make_production_mesh`), and
+``sanitize_spec`` already handles non-divisible lane counts by de-sharding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..launch import mesh as mesh_lib
+from ..launch import sharding as sharding_lib
+
+
+def serving_mesh(*, production: bool = False, multi_pod: bool = False):
+    """The serving mesh: all local devices on the ``data`` (lane) axis.
+
+    ``production=True`` returns the 256/512-chip training-substrate mesh
+    (`repro.launch.mesh.make_production_mesh`) instead — same axis names, so
+    :class:`Placement` is oblivious to which one it got.
+    """
+    if production:
+        return mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+@dataclass
+class Placement:
+    """Shards the lane axis of batched-prove inputs across a mesh."""
+    mesh: object
+
+    def lane_sharding(self, shape) -> NamedSharding:
+        """NamedSharding for one (L, ...) witness stack: lanes over the
+        data-parallel axes, everything else replicated; non-divisible lane
+        counts fall back to replication (sanitize_spec)."""
+        spec = P(mesh_lib.dp_axes(self.mesh), *([None] * (len(shape) - 1)))
+        spec = sharding_lib.sanitize_spec(spec, shape, self.mesh)
+        return NamedSharding(self.mesh, spec)
+
+    def shard_lanes(self, *arrays):
+        """device_put each (L, ...) array with its lane sharding (the
+        prover's entry hook — see prover_batch.prove_batch)."""
+        return tuple(jax.device_put(a, self.lane_sharding(a.shape))
+                     for a in arrays)
+
+    @property
+    def lane_parallelism(self) -> int:
+        return mesh_lib.data_size(self.mesh)

@@ -151,7 +151,7 @@ def test_keygen_cache_never_crosses_backends(tiny_cfg):
     cache = KeygenCache()
     cache.ensure(_tiny_op(), cfg_ref)
     cache.ensure(_tiny_op(), cfg_pal)
-    assert cache.stats() == dict(hits=0, misses=2, entries=2)
+    assert cache.stats() == dict(hits=0, misses=2, waits=0, entries=2)
     # same backend again: a hit, not a third keygen
     cache.ensure(_tiny_op(), cfg_ref)
     assert cache.stats()["hits"] == 1

@@ -48,3 +48,39 @@ def test_readme_quickstart_block_present_and_current():
                    "verify_bytes", "GossipPeer", "gossip="):
         assert needle in code, f"README quickstart no longer uses {needle}"
     compile(code, "README.md#quickstart", "exec")    # at least parses
+
+
+def test_readme_serving_snippet_present_and_current():
+    readme = (ROOT / "README.md").read_text()
+    blocks = re.findall(r"```python\n(.*?)```", readme, re.S)
+    serving = [b for b in blocks if "ProofService" in b]
+    assert serving, "README.md lost its serving code block"
+    code = serving[0]
+    for needle in ("from repro.serve import ProofService", "svc.submit",
+                   "f.result()", "svc.stats()"):
+        assert needle in code, f"README serving snippet no longer uses {needle}"
+    compile(code, "README.md#serving", "exec")       # at least parses
+
+
+def test_serving_doc_matches_live_surfaces():
+    """docs/serving.md must keep naming the real API and the real metrics
+    schema (the schema itself is asserted against the live service in
+    tests/test_serve.py::test_service_metrics_schema)."""
+    text = (ROOT / "docs" / "serving.md").read_text()
+    for needle in ("ProofService", "step_shape_key", "prove_batch",
+                   "BatchedTranscript", "commit_lanes", "fri_prove_lanes",
+                   "max_batch", "flush_interval", "max_pending",
+                   "wire-byte-identical", "BENCH_serving.json"):
+        assert needle in text, f"docs/serving.md no longer mentions {needle}"
+    # every documented metrics key exists in the live schema constant
+    from repro.serve.metrics import PHASES
+    for phase in PHASES:
+        assert f"`{phase}`" in text, \
+            f"docs/serving.md metrics table is missing phase {phase}"
+    for key in ("counters", "phase_us", "queue_wait_us", "prove_us",
+                "batch_occupancy", "keygen_cache", "depths"):
+        assert f"`{key}`" in text, \
+            f"docs/serving.md metrics table is missing key {key}"
+    # architecture.md links the serving section
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    assert "repro.serve" in arch and "serving.md" in arch

@@ -85,7 +85,7 @@ def test_shape_digest_separates_circuits(tiny_cfg):
     cache.ensure(b, tiny_cfg)   # different circuit name -> miss
     cache.ensure(c, tiny_cfg)   # different fixed columns -> miss
     cache.ensure(d, tiny_cfg)   # identical shape -> hit
-    assert cache.stats() == dict(hits=1, misses=3, entries=3)
+    assert cache.stats() == dict(hits=1, misses=3, waits=0, entries=3)
     assert d.keys is a.keys
 
 
