@@ -1,0 +1,29 @@
+"""Circuit soundness analyzer + proof-path purity lint (docs/analysis.md).
+
+Two passes, one gate:
+
+* ``analyze_circuit`` / ``analyze_all`` — static + witness-perturbation
+  analysis of every registered operator circuit at representative shapes:
+  under-constraint detection (free cells a malicious prover could choose),
+  gate degree/rotation/vacuousness checks, and column-connectivity checks.
+* ``run_purity_lint`` — a Python-AST lint over ``repro.core`` +
+  ``repro.serve`` forbidding nondeterminism and unsoundness sources on the
+  prove/verify path (wall-clock, unseeded randomness, float arithmetic in
+  field code, pickle, set iteration, unlocked shared-state mutation, and
+  imports of the quarantined LM-training modules).
+
+``python -m repro.analysis`` runs both and emits a structured JSON report;
+``analysis_baseline.json`` at the repo root suppresses the accepted
+findings.  CI runs the analyzer over the full registry on every PR.
+"""
+from .findings import (Finding, Report, apply_baseline, load_baseline,
+                       write_baseline)
+from .purity import run_purity_lint
+from .runner import analyze_all, analyze_case, registry_cases
+from .structural import analyze_circuit
+
+__all__ = [
+    "Finding", "Report", "analyze_all", "analyze_case", "analyze_circuit",
+    "apply_baseline", "load_baseline", "registry_cases", "run_purity_lint",
+    "write_baseline",
+]

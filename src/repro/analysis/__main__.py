@@ -1,0 +1,143 @@
+"""CLI: ``python -m repro.analysis`` — circuit analyzer + purity lint.
+
+Exit codes: 0 clean (or informational run), 1 unsuppressed gating findings
+under ``--fail-on-findings`` (or a failed ``--selftest``), 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+import repro
+
+from .findings import apply_baseline, load_baseline, write_baseline
+from .purity import run_purity_lint
+from .runner import analyze_all
+
+
+def default_baseline_path() -> Path:
+    # repro is a namespace package: src/repro -> parent=src -> repo root
+    pkg = Path(next(iter(repro.__path__))).resolve()
+    return pkg.parents[1] / "analysis_baseline.json"
+
+
+def _print_findings(findings, stream=sys.stdout):
+    for f in findings:
+        loc = f"{f.where}:{f.line}" if f.line else f.where
+        print(f"  [{f.severity.upper():7s}] {f.check:28s} {loc}\n"
+              f"            {f.detail}", file=stream)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="circuit soundness analyzer + proof-path purity lint")
+    ap.add_argument("--all-adapters", action="store_true",
+                    help="analyze every registry adapter at its "
+                         "representative shapes")
+    ap.add_argument("--purity", action="store_true",
+                    help="run the proof-path purity lint")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the seeded-bug corpus: every deliberately "
+                         "broken circuit variant must be detected")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the structured JSON report here")
+    ap.add_argument("--baseline", metavar="PATH",
+                    default=str(default_baseline_path()),
+                    help="suppression baseline (default: repo root "
+                         "analysis_baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the suppression baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write all current gating findings to the baseline "
+                         "file (review the diff!)")
+    ap.add_argument("--fail-on-findings", action="store_true",
+                    help="exit 1 on unsuppressed error/warning findings")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if not (args.all_adapters or args.purity or args.selftest):
+        args.all_adapters = args.purity = True      # bare run = everything
+
+    all_findings = []
+    report = None
+    purity_files = 0
+    if args.all_adapters:
+        report = analyze_all(baseline_path=None, seed=args.seed)
+        all_findings += report.findings
+        print(f"analyzed {len(report.circuits)} circuit case(s) across the "
+              f"registry")
+    if args.purity:
+        pfindings, purity_files = run_purity_lint()
+        all_findings += pfindings
+        print(f"purity lint scanned {purity_files} file(s) in "
+              f"repro.core + repro.serve")
+
+    if args.write_baseline:
+        n = write_baseline(all_findings, args.baseline)
+        print(f"wrote {n} suppression(s) to {args.baseline}")
+        return 0
+
+    baseline = set() if args.no_baseline else load_baseline(args.baseline)
+    # staleness is only meaningful for entries whose pass actually ran:
+    # purity suppressions point at .py files, circuit suppressions at cases
+    baseline = {t for t in baseline
+                if (args.purity if t[1].endswith(".py") else
+                    args.all_adapters)}
+    kept, suppressed, stale = apply_baseline(all_findings, baseline)
+
+    selftest_failed = False
+    if args.selftest:
+        from .corpus import run_selftest
+        selftest_failed = not run_selftest(seed=args.seed)
+
+    gating = [f for f in kept if f.fails_gate()]
+    infos = [f for f in kept if not f.fails_gate()]
+    if gating:
+        print(f"\n{len(gating)} unsuppressed finding(s):")
+        _print_findings(gating)
+    if infos:
+        print(f"\n{len(infos)} informational note(s):")
+        _print_findings(infos)
+    if suppressed:
+        print(f"\n{len(suppressed)} finding(s) suppressed by baseline")
+    if stale:
+        print(f"\nWARNING: {len(stale)} stale baseline entr(ies) match "
+              f"nothing — remove them:")
+        for t in stale:
+            print(f"  {t}")
+    if not gating:
+        print("\nno unsuppressed findings: the registry is clean")
+
+    if args.json:
+        doc = report.to_json() if report is not None else dict(
+            version=1, summary={}, circuits=[], findings=[])
+        doc["summary"]["purity_files_scanned"] = purity_files
+        doc["summary"]["suppressed"] = len(suppressed)
+        doc["summary"]["stale_baseline"] = len(stale)
+        doc["purity"] = dict(
+            files_scanned=purity_files,
+            findings=[dict(check=f.check, severity=f.severity, where=f.where,
+                           line=f.line, key=f.key, detail=f.detail)
+                      for f in all_findings if f.where.endswith(".py")])
+        doc["gating_after_baseline"] = len(gating)
+        doc["suppressed"] = len(suppressed)
+        doc["stale_baseline"] = [list(t) for t in stale]
+        if args.selftest:
+            doc["selftest_passed"] = not selftest_failed
+        Path(args.json).write_text(json.dumps(doc, indent=2, default=str)
+                                   + "\n")
+        print(f"JSON report written to {args.json}")
+
+    if selftest_failed:
+        print("SELFTEST FAILED: seeded-bug corpus not fully detected",
+              file=sys.stderr)
+        return 1
+    if args.fail_on_findings and gating:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,157 @@
+"""Seeded-bug corpus: deliberately broken circuit variants the analyzer
+MUST catch — the analyzer's own regression suite (and ``--selftest``).
+
+Each variant starts from an honestly-built registry operator + witness and
+injects one classic ZK soundness bug.  Every variant still *accepts the
+honest witness* (except the widened rotation, whose point is that the
+constraint now mis-fires), which is exactly why these bugs survive code
+review and normal testing: proofs of correct executions keep verifying
+while a malicious prover gains freedom.  The suite asserts 100% detection
+here and zero false positives on the untouched registry.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import ir
+from ..core.plonkish import ADVICE, Bus, Col, Const, _Bin
+from .runner import analyze_case, default_db, materialize
+
+
+def _expand_case(db, label: str, with_prop: bool = True):
+    node = ir.Expand(ir.BaseTable("knows_date"), ir.Lit(1),
+                     with_prop=with_prop)
+    return materialize(db, "expand", label,
+                       ir.Plan(f"corpus/{label}", (node,), {}), {})
+
+
+def _orderby_case(db, label: str):
+    node = ir.OrderBy(ir.Lit((50, 30, 90, 10, 70, 30)),
+                      ir.Lit((11, 12, 13, 14, 15, 16)),
+                      k=ir.Lit(3))
+    return materialize(db, "orderby", label,
+                       ir.Plan(f"corpus/{label}", (node,), {}), {})
+
+
+def _widen_rot(e, frm: int, to: int):
+    """Rewrite every advice-column access at rotation ``frm`` to ``to``."""
+    if isinstance(e, Col):
+        if e.kind == ADVICE and e.rot == frm:
+            return Col(e.kind, e.index, to)
+        return e
+    if isinstance(e, _Bin):
+        return _Bin(e.op, _widen_rot(e.a, frm, to), _widen_rot(e.b, frm, to))
+    return e
+
+
+# -- the six variants --------------------------------------------------------
+def v_dropped_selector(db):
+    """The edge-region selector is zeroed: every gate it guards silently
+    constrains nothing (the completeness flag can point anywhere)."""
+    case = _expand_case(db, "dropped_selector")
+    c = case.op.circuit
+    c.fixed_cols[c.fixed_names.index("sel_edge")][:] = 0
+    c._mutated()
+    return "dropped_selector", case, {"vacuous-gate"}
+
+
+def v_widened_rotation(db):
+    """orderby's running-count step reads R[i+2] instead of R[i+1]: the
+    constraint no longer says what the witness builder satisfies."""
+    case = _orderby_case(db, "widened_rotation")
+    c = case.op.circuit
+    c.gates = [(n, _widen_rot(e, 1, 2) if n == "count_step" else e)
+               for n, e in c.gates]
+    c._mutated()
+    return "widened_rotation", case, {"witness-violation"}
+
+
+def v_removed_copy_constraint(db):
+    """The output-permutation bus is deleted: the public output table is no
+    longer bound to the committed edges at all."""
+    case = _expand_case(db, "removed_copy_constraint")
+    c = case.op.circuit
+    c.buses = [b for b in c.buses if b.name != "out_perm"]
+    c._mutated()
+    return "removed_copy_constraint", case, \
+        {"orphan-instance-column", "forgeable-output"}
+
+
+def v_degree_overflow(db):
+    """A degree-6 gate sneaks past the LDE bound (blowup=4): the quotient
+    cannot represent it, so the 'constraint' proves nothing."""
+    case = _expand_case(db, "degree_overflow")
+    c = case.op.circuit
+    fl = Col(ADVICE, c.advice_names.index("flag/fl"))
+    c.gates.append(("bool_sixth_power",
+                    fl * fl * fl * fl * fl * (Const(1) - fl)))
+    c._mutated()
+    return "degree_overflow", case, {"gate-degree-overflow"}
+
+
+def v_orphan_advice_column(db):
+    """A committed advice column no constraint reads."""
+    case = _expand_case(db, "orphan_advice_column")
+    c = case.op.circuit
+    c.add_advice("scratch")
+    case.advice = np.vstack(
+        [case.advice, np.zeros((1, c.n_rows), case.advice.dtype)])
+    return "orphan_advice_column", case, {"orphan-advice-column"}
+
+
+def v_free_output_cell(db):
+    """The property column is dropped from BOTH sides of the output bus:
+    the bus still balances (src/dst coordinates agree) but the public
+    C_p output is completely prover-chosen."""
+    case = _expand_case(db, "free_output_cell")
+    c = case.op.circuit
+    c.buses = [Bus(b.name, b.f_tuple[:2], b.t_tuple[:2], b.m_f, b.m_t,
+                   b.t_sel, b.auto_mult_col, b.ext_col)
+               if b.name == "out_perm" else b for b in c.buses]
+    c._mutated()
+    return "free_output_cell", case, \
+        {"orphan-instance-column", "forgeable-output"}
+
+
+VARIANTS = (v_dropped_selector, v_widened_rotation, v_removed_copy_constraint,
+            v_degree_overflow, v_orphan_advice_column, v_free_output_cell)
+
+
+def seeded_variants(db=None) -> list:
+    db = default_db() if db is None else db
+    return [v(db) for v in VARIANTS]
+
+
+def honest_bases(db=None) -> list:
+    """The unmodified cases the variants start from — the false-positive
+    control group."""
+    db = default_db() if db is None else db
+    return [_expand_case(db, "honest_expand"),
+            _orderby_case(db, "honest_orderby")]
+
+
+def run_selftest(seed: int = 0, db=None, verbose: bool = True) -> bool:
+    """Every variant detected with the expected check ids, and zero
+    error/warning findings on the honest base cases."""
+    db = default_db() if db is None else db
+    ok = True
+    for name, case, expected in seeded_variants(db):
+        findings, _ = analyze_case(case, seed=seed)
+        got = {f.check for f in findings if f.fails_gate()}
+        missed = expected - got
+        if verbose:
+            mark = "MISSED " + str(sorted(missed)) if missed else "detected"
+            print(f"  corpus[{name:24s}] expected {sorted(expected)} "
+                  f"-> {mark}")
+        ok &= not missed
+    for case in honest_bases(db):
+        findings, _ = analyze_case(case, seed=seed)
+        false_pos = [f for f in findings if f.fails_gate()]
+        if false_pos:
+            ok = False
+            if verbose:
+                print(f"  corpus[{case.label}] FALSE POSITIVES: "
+                      f"{[(f.check, f.key) for f in false_pos]}")
+        elif verbose:
+            print(f"  corpus[{case.label:24s}] clean (no false positives)")
+    return ok

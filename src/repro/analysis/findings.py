@@ -1,0 +1,129 @@
+"""Finding/report model + the committed suppression baseline.
+
+A finding's identity is ``(check, where, key)``:
+
+* ``check`` — the check id from the catalogue in docs/analysis.md
+* ``where`` — the circuit context ("adapter:label/circuit") or, for purity
+  findings, the repo-relative file path
+* ``key``   — a stable detail key: column/gate name for circuit findings,
+  the *stripped source line* for purity findings (immune to line drift)
+
+The baseline file stores exactly these triples, so a suppression survives
+refactors that move code around but dies with the code it covers — a stale
+entry is reported so baselines only ever shrink.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field as dc_field
+from pathlib import Path
+
+ERROR, WARNING, INFO = "error", "warning", "info"
+_SEV_ORDER = {ERROR: 0, WARNING: 1, INFO: 2}
+
+#: the full check catalogue — docs/analysis.md documents every id here
+#: (pinned by tests/test_docs.py) and the emitting modules never invent
+#: ids outside it (pinned by tests/test_analysis.py)
+ALL_CHECKS = frozenset({
+    # structural (repro.analysis.structural)
+    "gate-degree-overflow", "bus-degree-overflow", "gp-degree-overflow",
+    "rotation-out-of-range", "unguarded-wrap",
+    "vacuous-gate", "vacuous-bus", "vacuous-gp",
+    "orphan-advice-column", "orphan-instance-column", "orphan-data-column",
+    "unused-fixed-column", "floating-advice-component",
+    # witness probe (repro.analysis.witness)
+    "witness-violation", "forgeable-output", "unconstrained-advice-column",
+    # purity lint (repro.analysis.purity)
+    "banned-import", "quarantine-breach", "float-in-field-code",
+    "unseeded-rng", "nondet-iteration", "eval-exec", "unlocked-serve-state",
+})
+
+
+@dataclass(frozen=True)
+class Finding:
+    check: str
+    severity: str
+    where: str
+    key: str
+    detail: str
+    line: int = 0            # purity findings only (0 = not line-anchored)
+
+    def ident(self) -> tuple:
+        return (self.check, self.where, self.key)
+
+    def fails_gate(self) -> bool:
+        return self.severity in (ERROR, WARNING)
+
+
+@dataclass
+class Report:
+    """One analyzer run: findings + per-circuit coverage stats."""
+    findings: list = dc_field(default_factory=list)
+    circuits: list = dc_field(default_factory=list)   # per-case stat dicts
+    purity_files: int = 0
+    suppressed: list = dc_field(default_factory=list)
+    stale_baseline: list = dc_field(default_factory=list)
+
+    def extend(self, findings):
+        self.findings.extend(findings)
+
+    def gating(self) -> list:
+        return [f for f in self.findings if f.fails_gate()]
+
+    def sorted_findings(self) -> list:
+        return sorted(self.findings,
+                      key=lambda f: (_SEV_ORDER[f.severity], f.ident()))
+
+    def to_json(self) -> dict:
+        return dict(
+            version=1,
+            summary=dict(
+                errors=sum(f.severity == ERROR for f in self.findings),
+                warnings=sum(f.severity == WARNING for f in self.findings),
+                infos=sum(f.severity == INFO for f in self.findings),
+                suppressed=len(self.suppressed),
+                stale_baseline=len(self.stale_baseline),
+                circuits_analyzed=len(self.circuits),
+                purity_files_scanned=self.purity_files,
+            ),
+            findings=[asdict(f) for f in self.sorted_findings()],
+            suppressed=[asdict(f) for f in sorted(
+                self.suppressed, key=lambda f: f.ident())],
+            stale_baseline=[list(t) for t in sorted(self.stale_baseline)],
+            circuits=self.circuits,
+        )
+
+
+# ---------------------------------------------------------------------------
+# suppression baseline
+# ---------------------------------------------------------------------------
+def load_baseline(path) -> set:
+    """Load suppression triples; a missing file is an empty baseline."""
+    p = Path(path)
+    if not p.exists():
+        return set()
+    doc = json.loads(p.read_text())
+    assert doc.get("version") == 1, f"unknown baseline version in {path}"
+    return {(e["check"], e["where"], e["key"]) for e in doc["suppressions"]}
+
+
+def apply_baseline(findings, baseline: set):
+    """Split findings into (unsuppressed, suppressed) and report baseline
+    entries that no longer match anything (stale)."""
+    kept, suppressed, hit = [], [], set()
+    for f in findings:
+        if f.ident() in baseline:
+            suppressed.append(f)
+            hit.add(f.ident())
+        else:
+            kept.append(f)
+    return kept, suppressed, sorted(baseline - hit)
+
+
+def write_baseline(findings, path):
+    """Write every gating finding as a suppression (review the diff!)."""
+    entries = sorted({f.ident() for f in findings if f.fails_gate()})
+    doc = dict(version=1, suppressions=[
+        dict(check=c, where=w, key=k) for c, w, k in entries])
+    Path(path).write_text(json.dumps(doc, indent=2) + "\n")
+    return len(entries)

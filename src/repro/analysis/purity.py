@@ -1,0 +1,310 @@
+"""Proof-path purity lint: a Python-AST pass over repro.core + repro.serve.
+
+Soundness of a Fiat–Shamir proof system is a determinism property: the
+prover and verifier must derive bit-identical transcripts, and nothing on
+the prove/verify path may depend on wall-clock, ambient randomness, or
+float rounding.  This lint bans those sources *mechanically*:
+
+Rules (check id → scope → severity):
+
+* ``banned-import``   — pickle/dill/shelve/marshal anywhere in core+serve
+  (the wire codec replaced pickle in PR 2; it must never creep back);
+  ``time``/``random``/``secrets`` in PROOF-PATH modules (legitimate
+  timing diagnostics are suppressed via the committed baseline).  ERROR.
+* ``quarantine-breach`` — ``repro.train`` / ``repro.models`` /
+  ``repro.configs.lm`` imported anywhere in core+serve (regression guard
+  for the PR 6 LM-training quarantine; relative imports resolved).  ERROR.
+* ``float-in-field-code`` — float literals, ``float()``/``complex()``
+  casts, ``np.float*``/``np.double`` attributes, or true division ``/``
+  in PROOF-PATH modules: field arithmetic is exact; float rounding
+  silently corrupts witnesses (cf. the float-weighted bincount this PR
+  removed from ``auto_multiplicities``).  ERROR.
+* ``unseeded-rng``    — ``default_rng()`` with no seed, or global-state
+  ``np.random.<fn>`` calls, anywhere in core+serve.  Keyed ``jax.random``
+  and seeded generators are fine.  ERROR.
+* ``nondet-iteration`` — ``for``/comprehension iterating a set literal,
+  set()/frozenset() call, or set comprehension directly: iteration order
+  is hash-randomized across processes, so anything transcript-adjacent
+  becomes irreproducible.  WARNING.
+* ``eval-exec``       — bare ``eval``/``exec`` calls.  ERROR.
+* ``unlocked-serve-state`` — in repro.serve: a class that owns a
+  ``_lock`` writes ``self.*`` outside ``__init__`` without holding a
+  ``with …_lock:`` block.  WARNING.
+
+Finding keys are the *stripped source line*, so baseline suppressions
+survive line drift but die with the code they cover.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .findings import ERROR, WARNING, Finding
+
+#: modules where the prover/verifier transcript is actually computed —
+#: the strict scope for the wall-clock / randomness / float rules.
+PROOF_PATH_MODULES = {
+    "core/field.py", "core/poly.py", "core/fri.py", "core/merkle.py",
+    "core/hashing.py", "core/transcript.py", "core/plonkish.py",
+    "core/prover.py", "core/prover_batch.py", "core/verifier.py",
+    "core/commit.py",
+}
+PROOF_PATH_DIRS = ("core/operators/",)
+
+BANNED_EVERYWHERE = {"pickle", "dill", "shelve", "marshal"}
+BANNED_PROOF_PATH = {"time", "random", "secrets"}
+QUARANTINED = ("repro.train", "repro.models", "repro.configs.lm")
+_GLOBAL_NP_RANDOM = {"rand", "randn", "randint", "random", "choice",
+                     "shuffle", "permutation", "seed", "random_sample",
+                     "uniform", "normal"}
+
+
+def is_proof_path(relpath: str) -> bool:
+    return (relpath in PROOF_PATH_MODULES
+            or relpath.startswith(PROOF_PATH_DIRS))
+
+
+def _line(src_lines, node) -> str:
+    try:
+        return src_lines[node.lineno - 1].strip()
+    except IndexError:
+        return ""
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, relpath: str, src: str, in_serve: bool):
+        self.relpath = relpath
+        self.lines = src.splitlines()
+        self.proof = is_proof_path(relpath)
+        self.in_serve = in_serve
+        self.findings: list = []
+        self._with_lock_depth = 0
+        self._method: str | None = None
+        self._class_has_lock = False
+
+    # -- helpers -----------------------------------------------------------
+    def emit(self, check, severity, node, detail):
+        self.findings.append(Finding(
+            check, severity, self.relpath, _line(self.lines, node),
+            detail, line=getattr(node, "lineno", 0)))
+
+    def _check_module_name(self, name: str, node):
+        root = name.split(".")[0]
+        if root in BANNED_EVERYWHERE:
+            self.emit("banned-import", ERROR, node,
+                      f"{self.relpath} imports {name!r}: pickle-family "
+                      f"serialization is banned (use repro.core.wire)")
+        elif self.proof and root in BANNED_PROOF_PATH:
+            self.emit("banned-import", ERROR, node,
+                      f"proof-path module {self.relpath} imports {name!r}: "
+                      f"wall-clock/ambient randomness cannot feed the "
+                      f"transcript")
+        for q in QUARANTINED:
+            if name == q or name.startswith(q + "."):
+                self.emit("quarantine-breach", ERROR, node,
+                          f"{self.relpath} imports quarantined module "
+                          f"{name!r}: LM-training code must stay off the "
+                          f"zkgraph import path")
+
+    def _resolve_relative(self, node: ast.ImportFrom) -> str:
+        # repro/core/x.py with level=2, module="train" -> repro.train
+        parts = ("repro/" + self.relpath).split("/")
+        pkg = parts[:-1]                       # package path of this module
+        up = node.level - 1
+        base = pkg[: len(pkg) - up] if up else pkg
+        mod = ".".join(base)
+        return f"{mod}.{node.module}" if node.module else mod
+
+    # -- imports -----------------------------------------------------------
+    def visit_Import(self, node):
+        for alias in node.names:
+            self._check_module_name(alias.name, node)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node):
+        if node.level == 0:
+            name = node.module or ""
+            self._check_module_name(name, node)
+            for alias in node.names:
+                self._check_module_name(f"{name}.{alias.name}", node)
+        else:
+            base = self._resolve_relative(node)
+            self._check_module_name(base, node)
+            for alias in node.names:
+                self._check_module_name(f"{base}.{alias.name}", node)
+        self.generic_visit(node)
+
+    # -- floats ------------------------------------------------------------
+    def visit_Constant(self, node):
+        if self.proof and isinstance(node.value, (float, complex)):
+            self.emit("float-in-field-code", ERROR, node,
+                      f"float literal {node.value!r} in proof-path module "
+                      f"{self.relpath}: field arithmetic must stay exact")
+        self.generic_visit(node)
+
+    def visit_BinOp(self, node):
+        if self.proof and isinstance(node.op, ast.Div):
+            self.emit("float-in-field-code", ERROR, node,
+                      f"true division in proof-path module {self.relpath}: "
+                      f"use modular inverse (finv) or // for integers")
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node):
+        if self.proof and node.attr in ("float16", "float32", "float64",
+                                        "float_", "double", "half"):
+            self.emit("float-in-field-code", ERROR, node,
+                      f"float dtype .{node.attr} in proof-path module "
+                      f"{self.relpath}")
+        # np.random.<global-state fn>
+        if (isinstance(node.value, ast.Attribute)
+                and node.value.attr == "random"
+                and isinstance(node.value.value, ast.Name)
+                and node.value.value.id in ("np", "numpy")
+                and node.attr in _GLOBAL_NP_RANDOM):
+            self.emit("unseeded-rng", ERROR, node,
+                      f"global-state np.random.{node.attr} in "
+                      f"{self.relpath}: use a seeded Generator")
+        self.generic_visit(node)
+
+    # -- calls -------------------------------------------------------------
+    def visit_Call(self, node):
+        fn = node.func
+        if isinstance(fn, ast.Name):
+            if fn.id in ("eval", "exec"):
+                self.emit("eval-exec", ERROR, node,
+                          f"bare {fn.id}() in {self.relpath}")
+            if self.proof and fn.id in ("float", "complex"):
+                self.emit("float-in-field-code", ERROR, node,
+                          f"{fn.id}() cast in proof-path module "
+                          f"{self.relpath}")
+        name = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else None)
+        if name == "default_rng" and not node.args and not node.keywords:
+            self.emit("unseeded-rng", ERROR, node,
+                      f"default_rng() without a seed in {self.relpath}: "
+                      f"OS-entropy seeding is irreproducible")
+        self.generic_visit(node)
+
+    # -- set iteration -----------------------------------------------------
+    @staticmethod
+    def _is_set_expr(e) -> bool:
+        if isinstance(e, (ast.Set, ast.SetComp)):
+            return True
+        return (isinstance(e, ast.Call) and isinstance(e.func, ast.Name)
+                and e.func.id in ("set", "frozenset"))
+
+    def _check_iter(self, it, node):
+        if self._is_set_expr(it):
+            self.emit("nondet-iteration", WARNING, node,
+                      f"iteration over a set in {self.relpath}: set order "
+                      f"is hash-randomized; sort first")
+
+    def visit_For(self, node):
+        self._check_iter(node.iter, node)
+        self.generic_visit(node)
+
+    def _visit_comp(self, node):
+        for gen in node.generators:
+            self._check_iter(gen.iter, node)
+        self.generic_visit(node)
+
+    visit_ListComp = visit_SetComp = visit_GeneratorExp = _visit_comp
+
+    def visit_DictComp(self, node):
+        self._visit_comp(node)
+
+    # -- serve lock discipline --------------------------------------------
+    def visit_ClassDef(self, node):
+        if not self.in_serve:
+            self.generic_visit(node)
+            return
+        prev = self._class_has_lock
+        self._class_has_lock = any(
+            isinstance(t, ast.Attribute) and t.attr.endswith("_lock")
+            and isinstance(t.value, ast.Name) and t.value.id == "self"
+            for fn in node.body if isinstance(fn, ast.FunctionDef)
+            for st in ast.walk(fn) for t in _assign_targets(st))
+        self.generic_visit(node)
+        self._class_has_lock = prev
+
+    def visit_FunctionDef(self, node):
+        prev = self._method
+        self._method = node.name
+        self.generic_visit(node)
+        self._method = prev
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_With(self, node):
+        holds = any(_is_lock_ctx(item.context_expr) for item in node.items)
+        if holds:
+            self._with_lock_depth += 1
+        self.generic_visit(node)
+        if holds:
+            self._with_lock_depth -= 1
+
+    def _check_self_write(self, node):
+        if (self.in_serve and self._class_has_lock
+                and self._method not in (None, "__init__")
+                and self._with_lock_depth == 0):
+            for t in _assign_targets(node):
+                if (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"
+                        and not t.attr.endswith("_lock")):
+                    self.emit(
+                        "unlocked-serve-state", WARNING, node,
+                        f"self.{t.attr} written outside `with …_lock:` in a "
+                        f"lock-owning serve class ({self.relpath}): racy "
+                        f"shared-state mutation")
+
+    def visit_Assign(self, node):
+        self._check_self_write(node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        self._check_self_write(node)
+        self.generic_visit(node)
+
+
+def _assign_targets(node):
+    if isinstance(node, ast.Assign):
+        return node.targets
+    if isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        return [node.target]
+    return []
+
+
+def _is_lock_ctx(e) -> bool:
+    """with self._lock / with self.x._lock / with lock."""
+    if isinstance(e, ast.Attribute):
+        return e.attr.endswith("_lock")
+    if isinstance(e, ast.Name):
+        return e.id.endswith("_lock") or e.id == "lock"
+    return False
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+def lint_source(relpath: str, src: str) -> list:
+    """Lint one file's source; relpath is relative to the repro package
+    (e.g. "core/prover.py")."""
+    v = _Visitor(relpath, src, in_serve=relpath.startswith("serve/"))
+    v.visit(ast.parse(src, filename=relpath))
+    return v.findings
+
+
+def run_purity_lint(pkg_root=None):
+    """Lint repro/core + repro/serve; returns (findings, files_scanned)."""
+    if pkg_root is None:
+        pkg_root = Path(__file__).resolve().parent.parent   # src/repro
+    pkg_root = Path(pkg_root)
+    findings = []
+    n_files = 0
+    for sub in ("core", "serve"):
+        for path in sorted((pkg_root / sub).rglob("*.py")):
+            rel = path.relative_to(pkg_root).as_posix()
+            findings += lint_source(rel, path.read_text())
+            n_files += 1
+    return findings, n_files

@@ -1,0 +1,105 @@
+"""Drive the analyzer over every registered adapter at representative shapes.
+
+Each adapter declares its own representative cases via
+``Adapter.analysis_cases(db)`` (>= 2 mini-plans whose **last** node is the
+adapter's node type — the vetting contract for new adapters, see
+docs/analysis.md).  The runner executes each mini-plan against a small
+deterministic LDBC graph, then runs the structural pass and the witness
+perturbation probe on the resulting circuit + honest witness.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dc_field
+
+import numpy as np
+
+from .findings import Report, apply_baseline, load_baseline
+from .structural import analyze_circuit
+from .witness import witness_analysis
+
+# same scale as the test-suite graph: big enough for every operator to have
+# a non-trivial region, small enough for exhaustive per-column probing
+DB_PARAMS = dict(n_knows=96, n_persons=24, n_comments=64, seed=11)
+
+
+def default_db():
+    from ..graphdb import ldbc
+    return ldbc.generate(**DB_PARAMS)
+
+
+@dataclass
+class AnalysisCase:
+    """One (adapter, representative shape) pair, witness included."""
+    adapter: str
+    label: str
+    op: object                   # operators.common.Operator
+    advice: np.ndarray
+    instance: np.ndarray
+    data: np.ndarray
+    extract: object = None       # callable(instance) -> outputs dict
+    expected: set = dc_field(default_factory=set)   # corpus: check ids
+
+    @property
+    def where(self) -> str:
+        return f"{self.adapter}:{self.label}/{self.op.circuit.name}"
+
+
+def materialize(db, adapter_name: str, label: str, plan, params: dict):
+    """Execute a mini-plan; its last step must belong to the adapter."""
+    from ..core import ir
+    run = ir.execute(db, plan, dict(params))
+    step = run.steps[-1]
+    assert step.kind == adapter_name, \
+        f"analysis plan {label!r} ends in {step.kind!r}, not {adapter_name!r}"
+    op = step.op
+    from ..core.operators import registry
+    ad = registry.adapter_named(adapter_name)
+
+    def extract(instance):
+        return ad.extract_outputs(op, instance)
+
+    return AnalysisCase(adapter_name, label, op, step.advice, step.instance,
+                        step.data, extract=extract)
+
+
+def registry_cases(db=None) -> list:
+    from ..core.operators import registry
+    db = default_db() if db is None else db
+    cases = []
+    for name, ad in sorted(registry.adapters().items()):
+        specs = ad.analysis_cases(db)
+        assert len(specs) >= 2, \
+            f"adapter {name!r} must declare >= 2 representative analysis " \
+            f"shapes (got {len(specs)}) — see docs/analysis.md"
+        for label, plan, params in specs:
+            cases.append(materialize(db, name, label, plan, params))
+    return cases
+
+
+def analyze_case(case: AnalysisCase, blowup: int = 4, seed: int = 0):
+    """Full pipeline on one case: structural checks + witness probe."""
+    findings = analyze_circuit(case.op.circuit, case.where, blowup, seed)
+    wfindings, coverage = witness_analysis(
+        case.op.circuit, case.advice, case.instance, case.data, case.where,
+        seed=seed, extract=case.extract)
+    stats = dict(adapter=case.adapter, label=case.label,
+                 circuit=case.op.circuit.name, n_rows=case.op.circuit.n_rows,
+                 gates=case.op.circuit.gate_info(), coverage=coverage)
+    return findings + wfindings, stats
+
+
+def analyze_all(db=None, baseline_path=None, blowup: int = 4,
+                seed: int = 0) -> Report:
+    """Analyze every registry adapter; apply the suppression baseline."""
+    report = Report()
+    for case in registry_cases(db):
+        findings, stats = analyze_case(case, blowup, seed)
+        report.extend(findings)
+        report.circuits.append(stats)
+    if baseline_path is not None:
+        kept, suppressed, stale = apply_baseline(
+            report.findings, load_baseline(baseline_path))
+        report.findings = kept
+        report.suppressed = suppressed
+        report.stale_baseline = stale
+    return report

@@ -1,0 +1,302 @@
+"""Static circuit checks: degree, rotations, vacuousness, connectivity.
+
+Everything here reads only the circuit *structure* (plus the concrete fixed
+columns, which are structure too) — no witness needed.  The witness-side
+under-constraint probe lives in :mod:`repro.analysis.witness`.
+
+Check catalogue (docs/analysis.md):
+
+* ``gate-degree-overflow`` / ``bus-degree-overflow`` / ``gp-degree-overflow``
+  — constraint degree exceeds the quotient/LDE bound (= blowup): the LDE
+  domain cannot faithfully represent the constraint polynomial, so the
+  prover's quotient is meaningless and completeness/soundness both break.
+* ``rotation-out-of-range`` — |rot| >= n_rows wraps to a smaller rotation
+  under ``jnp.roll`` (rot = n_rows is the identity!), silently constraining
+  different cells than the author intended.
+* ``unguarded-wrap`` — a gate/bus reads an advice/data column at rot != 0
+  without a pure-fixed multiplicative guard vanishing on the wrap rows:
+  the constraint couples the column's tail to its head across the cyclic
+  boundary.  Instance rotations are exempt (public columns: the verifier
+  sees the wrap rows; the seed circuits use them deliberately).
+* ``vacuous-gate`` — fixed guard identically zero, or the gate evaluates to
+  zero on random witnesses (identically-zero polynomial whp): the gate
+  constrains nothing.
+* ``vacuous-bus`` / ``vacuous-gp`` — a side's pure-fixed selector is
+  identically zero: the argument degenerates.
+* ``orphan-advice/instance/data-column`` — a column no constraint ever
+  reads: a prover (or, for instance columns, anyone presenting the proof)
+  can put arbitrary values there.
+* ``unused-fixed-column`` — dead structure (warning; ``__row0`` exempt:
+  keygen appends it for grand-product boundaries).
+* ``floating-advice-component`` — a connected component of the
+  column-co-occurrence graph containing only advice columns: a subcircuit
+  anchored to no fixed structure, public input, or committed data.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import field as F
+from ..core.plonkish import (ADVICE, DATA, FIXED, INSTANCE, Circuit,
+                             eval_fixed_np, is_fixed_only, mul_factors)
+from .findings import ERROR, WARNING, Finding
+
+_KIND_CHECK = {ADVICE: "orphan-advice-column",
+               INSTANCE: "orphan-instance-column",
+               DATA: "orphan-data-column"}
+
+
+def analyze_circuit(circuit: Circuit, where: str, blowup: int = 4,
+                    seed: int = 0) -> list:
+    """Run every structural check; returns a list of Findings."""
+    circuit.assign_ext_cols()
+    out = []
+    out += check_degrees(circuit, where, blowup)
+    out += check_rotations(circuit, where)
+    out += check_vacuous(circuit, where, seed)
+    out += check_columns(circuit, where)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# degrees
+# ---------------------------------------------------------------------------
+def bus_degree(bus) -> int:
+    """Degree of the logUp bus constraint
+    (h1-h)*d_f*d_t - m_f*d_t + m_t*t_sel*d_f  (h is a committed column)."""
+    deg_f = max(e.degree() for e in bus.f_tuple)
+    deg_t = max(e.degree() for e in bus.t_tuple)
+    return max(1 + deg_f + deg_t,
+               bus.m_f.degree() + deg_t,
+               bus.m_t.degree() + bus.t_sel.degree() + deg_f)
+
+
+def gp_degree(gp) -> int:
+    """Degree of the grand-product constraint z1*f2 - z*f1 plus the
+    row0*(z-1) boundary term, with f = d*s + (1-s)."""
+    d1 = max(e.degree() for e in gp.c1_tuple) + gp.sel1.degree()
+    d2 = max(e.degree() for e in gp.c2_tuple) + gp.sel2.degree()
+    f1 = max(d1, gp.sel1.degree())
+    f2 = max(d2, gp.sel2.degree())
+    return max(1 + f1, 1 + f2, 2)
+
+
+def check_degrees(circuit: Circuit, where: str, blowup: int) -> list:
+    out = []
+    for name, e in circuit.gates:
+        d = e.degree()
+        if d > blowup:
+            out.append(Finding("gate-degree-overflow", ERROR, where, name,
+                               f"gate {name!r} has degree {d} > LDE bound "
+                               f"{blowup}: the quotient cannot represent it"))
+    for bus in circuit.buses:
+        d = bus_degree(bus)
+        if d > blowup:
+            out.append(Finding("bus-degree-overflow", ERROR, where, bus.name,
+                               f"bus {bus.name!r} constraint degree {d} > "
+                               f"LDE bound {blowup}"))
+    for gp in circuit.gps:
+        d = gp_degree(gp)
+        if d > blowup:
+            out.append(Finding("gp-degree-overflow", ERROR, where, gp.name,
+                               f"grand product {gp.name!r} constraint degree "
+                               f"{d} > LDE bound {blowup}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rotations
+# ---------------------------------------------------------------------------
+def _wrap_rows(rot: int, n: int) -> np.ndarray:
+    """Rows whose access at +rot crosses the cyclic boundary."""
+    if rot > 0:
+        return np.arange(n - rot, n)
+    return np.arange(0, -rot)
+
+
+def _fixed_guard(exprs, circuit: Circuit):
+    """Product of the pure-fixed multiplicative factors shared by every
+    expression's top level; None when there is no fixed factor at all."""
+    guard = None
+    for e in exprs:
+        for fac in mul_factors(e):
+            if is_fixed_only(fac) and fac.atoms():
+                v = eval_fixed_np(fac, circuit.fixed_cols, circuit.n_rows)
+                guard = v if guard is None else (guard * v) % F.P
+    return guard
+
+
+def check_rotations(circuit: Circuit, where: str) -> list:
+    out = []
+    n = circuit.n_rows
+    seen_oor = set()
+    for ckind, name, exprs in circuit.constraint_exprs():
+        rots = set()
+        for e in exprs:
+            rots |= e.rotations()
+        for (kind, idx, rot) in sorted(rots):
+            if abs(rot) >= n and (name, kind, idx) not in seen_oor:
+                seen_oor.add((name, kind, idx))
+                out.append(Finding(
+                    "rotation-out-of-range", ERROR, where, name,
+                    f"{ckind} {name!r} reads {kind}[{idx}] at rotation {rot} "
+                    f"with only {n} rows: jnp.roll wraps it to {rot % n}"))
+        # wrap guard: only prover-chosen (advice) and committed-data columns
+        wraps = sorted({r for (k, _, r) in rots
+                       if r != 0 and abs(r) < n and k in (ADVICE, DATA)})
+        if not wraps:
+            continue
+        if ckind == "gate":
+            guard = _fixed_guard(exprs, circuit)
+        elif ckind == "bus":
+            bus = next(b for b in circuit.buses if b.name == name)
+            f_rots = any(r != 0 for e in (*bus.f_tuple, bus.m_f)
+                         for (k, _, r) in e.rotations() if k in (ADVICE, DATA))
+            guard_exprs = (bus.m_f,) if f_rots else (bus.t_sel,)
+            guard = _fixed_guard(guard_exprs, circuit)
+        else:
+            gp = next(g for g in circuit.gps if g.name == name)
+            guard = _fixed_guard((gp.sel1, gp.sel2), circuit)
+        for rot in wraps:
+            rows = _wrap_rows(rot, n)
+            if guard is None or np.any(guard[rows] != 0):
+                out.append(Finding(
+                    "unguarded-wrap", WARNING, where, f"{name}@{rot}",
+                    f"{ckind} {name!r} reads an advice/data column at "
+                    f"rotation {rot} without a fixed guard vanishing on the "
+                    f"wrap rows {rows[:4].tolist()}…: the constraint couples "
+                    f"the column tail to its head"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# vacuousness
+# ---------------------------------------------------------------------------
+def _random_sources(circuit: Circuit, rng) -> dict:
+    n = circuit.n_rows
+    fixed = (np.stack(circuit.fixed_cols).astype(np.int64)
+             if circuit.fixed_cols else np.zeros((0, n), np.int64))
+    return {
+        FIXED: fixed,
+        ADVICE: rng.integers(0, F.P, (circuit.n_advice, n)),
+        INSTANCE: rng.integers(0, F.P, (circuit.n_instance, n)),
+        DATA: rng.integers(0, F.P, (circuit.n_data, n)),
+    }
+
+
+def _np_eval(expr, srcs, n: int) -> np.ndarray:
+    from ..core.plonkish import Col, Const, _Bin
+    if isinstance(expr, Const):
+        return np.full(n, expr.value % F.P, np.int64)
+    if isinstance(expr, Col):
+        return np.roll(srcs[expr.kind][expr.index] % F.P, -expr.rot)
+    assert isinstance(expr, _Bin)
+    a = _np_eval(expr.a, srcs, n)
+    b = _np_eval(expr.b, srcs, n)
+    if expr.op == "add":
+        return (a + b) % F.P
+    if expr.op == "sub":
+        return (a - b) % F.P
+    return (a * b) % F.P
+
+
+def check_vacuous(circuit: Circuit, where: str, seed: int = 0) -> list:
+    out = []
+    n = circuit.n_rows
+    rng = np.random.default_rng(seed)
+    trials = [_random_sources(circuit, rng) for _ in range(2)]
+    for name, e in circuit.gates:
+        guard = _fixed_guard((e,), circuit)
+        if guard is not None and not np.any(guard):
+            out.append(Finding(
+                "vacuous-gate", ERROR, where, name,
+                f"gate {name!r} has a fixed guard that is identically zero: "
+                f"it constrains nothing on any row"))
+            continue
+        if all(not np.any(_np_eval(e, srcs, n)) for srcs in trials):
+            out.append(Finding(
+                "vacuous-gate", ERROR, where, name,
+                f"gate {name!r} evaluates to zero on random witnesses: it is "
+                f"the zero polynomial (whp) and constrains nothing"))
+    for bus in circuit.buses:
+        for label, sel in (("f-side multiplicity m_f", bus.m_f),
+                           ("t-side selector t_sel", bus.t_sel)):
+            if is_fixed_only(sel) and not np.any(
+                    eval_fixed_np(sel, circuit.fixed_cols, n)):
+                out.append(Finding(
+                    "vacuous-bus", ERROR, where, bus.name,
+                    f"bus {bus.name!r} {label} is identically zero: the "
+                    f"argument degenerates"))
+    for gp in circuit.gps:
+        zeros = [is_fixed_only(s) and not np.any(
+                     eval_fixed_np(s, circuit.fixed_cols, n))
+                 for s in (gp.sel1, gp.sel2)]
+        if all(zeros):
+            out.append(Finding(
+                "vacuous-gp", ERROR, where, gp.name,
+                f"grand product {gp.name!r} has both selectors identically "
+                f"zero: the argument is trivially satisfied"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# columns + connectivity
+# ---------------------------------------------------------------------------
+def _names(circuit: Circuit, kind: str) -> list:
+    return {FIXED: circuit.fixed_names, ADVICE: circuit.advice_names,
+            INSTANCE: circuit.instance_names,
+            DATA: circuit.data_names}[kind]
+
+
+def check_columns(circuit: Circuit, where: str) -> list:
+    out = []
+    refs = circuit.referenced_cols()
+    for kind, check in _KIND_CHECK.items():
+        names = _names(circuit, kind)
+        for i, colname in enumerate(names):
+            if i not in refs[kind]:
+                out.append(Finding(
+                    check, ERROR, where, colname,
+                    f"{kind} column {colname!r} appears in no gate, bus, or "
+                    f"grand product: its values are entirely unconstrained"))
+    for i, colname in enumerate(circuit.fixed_names):
+        if i not in refs[FIXED] and colname != "__row0":
+            out.append(Finding(
+                "unused-fixed-column", WARNING, where, colname,
+                f"fixed column {colname!r} is dead structure (committed but "
+                f"never read by any constraint)"))
+    out += _check_connectivity(circuit, where)
+    return out
+
+
+def _check_connectivity(circuit: Circuit, where: str) -> list:
+    """Union-find over columns; constraints are hyper-edges."""
+    parent = {}
+
+    def find(x):
+        parent.setdefault(x, x)
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    def union(a, b):
+        parent[find(a)] = find(b)
+
+    for _, _, exprs in circuit.constraint_exprs():
+        cols = sorted({(a.kind, a.index) for e in exprs for a in e.atoms()})
+        for c in cols[1:]:
+            union(cols[0], c)
+    comps = {}
+    for node in list(parent):
+        comps.setdefault(find(node), []).append(node)
+    out = []
+    for members in comps.values():
+        if all(k == ADVICE for k, _ in members):
+            names = sorted(circuit.advice_names[i] for _, i in members)
+            out.append(Finding(
+                "floating-advice-component", WARNING, where,
+                ",".join(names),
+                f"advice columns {names} form a constraint component touching "
+                f"no fixed/instance/data column: a free-floating subcircuit"))
+    return out

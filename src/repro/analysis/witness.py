@@ -1,0 +1,344 @@
+"""Under-constraint detection by stride-decoupled witness perturbation.
+
+The question a soundness reviewer actually asks of a circuit is: *which
+witness cells can a malicious prover change without violating anything?*
+This module answers it mechanically (Picus/Circomspect-style mutation
+probing, adapted to this codebase's PLONKish semantics):
+
+1. Fill the honest witness once (auto-multiplicity columns included —
+   and **never** refilled afterwards: refilling would let the framework
+   absorb a perturbation the constraint system must catch itself).
+2. For each advice/instance column, perturb cells with iid random deltas
+   and re-evaluate every constraint that reads the column.  Perturbed
+   cells are spaced by a stride larger than the column's rotation
+   diameter, so any affected constraint row reads **exactly one**
+   perturbed cell — per-cell attribution is exact, not heuristic:
+   * gates: a nonzero residual at row j binds the unique perturbed cell
+     among {(j+r) mod n}.
+   * buses (logUp): soundness is the *global* sum; a cell is bound iff
+     its total increment-diff over its attributed rows is nonzero.
+   * grand products: a cell is bound iff an attributed row's factor
+     changed (ratio cancellation across rows has probability ~|Fp4|^-1).
+3. Cells no constraint reacts to are *free*.  Free advice cells are
+   usually benign padding (reported as coverage stats); a *fully* free
+   advice column is a warning.  Free **instance** cells are classified
+   semantically: if perturbing them changes what the adapter's
+   ``extract_outputs`` reads out of the (still-verifying!) instance, a
+   prover can forge query results — the ``forgeable-output`` ERROR, the
+   exact bug class this analyzer exists for.  Every forgery claim is
+   re-verified by running the full honest check on the perturbed witness
+   before it is reported, so false positives are essentially impossible.
+
+Known limits (documented, by design): random deltas do not detect freedom
+*within* a constrained subset (e.g. a boolean-gated cell that may be 0 or
+1), nor coordinated multi-cell forgeries; data columns are not probed
+(they are bound externally by the published dataset commitment).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import field as F
+from ..core import prover as pv
+from ..core.plonkish import (ADVICE, DATA, FIXED, INSTANCE, BaseOps,
+                             compress_tuple, eval_expr)
+from .findings import ERROR, WARNING, Finding
+
+_PROBED_KINDS = (ADVICE, INSTANCE)
+
+
+# ---------------------------------------------------------------------------
+# numpy Fp4 helpers (host-side; tiny arrays, exact int64 arithmetic)
+# ---------------------------------------------------------------------------
+def _emul_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Schoolbook Fp4 multiply, x^4 = W_EXT, on (..., 4) int64 arrays."""
+    c = np.zeros(np.broadcast_shapes(a.shape, b.shape), np.int64)
+    for i in range(4):
+        for j in range(4):
+            t = a[..., i] * b[..., j] % F.P
+            k = i + j
+            if k >= 4:
+                c[..., k - 4] = (c[..., k - 4] + t * F.W_EXT) % F.P
+            else:
+                c[..., k] = (c[..., k] + t) % F.P
+    return c
+
+
+def _eprod_np(rows: np.ndarray) -> np.ndarray:
+    """Product over axis 0 of an (n, 4) ext array (pairwise tree)."""
+    one = np.array([1, 0, 0, 0], np.int64)
+    a = rows % F.P
+    while a.shape[0] > 1:
+        if a.shape[0] % 2:
+            a = np.concatenate([a, one[None, :]], axis=0)
+        a = _emul_np(a[0::2], a[1::2])
+    return a[0] if a.shape[0] else one
+
+
+# ---------------------------------------------------------------------------
+# constraint evaluation over a concrete assignment
+# ---------------------------------------------------------------------------
+class _Evaluator:
+    """Evaluates gates/bus-increments/gp-factors for one assignment."""
+
+    def __init__(self, circuit, srcs: dict, alpha, beta):
+        self.c = circuit
+        self.srcs = srcs
+        self.alpha = jnp.asarray(alpha)
+        self.beta = jnp.asarray(beta)
+        self.n = circuit.n_rows
+        self.like = jnp.zeros(self.n, jnp.uint32)
+        self._cache = {}
+
+    def getter(self, kind, idx, rot):
+        key = (kind, idx, rot)
+        v = self._cache.get(key)
+        if v is None:
+            col = np.roll(self.srcs[kind][idx] % F.P, -rot)
+            v = jnp.asarray(col.astype(np.uint32))
+            self._cache[key] = v
+        return v
+
+    def gate_residual(self, expr) -> np.ndarray:
+        v = eval_expr(expr, self.getter, BaseOps, self.like)
+        return np.asarray(v, np.int64)
+
+    def bus_inc(self, bus) -> np.ndarray:
+        """Per-row logUp increment m_f/(β+αf) − m_t·t_sel/(β+αt), (n,4)."""
+        f_vals = [eval_expr(e, self.getter, BaseOps, self.like)
+                  for e in bus.f_tuple]
+        t_vals = [eval_expr(e, self.getter, BaseOps, self.like)
+                  for e in bus.t_tuple]
+        m_f = eval_expr(bus.m_f, self.getter, BaseOps, self.like)
+        m_t = eval_expr(bus.m_t * bus.t_sel, self.getter, BaseOps, self.like)
+        bb = jnp.broadcast_to(self.beta, (self.n, 4))
+        d_f = F.eadd(bb, compress_tuple(f_vals, self.alpha))
+        d_t = F.eadd(bb, compress_tuple(t_vals, self.alpha))
+        num = F.esub(F.fmul(d_t, m_f[:, None]), F.fmul(d_f, m_t[:, None]))
+        inc = F.emul(num, F.ebatch_inv(F.emul(d_f, d_t)))
+        return np.asarray(inc, np.int64)
+
+    def gp_factors(self, gp) -> tuple:
+        out = []
+        bb = jnp.broadcast_to(self.beta, (self.n, 4))
+        one = jnp.zeros((self.n, 4), jnp.uint32).at[:, 0].set(1)
+        for tup, sel in ((gp.c1_tuple, gp.sel1), (gp.c2_tuple, gp.sel2)):
+            vals = [eval_expr(e, self.getter, BaseOps, self.like) for e in tup]
+            s = eval_expr(sel, self.getter, BaseOps, self.like)
+            d = F.eadd(bb, compress_tuple(vals, self.alpha))
+            not_s = F.fsub(jnp.full_like(s, 1), s)
+            f = F.eadd(F.fmul(d, s[:, None]), F.fmul(one, not_s[:, None]))
+            out.append(np.asarray(f, np.int64))
+        return tuple(out)
+
+
+def _constraints_of(circuit) -> list:
+    """[(kind, name, obj, per-column rotation map)] for every constraint."""
+    out = []
+    for ckind, name, exprs in circuit.constraint_exprs():
+        rotmap = {}
+        for e in exprs:
+            for (k, i, r) in e.rotations():
+                rotmap.setdefault((k, i), set()).add(r)
+        obj = None
+        if ckind == "gate":
+            obj = next(e for gname, e in circuit.gates if gname == name)
+        elif ckind == "bus":
+            obj = next(b for b in circuit.buses if b.name == name)
+        else:
+            obj = next(g for g in circuit.gps if g.name == name)
+        out.append((ckind, name, obj, rotmap))
+    return out
+
+
+def _honest_violations(ev: _Evaluator, constraints, where: str) -> list:
+    out = []
+    for ckind, name, obj, _ in constraints:
+        if ckind == "gate":
+            r = ev.gate_residual(obj)
+            if np.any(r):
+                rows = np.nonzero(r)[0][:5].tolist()
+                out.append(Finding(
+                    "witness-violation", ERROR, where, name,
+                    f"gate {name!r} violated by the honest witness at rows "
+                    f"{rows}: the circuit rejects correct executions"))
+        elif ckind == "bus":
+            inc = ev.bus_inc(obj)
+            if np.any(inc.sum(axis=0) % F.P):
+                out.append(Finding(
+                    "witness-violation", ERROR, where, name,
+                    f"bus {name!r} does not balance on the honest witness"))
+        else:
+            f1, f2 = ev.gp_factors(obj)
+            if not np.array_equal(_eprod_np(f1), _eprod_np(f2)):
+                out.append(Finding(
+                    "witness-violation", ERROR, where, name,
+                    f"grand product {name!r} does not balance on the honest "
+                    f"witness"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the probe
+# ---------------------------------------------------------------------------
+def _perturbed(srcs: dict, kind: str, col: int, delta: np.ndarray) -> dict:
+    out = dict(srcs)
+    arr = srcs[kind].copy()
+    arr[col] = (arr[col] + delta) % F.P
+    out[kind] = arr
+    return out
+
+
+def _probe_column(circuit, srcs, kind, col, relevant, alpha, beta, rng):
+    """Return a boolean coverage mask for one column's cells."""
+    n = circuit.n_rows
+    rots_c = sorted({r for _, _, _, rotmap in relevant
+                     for r in rotmap.get((kind, col), ())})
+    stride = max(rots_c) - min(rots_c) + 1
+    covered = np.zeros(n, bool)
+    honest = _Evaluator(circuit, srcs, alpha, beta)
+    honest_inc = {name: honest.bus_inc(obj)
+                  for ckind, name, obj, _ in relevant if ckind == "bus"}
+    honest_gp = {name: honest.gp_factors(obj)
+                 for ckind, name, obj, _ in relevant if ckind == "gp"}
+    idx = np.arange(n)
+    for off in range(stride):
+        mask = (idx % stride) == off
+        delta = rng.integers(1, F.P, n) * mask
+        ev = _Evaluator(circuit, _perturbed(srcs, kind, col, delta),
+                        alpha, beta)
+        for ckind, cname, obj, rotmap in relevant:
+            rots = sorted(rotmap[(kind, col)])
+            if ckind == "gate":
+                changed = np.nonzero(ev.gate_residual(obj))[0]
+                for r in rots:
+                    cand = (changed + r) % n
+                    covered[cand[mask[cand]]] = True
+            elif ckind == "bus":
+                diff = (ev.bus_inc(obj) - honest_inc[cname]) % F.P
+                rows = np.nonzero(np.any(diff, axis=1))[0]
+                # the bus constraint is the GLOBAL sum: a cell is bound iff
+                # its total contribution-diff is nonzero, so accumulate the
+                # exact ext diff per attributed cell before deciding
+                acc = np.zeros((n, 4), np.int64)
+                for r in rots:
+                    cand = (rows + r) % n
+                    hit = mask[cand]
+                    np.add.at(acc, cand[hit], diff[rows[hit]])
+                covered[np.any(acc % F.P, axis=1)] = True
+            else:
+                hf1, hf2 = honest_gp[cname]
+                f1, f2 = ev.gp_factors(obj)
+                ch = np.any((f1 - hf1) % F.P, axis=1) | \
+                    np.any((f2 - hf2) % F.P, axis=1)
+                rows = np.nonzero(ch)[0]
+                for r in rots:
+                    cand = (rows + r) % n
+                    covered[cand[mask[cand]]] = True
+    return covered
+
+
+def witness_analysis(circuit, advice, instance, data, where: str,
+                     seed: int = 0, extract=None):
+    """Probe every advice/instance column; returns (findings, coverage).
+
+    ``extract(instance) -> dict`` is the adapter's public-output reader,
+    used to classify free instance cells as forgeable vs benign padding.
+    ``coverage`` is a list of per-column stat dicts for the JSON report.
+    """
+    circuit.assign_ext_cols()
+    n = circuit.n_rows
+    advice = np.asarray(advice, np.int64).copy()
+    instance = np.asarray(instance, np.int64).copy()
+    data = (np.zeros((0, n), np.int64) if data is None
+            else np.asarray(data, np.int64).copy())
+    # fill auto-multiplicity columns ONCE on the honest witness; the probe
+    # must never refill them (that would mask bus perturbations)
+    adv32 = advice.astype(np.uint32).copy()
+    pv.auto_multiplicities(circuit, data.astype(np.uint32),
+                           adv32, instance.astype(np.uint32))
+    advice = adv32.astype(np.int64)
+    fixed = (np.stack(circuit.fixed_cols).astype(np.int64)
+             if circuit.fixed_cols else np.zeros((0, n), np.int64))
+    srcs = {FIXED: fixed, ADVICE: advice, INSTANCE: instance, DATA: data}
+
+    rng = np.random.default_rng(seed)
+    alpha = rng.integers(1, F.P, 4).astype(np.uint32)
+    beta = rng.integers(1, F.P, 4).astype(np.uint32)
+    constraints = _constraints_of(circuit)
+    honest = _Evaluator(circuit, srcs, alpha, beta)
+    findings = _honest_violations(honest, constraints, where)
+    if findings:
+        return findings, []       # garbage witness: probing is meaningless
+
+    names = {ADVICE: circuit.advice_names, INSTANCE: circuit.instance_names}
+    free: dict = {}
+    coverage = []
+    for kind in _PROBED_KINDS:
+        for col, colname in enumerate(names[kind]):
+            relevant = [c for c in constraints if (kind, col) in c[3]]
+            if not relevant:
+                # structurally orphan: every cell trivially free (the
+                # structural pass already errors on the column itself)
+                free[(kind, col)] = np.ones(n, bool)
+            else:
+                covered = _probe_column(circuit, srcs, kind, col, relevant,
+                                        alpha, beta, rng)
+                free[(kind, col)] = ~covered
+            nfree = int(free[(kind, col)].sum())
+            coverage.append(dict(kind=kind, column=colname, rows=n,
+                                 free_cells=nfree))
+            if kind == ADVICE and nfree == n and relevant:
+                findings.append(Finding(
+                    "unconstrained-advice-column", WARNING, where, colname,
+                    f"advice column {colname!r} is referenced by constraints "
+                    f"but no cell of it is bound: every reference is masked"))
+    findings += _classify_instance_freedom(
+        circuit, srcs, free, constraints, alpha, beta, rng, where, extract)
+    return findings, coverage
+
+
+def _outputs_equal(a: dict, b: dict) -> bool:
+    if set(a) != set(b):
+        return False
+    return all(np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a)
+
+
+def _classify_instance_freedom(circuit, srcs, free, constraints, alpha, beta,
+                               rng, where, extract):
+    """Free instance cells are an ERROR iff they can change the extracted
+    public outputs while the witness still satisfies every constraint."""
+    if extract is None:
+        return []
+    out = []
+    honest_outputs = extract(srcs[INSTANCE].copy())
+    for (kind, col), mask in sorted(free.items()):
+        if kind != INSTANCE or not mask.any():
+            continue
+        forged = srcs[INSTANCE].copy()
+        forged[col, mask] = rng.integers(1, F.P, int(mask.sum()))
+        try:
+            got = extract(forged)
+            changed = not _outputs_equal(honest_outputs, got)
+        except Exception as exc:               # extraction crash = suspicious
+            got, changed = f"extract raised {exc!r}", True
+        if not changed:
+            continue
+        # confirm the forgery actually still satisfies the circuit before
+        # reporting (kills any residual probe false positive)
+        ev = _Evaluator(circuit, {**srcs, INSTANCE: forged}, alpha, beta)
+        if _honest_violations(ev, constraints, where):
+            continue
+        colname = circuit.instance_names[col]
+        out.append(Finding(
+            "forgeable-output", ERROR, where, colname,
+            f"instance column {colname!r} has {int(mask.sum())} free cells "
+            f"whose values flow into extract_outputs: a prover can forge "
+            f"query results that still verify"))
+    return out
+
+
+def ext_product_check(f1: np.ndarray, f2: np.ndarray) -> bool:
+    """Exposed for tests: cyclic grand-product balance."""
+    return bool(np.array_equal(_eprod_np(f1), _eprod_np(f2)))

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from ...graphdb import engine, tables
+from ...graphdb import engine, ldbc, tables
 from ...graphdb.storage import pad_pow2
 from .. import field as F
 from .. import ir
@@ -46,6 +46,12 @@ def adapter_for(node):
     except KeyError:
         raise KeyError(f"no adapter registered for node type "
                        f"{type(node).__name__}") from None
+
+
+def adapters() -> dict:
+    """Every registered adapter by name (the soundness analyzer iterates
+    this: a new adapter is vetted the moment it is registered)."""
+    return dict(_BY_NAME)
 
 
 def adapter_named(name: str):
@@ -127,6 +133,17 @@ class Adapter:
             f"{self.name} step is bound to a base table, not chained"
         return _table_cols(None, node.table, env)   # shares the env memo
 
+    def analysis_cases(self, db) -> list:
+        """Representative shapes for the soundness analyzer
+        (``repro.analysis``): >= 2 tuples ``(label, mini_plan, params)``
+        whose LAST node is this adapter's node type.  Mandatory for every
+        registered adapter — the analysis CI job fails a registry whose
+        adapters cannot be probed (docs/analysis.md, 'vetting a new
+        adapter')."""
+        raise NotImplementedError(
+            f"adapter {self.name!r} declares no analysis_cases(); every "
+            f"registered adapter must be analyzable (docs/analysis.md)")
+
 
 def _col_equals(op: Operator, instance, handle: str, value: int) -> bool:
     col = np.asarray(instance[op.handles[handle].index], np.int64)
@@ -176,6 +193,19 @@ class ExpandAdapter(Adapter):
     def check_instance(self, op, instance, node, env: ir.Env) -> bool:
         return _col_equals(op, instance, "id_s", self._source(node, env))
 
+    def analysis_cases(self, db) -> list:
+        def plan(label, node):
+            return (label, ir.Plan(f"analysis/{label}", (node,), {}), {})
+        return [
+            plan("hasCreator", ir.Expand(ir.BaseTable("hasCreator"),
+                                         ir.Lit(ldbc.COMMENT_BASE + 7))),
+            plan("knows_prop", ir.Expand(ir.BaseTable("knows_date"),
+                                         ir.Lit(1), with_prop=True)),
+            plan("knows_prop_rev", ir.Expand(ir.BaseTable("knows_date"),
+                                             ir.Lit(2), with_prop=True,
+                                             reverse=True)),
+        ]
+
 
 class NameFilterAdapter(ExpandAdapter):
     """Attribute filter = reversed expansion over a chained (id, attr) table:
@@ -188,6 +218,20 @@ class NameFilterAdapter(ExpandAdapter):
 
     def _flags(self, node):
         return False, True     # reversed expansion, no property column
+
+    def analysis_cases(self, db) -> list:
+        names = db.node_props["person"]["firstName"]
+
+        def case(label, ids, name):
+            scaffold = ir.SetExpand(ir.BaseTable("person_firstName"),
+                                    ir.Lit(tuple(int(i) for i in ids)))
+            filt = ir.NameFilter(ir.Chained((ir.Out(0, "src"),
+                                             ir.Out(0, "dst"))),
+                                 ir.Lit(int(name)))
+            return (label, ir.Plan(f"analysis/{label}", (scaffold, filt), {}),
+                    {})
+        return [case("match_first", np.arange(1, 9), names[0]),
+                case("match_none", np.arange(1, 5), 0)]
 
 
 # ---------------------------------------------------------------------------
@@ -260,6 +304,18 @@ class SetExpandAdapter(Adapter):
         want[: len(s_ext)] = s_ext
         return bool((col == want).all())
 
+    def analysis_cases(self, db) -> list:
+        def plan(label, node):
+            return (label, ir.Plan(f"analysis/{label}", (node,), {}), {})
+        return [
+            plan("knows_bidir", ir.SetExpand(
+                ir.BaseTable("knows"), ir.Lit((1, 2, 3)),
+                bidirectional=True)),
+            plan("firstName", ir.SetExpand(
+                ir.BaseTable("person_firstName"),
+                ir.Lit(tuple(range(1, 7))))),
+        ]
+
 
 # ---------------------------------------------------------------------------
 # OrderBy (§IV-E) — always chained: its table is earlier nodes' outputs
@@ -304,6 +360,16 @@ class OrderByAdapter(Adapter):
     def extract_outputs(self, op: Operator, instance) -> dict:
         return dict(vals=_selected(op, instance, "O_val"),
                     pay=_selected(op, instance, "O_pay"))
+
+    def analysis_cases(self, db) -> list:
+        vals = (50, 30, 90, 10, 70, 30)
+        pays = (11, 12, 13, 14, 15, 16)
+
+        def plan(label, descending, k):
+            node = ir.OrderBy(ir.Lit(vals), ir.Lit(pays), k=ir.Lit(k),
+                              descending=descending)
+            return (label, ir.Plan(f"analysis/{label}", (node,), {}), {})
+        return [plan("top3_desc", True, 3), plan("bottom2_asc", False, 2)]
 
 
 # ---------------------------------------------------------------------------
@@ -359,6 +425,16 @@ class SSSPAdapter(Adapter):
             return _col_equals(op, instance, "id_t",
                                int(ir.resolve(node.target, env)))
         return True
+
+    def analysis_cases(self, db) -> list:
+        def plan(label, node):
+            return (label, ir.Plan(f"analysis/{label}", (node,), {}), {})
+        return [
+            plan("with_target", ir.SSSP(ir.BaseTable("knows_nodes"),
+                                        ir.Lit(1), target=ir.Lit(9))),
+            plan("all_dists", ir.SSSP(ir.BaseTable("knows_nodes"),
+                                      ir.Lit(2))),
+        ]
 
 
 register(ExpandAdapter())

@@ -63,6 +63,10 @@ class Expr:
     def rotations(self) -> set:
         raise NotImplementedError
 
+    def atoms(self) -> frozenset:
+        """All :class:`Col` leaves (kind, index, rot included)."""
+        raise NotImplementedError
+
 
 def _wrap(x):
     if isinstance(x, Expr):
@@ -80,6 +84,9 @@ class Const(Expr):
     def rotations(self):
         return set()
 
+    def atoms(self):
+        return frozenset()
+
 
 @dataclass(frozen=True)
 class Col(Expr):
@@ -96,6 +103,9 @@ class Col(Expr):
     def rotations(self):
         return {(self.kind, self.index, self.rot)}
 
+    def atoms(self):
+        return frozenset({self})
+
 
 @dataclass(frozen=True)
 class _Bin(Expr):
@@ -110,6 +120,9 @@ class _Bin(Expr):
 
     def rotations(self):
         return self.a.rotations() | self.b.rotations()
+
+    def atoms(self):
+        return self.a.atoms() | self.b.atoms()
 
 
 def fixed(i, rot=0):
@@ -148,6 +161,40 @@ class ExtOps:
         return out.at[..., 0].set(v % F.P)
 
 
+def mul_factors(expr: Expr) -> list:
+    """Flatten the top-level multiplication tree: the factors whose product
+    is ``expr``.  Additions/subtractions are opaque (returned whole), so a
+    guarded gate ``sel * body`` yields ``[sel, body]`` — the shape the
+    analyzer uses to find pure-fixed selector guards."""
+    if isinstance(expr, _Bin) and expr.op == "mul":
+        return mul_factors(expr.a) + mul_factors(expr.b)
+    return [expr]
+
+
+def is_fixed_only(expr: Expr) -> bool:
+    """True when every column the expression touches is a FIXED column —
+    i.e. its row values are circuit structure, computable without a witness."""
+    return all(a.kind == FIXED for a in expr.atoms())
+
+
+def eval_fixed_np(expr: Expr, fixed_cols, n_rows: int) -> np.ndarray:
+    """Evaluate a pure-fixed expression over all rows with plain numpy
+    (int64 mod P).  Only valid when :func:`is_fixed_only` holds."""
+    if isinstance(expr, Const):
+        return np.full(n_rows, expr.value % F.P, np.int64)
+    if isinstance(expr, Col):
+        assert expr.kind == FIXED, f"eval_fixed_np hit a {expr.kind} column"
+        return np.roll(np.asarray(fixed_cols[expr.index], np.int64), -expr.rot)
+    assert isinstance(expr, _Bin)
+    a = eval_fixed_np(expr.a, fixed_cols, n_rows)
+    b = eval_fixed_np(expr.b, fixed_cols, n_rows)
+    if expr.op == "add":
+        return (a + b) % F.P
+    if expr.op == "sub":
+        return (a - b) % F.P
+    return (a * b) % F.P
+
+
 def eval_expr(expr: Expr, getter: Callable, ops, like):
     """Evaluate an expression tree. ``getter(kind, index, rot)`` returns the
     column evaluations; ``like`` is a template value for Const shaping."""
@@ -183,6 +230,10 @@ class Bus:
     auto_mult_col: int = -1               # advice col auto-allocated
     ext_col: int = -1                     # helper column index (set by circuit)
 
+    def exprs(self) -> tuple:
+        """Every base-column expression the bus constraint touches."""
+        return (*self.f_tuple, *self.t_tuple, self.m_f, self.m_t, self.t_sel)
+
 
 @dataclass
 class GrandProduct:
@@ -198,6 +249,10 @@ class GrandProduct:
     sel1: Expr = Const(1)
     sel2: Expr = Const(1)
     ext_col: int = -1
+
+    def exprs(self) -> tuple:
+        """Every base-column expression the argument touches."""
+        return (*self.c1_tuple, *self.c2_tuple, self.sel1, self.sel2)
 
 
 @dataclass
@@ -344,18 +399,39 @@ class Circuit:
             g.ext_col = i
             i += 1
 
+    def constraint_exprs(self):
+        """Iterate ``(kind, name, exprs)`` over every constraint — the one
+        enumeration the analyzer, opening schedule, and rotation set share.
+        ``kind`` is "gate" / "bus" / "gp"; ``exprs`` is the tuple of
+        base-column expressions the constraint evaluates."""
+        for name, e in self.gates:
+            yield "gate", name, (e,)
+        for b in self.buses:
+            yield "bus", b.name, b.exprs()
+        for g in self.gps:
+            yield "gp", g.name, g.exprs()
+
     def rotation_set(self) -> set:
         """All (kind, col, rot) base-column accesses + ext rotations {0,1}."""
         rots = set()
-        for _, e in self.gates:
-            rots |= e.rotations()
-        for b in self.buses:
-            for e in (*b.f_tuple, *b.t_tuple, b.m_f, b.m_t, b.t_sel):
-                rots |= e.rotations()
-        for g in self.gps:
-            for e in (*g.c1_tuple, *g.c2_tuple, g.sel1, g.sel2):
+        for _, _, exprs in self.constraint_exprs():
+            for e in exprs:
                 rots |= e.rotations()
         return rots
+
+    def referenced_cols(self) -> dict:
+        """kind -> set of column indices appearing in any constraint."""
+        refs = {FIXED: set(), ADVICE: set(), INSTANCE: set(), DATA: set()}
+        for k, i, _ in self.rotation_set():
+            refs[k].add(i)
+        return refs
+
+    def gate_info(self) -> list:
+        """Per-gate metadata for analysis/reporting: name, AST degree, and
+        the rotation accesses it performs."""
+        return [dict(name=name, degree=e.degree(),
+                     rotations=sorted(e.rotations()))
+                for name, e in self.gates]
 
     def digest_seed(self) -> list:
         """Cheap structural fingerprint absorbed into the transcript."""

@@ -137,15 +137,6 @@ def opening_schedule(circuit: Circuit, blowup: int):
     return sched
 
 
-def _bus_degree_ok(bus):
-    df = 1 + max(e.degree() for e in bus.f_tuple)
-    dt = 1 + max(e.degree() for e in bus.t_tuple)
-    d = max(1 + df + dt - 2, bus.m_f.degree() + dt - 1, bus.m_t.degree() + df - 1)
-    # (h'-h)*d_f*d_t has degree 1 + deg(d_f) + deg(d_t) with deg(d)=max expr deg
-    d = max(1 + (df - 1) + (dt - 1) + 2, bus.m_f.degree() + dt, bus.m_t.degree() + df)
-    return d
-
-
 def auto_multiplicities(circuit: Circuit, data_np: np.ndarray,
                         advice_np: np.ndarray, instance_np: np.ndarray):
     """Fill auto-multiplicity advice columns for lookup buses (host-side).
@@ -174,8 +165,10 @@ def auto_multiplicities(circuit: Circuit, data_np: np.ndarray,
         both = np.concatenate([t_vals, f_vals], axis=0)
         _, inv = np.unique(both, axis=0, return_inverse=True)
         code_t, code_f = inv[:n], inv[n:]
-        counts = np.bincount(code_f, weights=m_f.astype(np.float64),
-                             minlength=int(inv.max()) + 1).astype(np.int64)
+        # exact int64 accumulation: float-weighted bincount would round
+        # above 2^53 and is banned from field code by the purity lint
+        counts = np.zeros(int(inv.max()) + 1, np.int64)
+        np.add.at(counts, code_f, m_f)
         sel_rows = np.nonzero(t_sel != 0)[0]
         u_t, first_sel = np.unique(code_t[sel_rows], return_index=True)
         m_t = np.zeros(n, np.int64)

@@ -84,3 +84,21 @@ def test_serving_doc_matches_live_surfaces():
     # architecture.md links the serving section
     arch = (ROOT / "docs" / "architecture.md").read_text()
     assert "repro.serve" in arch and "serving.md" in arch
+
+
+def test_analysis_doc_matches_live_catalogue():
+    """docs/analysis.md documents every check id the analyzer can emit,
+    the adapter vetting contract, and the baseline workflow."""
+    from repro.analysis.findings import ALL_CHECKS
+    text = (ROOT / "docs" / "analysis.md").read_text()
+    for check in sorted(ALL_CHECKS):
+        assert f"`{check}`" in text, \
+            f"docs/analysis.md is missing check id {check}"
+    for needle in ("analysis_cases", "analysis_baseline.json",
+                   "python -m repro.analysis", "--fail-on-findings",
+                   "--selftest", "auto_multiplicities", "rotation diameter"):
+        assert needle in text, f"docs/analysis.md no longer mentions {needle}"
+    # architecture.md links the analysis section; README points at the doc
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    assert "repro.analysis" in arch and "analysis.md" in arch
+    assert "analysis.md" in (ROOT / "README.md").read_text()

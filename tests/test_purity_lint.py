@@ -1,0 +1,131 @@
+"""Proof-path purity lint: every rule on a synthetic snippet, the real
+tree staying clean (modulo the committed baseline), and the LM-training
+quarantine regression guard."""
+from pathlib import Path
+
+from repro.analysis.findings import ERROR, WARNING, load_baseline
+from repro.analysis.purity import (is_proof_path, lint_source,
+                                   run_purity_lint)
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _ids(findings):
+    return {(f.check, f.key) for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# rule-by-rule on synthetic snippets
+# ---------------------------------------------------------------------------
+def test_pickle_banned_everywhere():
+    for rel in ("core/session.py", "serve/service.py", "core/prover.py"):
+        fs = lint_source(rel, "import pickle\n")
+        assert ("banned-import", "import pickle") in _ids(fs)
+    fs = lint_source("serve/service.py", "from dill import loads\n")
+    assert any(f.check == "banned-import" for f in fs)
+
+
+def test_time_random_banned_only_on_proof_path():
+    src = "import time\nimport random\n"
+    assert len(lint_source("core/prover.py", src)) == 2
+    assert lint_source("core/session.py", src) == []     # infra may time
+    assert is_proof_path("core/operators/expansion.py")
+    assert not is_proof_path("core/session.py")
+
+
+def test_quarantine_breach_absolute_and_relative():
+    fs = lint_source("core/session.py", "from repro.train import loop\n")
+    assert any(f.check == "quarantine-breach" for f in fs)
+    # relative import resolution: core/x.py's ``..train`` is repro.train
+    fs = lint_source("core/x.py", "from ..train import loop\n")
+    assert any(f.check == "quarantine-breach" for f in fs)
+    fs = lint_source("serve/x.py", "from repro.models import lm\n")
+    assert any(f.check == "quarantine-breach" for f in fs)
+    # core importing core is fine
+    assert lint_source("core/x.py", "from ..core import field\n") == []
+
+
+def test_float_rules_fire_on_proof_path_only():
+    cases = ["x = 1.5\n", "y = a / b\n", "d = np.float32\n",
+             "z = float(x)\n"]
+    for src in cases:
+        fs = lint_source("core/fri.py", src)
+        assert any(f.check == "float-in-field-code" and f.severity == ERROR
+                   for f in fs), src
+        assert lint_source("core/backend.py", src) == [], src
+    # integer division and int literals are fine on the proof path
+    assert lint_source("core/fri.py", "x = a // b\ny = 7\n") == []
+
+
+def test_unseeded_rng_detected():
+    fs = lint_source("core/session.py", "r = np.random.default_rng()\n")
+    assert any(f.check == "unseeded-rng" for f in fs)
+    fs = lint_source("serve/x.py", "np.random.shuffle(xs)\n")
+    assert any(f.check == "unseeded-rng" for f in fs)
+    assert lint_source("core/session.py",
+                       "r = np.random.default_rng(11)\n") == []
+
+
+def test_nondet_set_iteration_warned():
+    fs = lint_source("core/x.py", "for v in {1, 2, 3}:\n    pass\n")
+    assert any(f.check == "nondet-iteration" and f.severity == WARNING
+               for f in fs)
+    fs = lint_source("core/x.py", "ys = [v for v in set(xs)]\n")
+    assert any(f.check == "nondet-iteration" for f in fs)
+    assert lint_source("core/x.py",
+                       "for v in sorted(set(xs)):\n    pass\n") == []
+
+
+def test_eval_exec_banned():
+    assert any(f.check == "eval-exec"
+               for f in lint_source("serve/x.py", "eval('1+1')\n"))
+
+
+SERVE_CLASS = """\
+import threading
+
+class Svc:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.n = 0
+
+    def unsafe(self):
+        self.n += 1
+
+    def safe(self):
+        with self._lock:
+            self.n += 1
+"""
+
+
+def test_unlocked_serve_state_warned():
+    fs = lint_source("serve/svc.py", SERVE_CLASS)
+    hits = [f for f in fs if f.check == "unlocked-serve-state"]
+    assert len(hits) == 1 and "self.n += 1" == hits[0].key
+    # same code outside repro.serve is not the lint's business
+    assert lint_source("core/svc.py", SERVE_CLASS) == []
+
+
+# ---------------------------------------------------------------------------
+# the real tree
+# ---------------------------------------------------------------------------
+def test_real_tree_clean_modulo_baseline():
+    findings, n_files = run_purity_lint()
+    assert n_files >= 30, "lint should scan all of repro.core + repro.serve"
+    baseline = load_baseline(ROOT / "analysis_baseline.json")
+    unsuppressed = [f for f in findings if f.ident() not in baseline]
+    assert unsuppressed == [], \
+        f"purity findings outside the baseline: " \
+        f"{[(f.check, f.where, f.line, f.key) for f in unsuppressed]}"
+    # and the baseline itself has no stale entries
+    idents = {f.ident() for f in findings}
+    assert baseline <= idents, f"stale baseline entries: {baseline - idents}"
+
+
+def test_quarantine_holds_on_real_tree():
+    """Regression guard for the LM-training quarantine: no core/serve file
+    imports repro.train, repro.models, or repro.configs.lm."""
+    findings, _ = run_purity_lint()
+    breaches = [f for f in findings if f.check == "quarantine-breach"]
+    assert breaches == [], \
+        f"quarantine breached: {[(f.where, f.key) for f in breaches]}"
