@@ -113,8 +113,61 @@ def v_free_output_cell(db):
         {"orphan-instance-column", "forgeable-output"}
 
 
+def _filter_case(db, label: str, cmp: str = "ge", thr: int = 30):
+    node = ir.Filter(ir.Chained((ir.Lit(tuple(range(1, 9))),
+                                 ir.Lit((5, 30, 17, 30, 2, 99, 42, 8)))),
+                     cmp, ir.Lit(thr))
+    return materialize(db, "filter", label,
+                       ir.Plan(f"corpus/{label}", (node,), {}), {})
+
+
+def _aggregate_case(db, label: str, agg: str = "sum"):
+    node = ir.Aggregate(ir.Chained((ir.Lit((7, 31, 9, 31, 12, 4)),)), agg)
+    return materialize(db, "aggregate", label,
+                       ir.Plan(f"corpus/{label}", (node,), {}), {})
+
+
+def _strip_named(c, prefix: str):
+    """Delete every gate and bus whose name starts with ``prefix`` (the
+    footprint of one add_range_check call: limb buses + recompose gate)."""
+    c.gates = [(n, e) for n, e in c.gates if not n.startswith(prefix)]
+    c.buses = [b for b in c.buses if not b.name.startswith(prefix)]
+    c._mutated()
+
+
+def v_filter_unchecked_predicate(db):
+    """The filter's pass-side range check is deleted: the pass flag is still
+    boolean but no longer *evidenced* (V - thr need not be in range), and the
+    committed limb columns float free."""
+    case = _filter_case(db, "filter_unchecked_predicate")
+    _strip_named(case.op.circuit, "cmp_pass")
+    return "filter_unchecked_predicate", case, {"orphan-advice-column"}
+
+
+def v_aggregate_forged_total(db):
+    """The bus binding the public sum to the final accumulator is deleted:
+    the accumulator still runs honestly but agg_out is prover-chosen."""
+    case = _aggregate_case(db, "aggregate_forged_total")
+    c = case.op.circuit
+    c.buses = [b for b in c.buses if b.name != "agg_bind"]
+    c._mutated()
+    return "aggregate_forged_total", case, \
+        {"orphan-instance-column", "forgeable-output"}
+
+
+def v_min_missing_bound(db):
+    """min's lower-bound range check is deleted: agg_out still originates
+    from a marked input row, but nothing forces it to be <= every value —
+    the marker can point at any row."""
+    case = _aggregate_case(db, "min_missing_bound", agg="min")
+    _strip_named(case.op.circuit, "min_le")
+    return "min_missing_bound", case, {"orphan-advice-column"}
+
+
 VARIANTS = (v_dropped_selector, v_widened_rotation, v_removed_copy_constraint,
-            v_degree_overflow, v_orphan_advice_column, v_free_output_cell)
+            v_degree_overflow, v_orphan_advice_column, v_free_output_cell,
+            v_filter_unchecked_predicate, v_aggregate_forged_total,
+            v_min_missing_bound)
 
 
 def seeded_variants(db=None) -> list:
@@ -127,7 +180,10 @@ def honest_bases(db=None) -> list:
     control group."""
     db = default_db() if db is None else db
     return [_expand_case(db, "honest_expand"),
-            _orderby_case(db, "honest_orderby")]
+            _orderby_case(db, "honest_orderby"),
+            _filter_case(db, "honest_filter"),
+            _aggregate_case(db, "honest_agg_sum"),
+            _aggregate_case(db, "honest_agg_min", agg="min")]
 
 
 def run_selftest(seed: int = 0, db=None, verbose: bool = True) -> bool:

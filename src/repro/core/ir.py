@@ -186,6 +186,28 @@ class NameFilter:
 
 
 @dataclass(frozen=True)
+class Filter:
+    """Order-predicate filter over a chained (id, value) pair table: keep
+    rows whose value compares against the public ``threshold`` under ``cmp``
+    (one of ``ge``/``gt``/``le``/``lt``/``eq``/``ne``).
+
+    Outputs: ``src`` (the passing ids), ``dst`` (their values)."""
+    table: TableRef
+    cmp: str
+    threshold: Binding
+
+
+@dataclass(frozen=True)
+class Aggregate:
+    """Scalar aggregation over a chained single-column value table:
+    ``agg`` is ``count`` (of nonzero entries), ``sum`` (mod P), or ``min``.
+
+    Outputs: ``value`` (the aggregate, a public scalar)."""
+    table: TableRef
+    agg: str
+
+
+@dataclass(frozen=True)
 class Plan:
     name: str
     nodes: Tuple
@@ -329,13 +351,40 @@ PLAN_BUILDERS = {
     "IC2": plan_ic2, "IC8": plan_ic8, "IC9": plan_ic9, "IC13": plan_ic13,
 }
 
+#: pluggable plan resolvers, tried (in registration order) when a query name
+#: is not a registered builder.  A resolver maps ``qname -> Plan`` or returns
+#: None when the name is not its to handle; it must raise KeyError (never a
+#: domain exception) for names it claims but cannot compile, so the verifier
+#: keeps failing closed on malformed bundle query fields.
+_PLAN_RESOLVERS: list = []
+_RESOLVER_BOOTSTRAPPED = [False]
+
+
+def register_plan_resolver(fn):
+    _PLAN_RESOLVERS.append(fn)
+    return fn
+
 
 def build_plan(qname: str) -> Plan:
-    try:
-        return PLAN_BUILDERS[qname]()
-    except KeyError:
-        raise KeyError(f"unknown query {qname!r}; known: {sorted(PLAN_BUILDERS)}") \
-            from None
+    builder = PLAN_BUILDERS.get(qname)
+    if builder is not None:
+        return builder()
+    for resolve_fn in list(_PLAN_RESOLVERS):
+        plan = resolve_fn(qname)
+        if plan is not None:
+            return plan
+    if not _RESOLVER_BOOTSTRAPPED[0]:
+        # the textual query front door (repro.query) registers its resolver
+        # on import; load it lazily so core stays importable on its own
+        _RESOLVER_BOOTSTRAPPED[0] = True
+        import importlib
+        importlib.import_module("repro.query")
+        for resolve_fn in list(_PLAN_RESOLVERS):
+            plan = resolve_fn(qname)
+            if plan is not None:
+                return plan
+    raise KeyError(f"unknown query {qname!r}; known: {sorted(PLAN_BUILDERS)}"
+                   f" (or a parseable repro.query text)")
 
 
 # ---------------------------------------------------------------------------

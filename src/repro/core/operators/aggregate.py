@@ -1,0 +1,110 @@
+"""Scalar aggregation (count / sum / min) over a chained value column.
+
+``count`` and ``sum`` thread a running accumulator through the input region
+(the order-by running-count pattern): R[0] = 0, R[i+1] = R[i] + term[i], and
+a logUp bus binds the public ``agg_out`` cell at row 0 to the accumulator at
+the boundary row just past the region.  ``count`` counts *nonzero* entries
+(ids are >= 1; the chained-table padding row is 0), with the per-row term
+evidenced by the inverse-trick zero flag so the value column is constrained,
+not merely present.  ``sum`` is mod-P by construction (documented limit).
+
+``min`` avoids the accumulator entirely: a range check forces
+``V - agg_out ∈ [0, 2^28)`` on every input row (agg_out is a lower bound)
+and an explicit-multiplicity bus forces ``agg_out`` to originate from an
+``is_min``-marked input row, so the lower bound is attained.  The bus
+multiplicity is the marker column itself — an auto-multiplicity column here
+would leave the marker free.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .. import field as F
+from ..plonkish import Circuit, Const
+from .common import Operator, eq_flag_gadget, fill_eq_flag, pad_col, region_selector
+from .set_expansion import _fill_named_range
+
+VAL_BITS = 28
+AGGS = ("count", "sum", "min")
+
+
+def build(n_rows: int, m_in: int, agg: str) -> Operator:
+    assert agg in AGGS, f"unknown aggregation {agg!r}"
+    assert 1 <= m_in < n_rows, "need the boundary row just after the region"
+    c = Circuit(n_rows, name=f"agg_{agg}")
+    V = c.add_data("V")
+    sel_in = region_selector(c, "sel_in", m_in)
+    row0 = np.zeros(n_rows, np.uint32)
+    row0[0] = 1
+    onehot0 = c.add_fixed("onehot0", row0)
+    agg_out = c.add_instance("agg_out")
+    handles = dict(V=V, sel_in=sel_in, onehot0=onehot0, agg_out=agg_out,
+                   m_in=m_in, agg=agg)
+    if agg in ("count", "sum"):
+        boundary = np.zeros(n_rows, np.uint32)
+        boundary[m_in] = 1
+        b_end = c.add_fixed("b_end", boundary)
+        R = c.add_advice("acc")
+        if agg == "count":
+            fe, inv = eq_flag_gadget(c, "zero", V, Const(0), sel_in)
+            cnt = c.add_advice("cnt")
+            c.add_gate("cnt_def", cnt - sel_in * (Const(1) - fe))
+            term = cnt
+            handles.update(fe=fe, inv=inv, cnt=cnt)
+        else:
+            term = V
+        c.add_gate("acc0", onehot0 * R)
+        c.add_gate("acc_step", sel_in * (R.rotate(1) - R - term))
+        # bind the public output (read at row 0) to the final accumulator
+        c.add_bus("agg_bind", [agg_out], [R], m_f=onehot0, t_sel=b_end)
+        handles.update(R=R, b_end=b_end)
+    else:
+        is_min = c.add_advice("is_min")
+        c.add_gate("ismin_bool", is_min * (Const(1) - is_min))
+        c.add_gate("ismin_region", (Const(1) - sel_in) * is_min)
+        c.add_bus("min_origin", [agg_out], [V], m_f=onehot0, m_t=is_min)
+        c.add_range_check("min_le", V - agg_out, VAL_BITS, sel=sel_in)
+        handles.update(is_min=is_min)
+    op = Operator(c.name, c)
+    op.handles = handles
+    return op
+
+
+def witness(op: Operator, vals):
+    h = op.handles
+    c = op.circuit
+    n = c.n_rows
+    m = h["m_in"]
+    agg = h["agg"]
+    vals = np.asarray(vals, np.int64)
+    assert len(vals) == m
+    data = op.new_data()
+    advice = op.new_advice()
+    inst = op.new_instance()
+    data[h["V"].index] = pad_col(vals, n)
+    v = np.zeros(n, np.int64)
+    v[:m] = vals
+    sel = np.zeros(n, np.int64)
+    sel[:m] = 1
+    if agg == "count":
+        fill_eq_flag(advice, h["fe"], h["inv"], v, np.zeros(n), sel)
+        cnt = sel * (1 - advice[h["fe"].index].astype(np.int64))
+        advice[h["cnt"].index] = cnt
+        term = cnt
+        result = int(cnt.sum())
+    elif agg == "sum":
+        term = v % F.P
+        result = int(v.sum() % F.P)
+    else:
+        assert vals.min() >= 0 and vals.max() < (1 << VAL_BITS), \
+            "min aggregation values exceed VAL_BITS bound"
+        result = int(vals.min())
+        is_min = np.zeros(n, np.int64)
+        is_min[int(np.argmin(vals))] = 1
+        advice[h["is_min"].index] = is_min
+        _fill_named_range(c, advice, "min_le", np.where(sel, v - result, 0))
+    if agg in ("count", "sum"):
+        advice[h["R"].index] = (np.concatenate([[0], np.cumsum(term)[:-1]])
+                                % F.P)
+    inst[h["agg_out"].index] = result % F.P
+    return advice, inst, data

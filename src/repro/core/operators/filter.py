@@ -1,0 +1,122 @@
+"""Order-predicate filter over a chained (id, value) pair table.
+
+Each input row carries an id and a value; a public threshold and a fixed
+comparison pick the passing rows.  The pass flag is boolean, region-gated,
+and *evidenced*: for the order comparisons both the marked and the unmarked
+side must exhibit a range-checked witness (pass: ``V - thr ∈ [0, 2^28)``
+etc.), so a prover can neither hide a passing row nor smuggle a failing one.
+Equality comparisons reuse the inverse-trick flag gadget.  One multiset
+argument binds the public output table to the flagged rows.
+
+Values and thresholds must fit ``VAL_BITS`` (the same 2^28 bound the
+order-by pivot checks use); the planner rejects out-of-range literals.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .. import field as F
+from ..plonkish import Circuit, Const
+from .common import Operator, eq_flag_gadget, fill_eq_flag, pad_col, region_selector
+from .set_expansion import _fill_named_range
+
+VAL_BITS = 28
+CMPS = ("ge", "gt", "le", "lt", "eq", "ne")
+
+
+def build(n_rows: int, m_in: int, cmp: str) -> Operator:
+    assert cmp in CMPS, f"unknown comparison {cmp!r}"
+    assert 1 <= m_in <= n_rows
+    c = Circuit(n_rows, name=f"filter_{cmp}")
+    Id = c.add_data("Id")
+    V = c.add_data("V")
+    sel_in = region_selector(c, "sel_in", m_in)
+    thr = c.add_instance("thr")
+    out_sel = c.add_instance("out_sel")
+    C_s = c.add_instance("C_s")
+    C_t = c.add_instance("C_t")
+    handles = dict(Id=Id, V=V, sel_in=sel_in, thr=thr, out_sel=out_sel,
+                   C_s=C_s, C_t=C_t, m_in=m_in, cmp=cmp)
+    if cmp in ("ge", "gt", "le", "lt"):
+        fl = c.add_advice("pass")
+        nk = c.add_advice("fail")
+        c.add_gate("pass_bool", fl * (Const(1) - fl))
+        c.add_gate("pass_region", (Const(1) - sel_in) * fl)
+        c.add_gate("fail_def", nk - sel_in * (Const(1) - fl))
+        pass_expr, fail_expr = {
+            "ge": (V - thr, thr - Const(1) - V),
+            "gt": (V - thr - Const(1), thr - V),
+            "le": (thr - V, V - thr - Const(1)),
+            "lt": (thr - Const(1) - V, V - thr),
+        }[cmp]
+        c.add_range_check("cmp_pass", pass_expr, VAL_BITS, sel=fl)
+        c.add_range_check("cmp_fail", fail_expr, VAL_BITS, sel=nk)
+        handles.update(fl=fl, nk=nk)
+    else:
+        fe, inv = eq_flag_gadget(c, "eq", V, thr, sel_in)
+        c.add_gate("eq_region", (Const(1) - sel_in) * fe)
+        if cmp == "eq":
+            fl = fe
+        else:
+            fl = c.add_advice("pass")
+            c.add_gate("pass_def", fl - sel_in * (Const(1) - fe))
+        handles.update(fe=fe, inv=inv, fl=fl)
+    c.add_multiset_equal("out_perm", [C_s, C_t], out_sel, [Id, V], fl)
+    op = Operator(c.name, c)
+    op.handles = handles
+    return op
+
+
+def _pass_mask(vals: np.ndarray, thr: int, cmp: str) -> np.ndarray:
+    return {"ge": vals >= thr, "gt": vals > thr, "le": vals <= thr,
+            "lt": vals < thr, "eq": vals == thr, "ne": vals != thr}[cmp]
+
+
+def witness(op: Operator, ids, vals, thr: int):
+    h = op.handles
+    c = op.circuit
+    n = c.n_rows
+    m = h["m_in"]
+    cmp = h["cmp"]
+    ids = np.asarray(ids, np.int64)
+    vals = np.asarray(vals, np.int64)
+    assert len(ids) == m and len(vals) == m
+    thr = int(thr)
+    if cmp not in ("eq", "ne"):
+        assert 0 <= thr < (1 << VAL_BITS), "threshold exceeds VAL_BITS bound"
+        assert vals.min() >= 0 and vals.max() < (1 << VAL_BITS), \
+            "filter values exceed VAL_BITS bound"
+    data = op.new_data()
+    advice = op.new_advice()
+    inst = op.new_instance()
+    data[h["Id"].index] = pad_col(ids, n)
+    data[h["V"].index] = pad_col(vals, n)
+    inst[h["thr"].index] = thr % F.P
+    sel = np.zeros(n, np.int64)
+    sel[:m] = 1
+    v = np.zeros(n, np.int64)
+    v[:m] = vals
+    mask = np.zeros(n, bool)
+    mask[:m] = _pass_mask(vals, thr, cmp)
+    if cmp in ("ge", "gt", "le", "lt"):
+        advice[h["fl"].index] = mask.astype(np.int64)
+        advice[h["nk"].index] = sel * (1 - mask)
+        pass_diff, fail_diff = {
+            "ge": (v - thr, thr - 1 - v),
+            "gt": (v - thr - 1, thr - v),
+            "le": (thr - v, v - thr - 1),
+            "lt": (thr - 1 - v, v - thr),
+        }[cmp]
+        _fill_named_range(c, advice, "cmp_pass", np.where(mask, pass_diff, 0))
+        _fill_named_range(c, advice, "cmp_fail",
+                          np.where(sel * (1 - mask), fail_diff, 0))
+    else:
+        fill_eq_flag(advice, h["fe"], h["inv"], v, np.full(n, thr), sel)
+        if cmp == "ne":
+            advice[h["fl"].index] = sel * (1 - advice[h["fe"].index])
+    flv = advice[h["fl"].index].astype(bool)
+    k = int(flv.sum())
+    inst[h["out_sel"].index, :k] = 1
+    inst[h["C_s"].index, :k] = data[h["Id"].index][flv]
+    inst[h["C_t"].index, :k] = data[h["V"].index][flv]
+    return advice, inst, data

@@ -25,7 +25,8 @@ from ...graphdb import engine, ldbc, tables
 from ...graphdb.storage import pad_pow2
 from .. import field as F
 from .. import ir
-from . import expansion, orderby, set_expansion, sssp
+from . import aggregate, expansion, orderby, set_expansion, sssp
+from . import filter as filtering
 from .common import Operator
 
 _BY_KIND: dict = {}    # node type -> adapter instance
@@ -373,6 +374,95 @@ class OrderByAdapter(Adapter):
 
 
 # ---------------------------------------------------------------------------
+# Filter (order-predicate filter over a chained (id, value) table)
+# ---------------------------------------------------------------------------
+class FilterAdapter(Adapter):
+    kind = ir.Filter
+    name = "filter"
+    shape_schema = dict(n_rows=int, m_in=int, cmp=str)
+
+    def manifest_pins(self, node, env: ir.Env, manifest, geo) -> dict:
+        return dict(n_rows=pad_pow2(geo.n_table_rows), m_in=geo.n_table_rows)
+
+    def shape_flags(self, node) -> dict:
+        return dict(cmp=str(node.cmp))
+
+    def shape(self, db, node, env: ir.Env) -> dict:
+        cols = _table_cols(db, node.table, env)
+        m_in = int(cols.shape[1])
+        return dict(n_rows=pad_pow2(max(m_in, 2)), m_in=m_in,
+                    **self.shape_flags(node))
+
+    def build(self, shape: dict) -> Operator:
+        return filtering.build(**shape)
+
+    def witness(self, db, op: Operator, node, env: ir.Env):
+        cols = _table_cols(db, node.table, env)
+        return filtering.witness(op, cols[0], cols[1],
+                                 int(ir.resolve(node.threshold, env)))
+
+    def extract_outputs(self, op: Operator, instance) -> dict:
+        return dict(src=_selected(op, instance, "C_s"),
+                    dst=_selected(op, instance, "C_t"))
+
+    def check_instance(self, op, instance, node, env: ir.Env) -> bool:
+        return _col_equals(op, instance, "thr",
+                           int(ir.resolve(node.threshold, env)))
+
+    def analysis_cases(self, db) -> list:
+        ids = ir.Lit(tuple(range(1, 9)))
+        vals = ir.Lit((5, 30, 17, 30, 2, 99, 42, 8))
+
+        def case(label, cmp, thr):
+            node = ir.Filter(ir.Chained((ids, vals)), cmp, ir.Lit(thr))
+            return (label, ir.Plan(f"analysis/{label}", (node,), {}), {})
+        return [case("ge_30", "ge", 30), case("ne_30", "ne", 30),
+                case("lt_17", "lt", 17)]
+
+
+# ---------------------------------------------------------------------------
+# Aggregate (count / sum / min over a chained value column)
+# ---------------------------------------------------------------------------
+class AggregateAdapter(Adapter):
+    kind = ir.Aggregate
+    name = "aggregate"
+    shape_schema = dict(n_rows=int, m_in=int, agg=str)
+
+    def manifest_pins(self, node, env: ir.Env, manifest, geo) -> dict:
+        return dict(n_rows=pad_pow2(geo.n_table_rows + 1),
+                    m_in=geo.n_table_rows)
+
+    def shape_flags(self, node) -> dict:
+        return dict(agg=str(node.agg))
+
+    def shape(self, db, node, env: ir.Env) -> dict:
+        cols = _table_cols(db, node.table, env)
+        m_in = int(cols.shape[1])
+        # +1: count/sum need the boundary row just after the input region
+        return dict(n_rows=pad_pow2(max(m_in + 1, 2)), m_in=m_in,
+                    **self.shape_flags(node))
+
+    def build(self, shape: dict) -> Operator:
+        return aggregate.build(**shape)
+
+    def witness(self, db, op: Operator, node, env: ir.Env):
+        cols = _table_cols(db, node.table, env)
+        return aggregate.witness(op, cols[0])
+
+    def extract_outputs(self, op: Operator, instance) -> dict:
+        return dict(value=int(instance[op.handles["agg_out"].index][0]))
+
+    def analysis_cases(self, db) -> list:
+        vals = ir.Lit((7, 31, 9, 31, 12, 4))
+
+        def case(label, agg):
+            node = ir.Aggregate(ir.Chained((vals,)), agg)
+            return (label, ir.Plan(f"analysis/{label}", (node,), {}), {})
+        return [case("count", "count"), case("sum", "sum"),
+                case("min", "min")]
+
+
+# ---------------------------------------------------------------------------
 # SSSP (§IV-C, integrated BiRC)
 # ---------------------------------------------------------------------------
 class SSSPAdapter(Adapter):
@@ -442,3 +532,5 @@ register(NameFilterAdapter())
 register(SetExpandAdapter())
 register(OrderByAdapter())
 register(SSSPAdapter())
+register(FilterAdapter())
+register(AggregateAdapter())

@@ -328,13 +328,30 @@ class ZKGraphSession:
 
     def run_query(self, qname: str, params: dict) -> ir.QueryRun:
         """Execute a query plan (engine + witnesses), no proving."""
+        return self.run_plan(ir.build_plan(qname), params)
+
+    def run_plan(self, plan: ir.Plan, params: dict) -> ir.QueryRun:
+        """Execute an explicit :class:`~repro.core.ir.Plan` object."""
         assert self.db is not None, "query execution requires the database"
-        return ir.execute(self.db, ir.build_plan(qname), params)
+        return ir.execute(self.db, plan, params)
 
     def prove(self, qname: str, params: dict) -> ProofBundle:
-        run = self.run_query(qname, params)
+        return self.prove_plan(ir.build_plan(qname), params, name=qname)
+
+    def prove_plan(self, plan: ir.Plan, params: dict,
+                   name: str = None) -> ProofBundle:
+        """Prove an explicit plan object (e.g. a compiled query).
+
+        The bundle's ``query`` field is ``name`` (default ``plan.name``);
+        the verifier re-resolves that name through
+        :func:`~repro.core.ir.build_plan` — which consults registered plan
+        resolvers, so a bundle may be named by a registered query or by a
+        parseable query text — and checks the proof against *its own*
+        resolution, never the prover's plan object."""
+        run = self.run_plan(plan, params)
         steps = [self.prove_step(st) for st in run.steps]
-        return ProofBundle(qname, dict(params), steps, run.result, self.cfg,
+        return ProofBundle(name if name is not None else plan.name,
+                           dict(params), steps, run.result, self.cfg,
                            self.commitments.digest())
 
     # -- step-level prove entry points (the batcher's call surface) ----------

@@ -1,0 +1,48 @@
+"""The parsed query front door: GQL/Cypher subset -> plan IR.
+
+Public surface::
+
+    from repro.query import compile_query, parse, pretty_print
+
+    plan = compile_query("MATCH (m:Message {id: $message})"
+                         "-[:HAS_CREATOR]->(c:Person) RETURN c.id AS creator")
+    bundle = session.prove_plan(plan, dict(message=mid))
+
+Importing this package also registers a plan resolver with
+:func:`repro.core.ir.build_plan`, so a proof bundle whose ``query`` field is
+a parseable query text verifies end-to-end: the verifier re-compiles the
+text itself and checks the proof against its *own* plan — exactly as it
+re-resolves a registered query name.  Texts that fail to parse or compile
+surface as ``KeyError`` (an unknown query), keeping ``verify`` failing
+closed on malformed bundles.
+"""
+from __future__ import annotations
+
+from ..core import ir
+from .ast import (AggCall, EdgePat, IntLit, LengthCall, NodePat, OrderItem,
+                  ParamRef, PathPat, Predicate, PropRef, Query, QueryError,
+                  QueryCompileError, QuerySyntaxError, ReturnItem,
+                  pretty_print)
+from .golden import render_plan
+from .ldbc_texts import QUERY_TEXTS
+from .parser import parse
+from .planner import compile_ast, compile_query
+
+__all__ = [
+    "AggCall", "EdgePat", "IntLit", "LengthCall", "NodePat", "OrderItem",
+    "ParamRef", "PathPat", "Predicate", "PropRef", "QUERY_TEXTS", "Query",
+    "QueryError", "QueryCompileError", "QuerySyntaxError", "ReturnItem",
+    "compile_ast", "compile_query", "parse", "pretty_print", "render_plan",
+]
+
+
+@ir.register_plan_resolver
+def _resolve_query_text(qname: str):
+    """Treat a bundle query field that looks like query text as one."""
+    if not isinstance(qname, str) or not qname.lstrip()[:6].upper() \
+            .startswith("MATCH"):
+        return None
+    try:
+        return compile_query(qname, name=qname)
+    except QueryError as exc:
+        raise KeyError(f"unparseable query text: {exc}") from exc

@@ -1,0 +1,230 @@
+"""Typed AST for the GQL/Cypher query subset (grammar: docs/query_language.md).
+
+Every node is a frozen dataclass so ASTs are hashable and comparable — the
+parser round-trip property (``parse(pretty_print(ast)) == ast``) is plain
+equality.  :func:`pretty_print` emits the *canonical* text form: uppercase
+keywords, explicit ``ASC``/``DESC``, single spaces.
+
+Error taxonomy (all subclass :class:`QueryError`):
+
+* :class:`QuerySyntaxError` — lexing/parsing failure, always positioned
+  (1-based ``line``/``col``); hostile input fails closed here.
+* :class:`QueryCompileError` — well-formed text outside the supported
+  subset (unknown label/edge/property, unanchored pattern, …).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+__all__ = [
+    "AggCall", "EdgePat", "IntLit", "LengthCall", "NodePat", "OrderItem",
+    "ParamRef", "PathPat", "Predicate", "PropRef", "Query", "QueryError",
+    "QueryCompileError", "QuerySyntaxError", "ReturnItem", "pretty_print",
+]
+
+AGG_FNS = ("count", "sum", "min")
+CMP_TOKENS = ("=", "<>", ">=", ">", "<=", "<")
+
+
+class QueryError(Exception):
+    """Base class for every query front-door failure."""
+
+
+class QuerySyntaxError(QueryError):
+    """Lex/parse failure with a 1-based source position."""
+
+    def __init__(self, msg: str, line: int, col: int):
+        super().__init__(f"line {line}, col {col}: {msg}")
+        self.msg = msg
+        self.line = line
+        self.col = col
+
+
+class QueryCompileError(QueryError):
+    """Well-formed query outside the supported subset / schema."""
+
+
+# ---------------------------------------------------------------------------
+# value terms
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ParamRef:
+    """``$name`` — a query parameter reference."""
+    name: str
+
+
+@dataclass(frozen=True)
+class IntLit:
+    """A non-negative integer literal (the datasets are integer-coded)."""
+    value: int
+
+
+Value = "ParamRef | IntLit"
+
+
+# ---------------------------------------------------------------------------
+# patterns
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class NodePat:
+    """``(var:Label {prop_key: prop_value})`` — every part optional."""
+    var: Optional[str] = None
+    label: Optional[str] = None
+    prop_key: Optional[str] = None
+    prop_value: Optional[object] = None     # ParamRef | IntLit
+
+
+@dataclass(frozen=True)
+class EdgePat:
+    """``-[var:TYPE*m..n]->`` / ``<-[...]-`` / ``-[...]-``.
+
+    ``direction`` is ``out``/``in``/``any`` (left-to-right reading);
+    ``min_hops``/``max_hops`` are both None for a single hop, ``(1, None)``
+    for an unbounded ``*``, else the explicit ``*m..n`` bounds."""
+    var: Optional[str] = None
+    etype: Optional[str] = None
+    direction: str = "any"
+    min_hops: Optional[int] = None
+    max_hops: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class PathPat:
+    """One linear path: n nodes joined by n-1 edges, optionally named and
+    wrapped in ``shortestPath(...)``."""
+    nodes: Tuple[NodePat, ...]
+    edges: Tuple[EdgePat, ...] = ()
+    path_var: Optional[str] = None
+    shortest: bool = False
+
+
+# ---------------------------------------------------------------------------
+# expressions / clauses
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PropRef:
+    """``var.key``."""
+    var: str
+    key: str
+
+
+@dataclass(frozen=True)
+class Predicate:
+    """``var.key <cmp> value`` with cmp one of ``=``/``<>``/``>=``/``>``/
+    ``<=``/``<``."""
+    lhs: PropRef
+    cmp: str
+    rhs: object                             # ParamRef | IntLit
+
+
+@dataclass(frozen=True)
+class AggCall:
+    """``count(var)`` or ``sum(var.key)`` / ``min(var.key)``."""
+    fn: str                                 # count | sum | min
+    arg: object                             # str (a var) for count, PropRef
+
+
+@dataclass(frozen=True)
+class LengthCall:
+    """``length(path_var)``."""
+    path_var: str
+
+
+@dataclass(frozen=True)
+class ReturnItem:
+    """``expr AS alias`` — the alias names the query-result key."""
+    expr: object                            # PropRef | AggCall | LengthCall
+    alias: str
+
+
+@dataclass(frozen=True)
+class OrderItem:
+    expr: PropRef
+    descending: bool = True
+
+
+@dataclass(frozen=True)
+class Query:
+    patterns: Tuple[PathPat, ...]
+    where: Tuple[Predicate, ...]
+    returns: Tuple[ReturnItem, ...]
+    order: Tuple[OrderItem, ...] = ()
+    limit: Optional[object] = None          # ParamRef | IntLit
+
+
+# ---------------------------------------------------------------------------
+# canonical pretty printer
+# ---------------------------------------------------------------------------
+def _value(v) -> str:
+    if isinstance(v, ParamRef):
+        return f"${v.name}"
+    if isinstance(v, IntLit):
+        return str(v.value)
+    raise TypeError(f"not a value term: {v!r}")
+
+
+def _node(n: NodePat) -> str:
+    s = n.var or ""
+    if n.label is not None:
+        s += f":{n.label}"
+    if n.prop_key is not None:
+        prop = f"{{{n.prop_key}: {_value(n.prop_value)}}}"
+        s = f"{s} {prop}" if s else prop
+    return f"({s})"
+
+
+def _edge(e: EdgePat) -> str:
+    inner = e.var or ""
+    if e.etype is not None:
+        inner += f":{e.etype}"
+    if e.min_hops is not None:
+        if e.max_hops is None:
+            inner += "*"
+        else:
+            inner += f"*{e.min_hops}..{e.max_hops}"
+    body = f"[{inner}]" if inner else "[]"
+    if e.direction == "out":
+        return f"-{body}->"
+    if e.direction == "in":
+        return f"<-{body}-"
+    return f"-{body}-"
+
+
+def _path(p: PathPat) -> str:
+    body = _node(p.nodes[0])
+    for e, n in zip(p.edges, p.nodes[1:]):
+        body += _edge(e) + _node(n)
+    if p.shortest:
+        body = f"shortestPath({body})"
+    if p.path_var is not None:
+        body = f"{p.path_var} = {body}"
+    return body
+
+
+def _expr(x) -> str:
+    if isinstance(x, PropRef):
+        return f"{x.var}.{x.key}"
+    if isinstance(x, AggCall):
+        arg = x.arg if isinstance(x.arg, str) else _expr(x.arg)
+        return f"{x.fn}({arg})"
+    if isinstance(x, LengthCall):
+        return f"length({x.path_var})"
+    raise TypeError(f"not an expression: {x!r}")
+
+
+def pretty_print(q: Query) -> str:
+    """Canonical single-line text for ``q`` (parses back to an equal AST)."""
+    parts = ["MATCH " + ", ".join(_path(p) for p in q.patterns)]
+    if q.where:
+        parts.append("WHERE " + " AND ".join(
+            f"{_expr(p.lhs)} {p.cmp} {_value(p.rhs)}" for p in q.where))
+    parts.append("RETURN " + ", ".join(
+        f"{_expr(it.expr)} AS {it.alias}" for it in q.returns))
+    if q.order:
+        parts.append("ORDER BY " + ", ".join(
+            f"{_expr(o.expr)} {'DESC' if o.descending else 'ASC'}"
+            for o in q.order))
+    if q.limit is not None:
+        parts.append("LIMIT " + _value(q.limit))
+    return " ".join(parts)

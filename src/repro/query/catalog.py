@@ -1,0 +1,96 @@
+"""Schema catalog: how query-surface labels / edge types / properties map
+onto the owner's published GraphDB tables (:mod:`repro.graphdb.tables`).
+
+The planner consults only this module for name resolution, so growing the
+query surface to a new dataset is a catalog edit, not a planner edit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dc_field
+from typing import Optional, Tuple
+
+from .ast import QueryCompileError
+
+__all__ = ["EDGES", "LABELS", "PROP_TABLES", "EdgeInfo", "PropTable",
+           "edge_info", "prop_table_for"]
+
+LABELS = frozenset({"Person", "Message", "Comment"})
+
+
+@dataclass(frozen=True)
+class EdgeInfo:
+    """One edge type: its committed tables and endpoint label sets."""
+    table: str                              # forward (src -> dst) table
+    rev_table: Optional[str] = None         # reversed table, if published
+    undirected: bool = False
+    # edge property -> the with-prop edge table carrying it
+    prop_tables: dict = dc_field(default_factory=dict)
+    # node-set table for shortest-path verification over this edge type
+    sssp_nodes: Optional[str] = None
+    src_labels: frozenset = frozenset()
+    dst_labels: frozenset = frozenset()
+
+
+EDGES = {
+    "KNOWS": EdgeInfo(
+        table="knows", undirected=True,
+        prop_tables={"creationDate": "knows_date"},
+        sssp_nodes="knows_nodes",
+        src_labels=frozenset({"Person"}), dst_labels=frozenset({"Person"})),
+    "HAS_CREATOR": EdgeInfo(
+        table="hasCreator", rev_table="hasCreator_rev",
+        src_labels=frozenset({"Message", "Comment"}),
+        dst_labels=frozenset({"Person"})),
+    "REPLY_OF": EdgeInfo(
+        table="replyOf", rev_table="replyOf_rev",
+        src_labels=frozenset({"Comment", "Message"}),
+        dst_labels=frozenset({"Message", "Comment"})),
+}
+
+
+@dataclass(frozen=True)
+class PropTable:
+    """A published node-property lookup table: node id -> property value(s).
+
+    ``props`` is ordered: for a 1-prop table the value rides the expansion's
+    ``dst`` output; for a 2-prop table ``props[0]`` rides ``dst`` and
+    ``props[1]`` rides ``prop`` (the with-prop expansion layout)."""
+    table: str
+    labels: frozenset
+    props: Tuple[str, ...]
+
+
+PROP_TABLES = (
+    PropTable("person_firstName", frozenset({"Person"}), ("firstName",)),
+    PropTable("comment_date", frozenset({"Message", "Comment"}),
+              ("creationDate",)),
+    PropTable("comment_content_date", frozenset({"Message", "Comment"}),
+              ("content", "creationDate")),
+)
+
+
+def edge_info(etype: Optional[str]) -> EdgeInfo:
+    if etype is None:
+        raise QueryCompileError(
+            "edge patterns must name an edge type (e.g. [:KNOWS])")
+    info = EDGES.get(etype)
+    if info is None:
+        raise QueryCompileError(
+            f"unknown edge type {etype!r}; known: {sorted(EDGES)}")
+    return info
+
+
+def prop_table_for(label: str, props: Tuple[str, ...]) -> PropTable:
+    """The smallest published lookup table for ``label`` covering ``props``."""
+    if label not in LABELS:
+        raise QueryCompileError(
+            f"unknown label {label!r}; known: {sorted(LABELS)}")
+    best = None
+    for pt in PROP_TABLES:
+        if label in pt.labels and set(props) <= set(pt.props):
+            if best is None or len(pt.props) < len(best.props):
+                best = pt
+    if best is None:
+        raise QueryCompileError(
+            f"no published property table for {label}.{{{', '.join(props)}}}")
+    return best

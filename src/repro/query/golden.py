@@ -1,0 +1,57 @@
+"""Deterministic textual rendering of plan IR — the golden-vector format.
+
+``render_plan`` is pure and stable: bindings render recursively (``App``
+glue by function name), nodes as dataclass field lists, results sorted by
+key.  Committed vectors under ``tests/vectors/plan_*.txt`` make any planner
+drift a visible diff (see ``tests/test_query_vectors.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import fields, is_dataclass
+
+from ..core import ir
+
+__all__ = ["render_plan", "render_binding"]
+
+
+def render_binding(b) -> str:
+    if isinstance(b, ir.Param):
+        if b.default is not ir._NO_DEFAULT:
+            return f"Param({b.name!r}, default={b.default!r})"
+        return f"Param({b.name!r})"
+    if isinstance(b, ir.Lit):
+        return f"Lit({b.value!r})"
+    if isinstance(b, ir.Out):
+        return f"Out({b.step}, {b.key!r})"
+    if isinstance(b, ir.App):
+        args = ", ".join(render_binding(a) for a in b.args)
+        return f"App({getattr(b.fn, '__name__', str(b.fn))}, [{args}])"
+    if isinstance(b, ir.BaseTable):
+        return f"BaseTable({b.desc!r})"
+    if isinstance(b, ir.Chained):
+        cols = ", ".join(render_binding(c) for c in b.cols)
+        return f"Chained([{cols}])"
+    return repr(b)
+
+
+def _render_node(node) -> str:
+    assert is_dataclass(node)
+    parts = []
+    for f in fields(node):
+        v = getattr(node, f.name)
+        if is_dataclass(v) or isinstance(v, (ir.Param, ir.Lit, ir.Out,
+                                             ir.App)):
+            parts.append(f"{f.name}={render_binding(v)}")
+        else:
+            parts.append(f"{f.name}={v!r}")
+    return f"{type(node).__name__}({', '.join(parts)})"
+
+
+def render_plan(plan: ir.Plan) -> str:
+    lines = [f"plan {plan.name}"]
+    for i, node in enumerate(plan.nodes):
+        lines.append(f"  {i}: {_render_node(node)}")
+    lines.append("result")
+    for key in sorted(plan.result):
+        lines.append(f"  {key}: {render_binding(plan.result[key])}")
+    return "\n".join(lines) + "\n"

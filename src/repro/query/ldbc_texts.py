@@ -1,0 +1,56 @@
+"""Textual sources for the 8 LDBC SNB interactive queries.
+
+Each text compiles (``repro.query.compile_query``) to a plan that proves to
+the SAME wire bytes as the hand-written plan function in
+:mod:`repro.core.ir` — asserted by ``tests/test_query_conformance.py``.
+
+The datasets are integer-coded (names, content, and dates are field
+elements), so every literal is an integer or a ``$parameter``.
+"""
+from __future__ import annotations
+
+__all__ = ["QUERY_TEXTS"]
+
+QUERY_TEXTS = {
+    "IS3": (
+        "MATCH (p:Person {id: $person})-[k:KNOWS]-(f:Person) "
+        "RETURN f.id AS friends, k.creationDate AS dates "
+        "ORDER BY k.creationDate DESC"
+    ),
+    "IS4": (
+        "MATCH (m:Message {id: $message}) "
+        "RETURN m.content AS content, m.creationDate AS date"
+    ),
+    "IS5": (
+        "MATCH (m:Message {id: $message})-[:HAS_CREATOR]->(c:Person) "
+        "RETURN c.id AS creator"
+    ),
+    "IC1": (
+        "MATCH (p:Person {id: $person})-[:KNOWS*1..3]-(f:Person) "
+        "WHERE f.firstName = $firstName "
+        "RETURN f.id AS persons ORDER BY f.id DESC LIMIT 20"
+    ),
+    "IC2": (
+        "MATCH (p:Person {id: $person})-[:KNOWS]-(f:Person)"
+        "<-[:HAS_CREATOR]-(m:Message) "
+        "RETURN m.id AS messages, m.creationDate AS dates "
+        "ORDER BY m.creationDate DESC LIMIT $k"
+    ),
+    "IC8": (
+        "MATCH (p:Person {id: $person})<-[:HAS_CREATOR]-(m)"
+        "<-[:REPLY_OF]-(r:Comment) "
+        "RETURN r.id AS replies, r.creationDate AS dates "
+        "ORDER BY r.creationDate DESC LIMIT $k"
+    ),
+    "IC9": (
+        "MATCH (p:Person {id: $person})-[:KNOWS*1..2]-(f:Person)"
+        "<-[:HAS_CREATOR]-(m:Message) "
+        "RETURN m.id AS messages, m.creationDate AS dates "
+        "ORDER BY m.creationDate DESC LIMIT $k"
+    ),
+    "IC13": (
+        "MATCH path = shortestPath((a:Person {id: $person1})"
+        "-[:KNOWS*]-(b:Person {id: $person2})) "
+        "RETURN length(path) AS distance"
+    ),
+}

@@ -1,0 +1,287 @@
+"""Lexer + recursive-descent parser for the GQL subset.
+
+Fails closed: every malformed input raises a positioned
+:class:`~repro.query.ast.QuerySyntaxError` — never a raw exception, never a
+silently wrong AST.  Hard resource caps (text length, pattern/clause/hop
+counts, literal magnitude) turn depth bombs into syntax errors before any
+allocation scales with attacker input.
+
+Keywords (``MATCH``/``WHERE``/…) are case-insensitive; identifiers and the
+builtin function names (``shortestPath``, ``length``, ``count``, ``sum``,
+``min``) are case-sensitive.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .ast import (AGG_FNS, EdgePat, IntLit, LengthCall, NodePat, OrderItem,
+                  ParamRef, PathPat, Predicate, PropRef, Query,
+                  QuerySyntaxError, ReturnItem, AggCall)
+
+__all__ = ["parse", "MAX_TEXT", "MAX_ITEMS", "MAX_HOPS", "MAX_INT"]
+
+MAX_TEXT = 4096         # bytes of query text
+MAX_ITEMS = 8           # patterns / edges-per-path / predicates / items
+MAX_HOPS = 8            # var-length upper bound
+MAX_INT = 1 << 60       # integer literals must stay well under the field
+
+KEYWORDS = ("MATCH", "WHERE", "AND", "RETURN", "ORDER", "BY", "LIMIT",
+            "AS", "ASC", "DESC")
+
+_PUNCT = ("<>", ">=", "<=", "<-", "->", "..", "(", ")", "[", "]", "{", "}",
+          ",", ":", ".", "=", ">", "<", "-", "*", "$")
+
+
+@dataclass(frozen=True)
+class Token:
+    kind: str       # IDENT | INT | KEYWORD | a punct literal | EOF
+    text: str
+    line: int
+    col: int
+
+
+def _lex(src: str) -> list:
+    if not isinstance(src, str):
+        raise QuerySyntaxError("query text must be a string", 1, 1)
+    if len(src) > MAX_TEXT:
+        raise QuerySyntaxError(
+            f"query text exceeds {MAX_TEXT} characters", 1, 1)
+    toks, i, line, col = [], 0, 1, 1
+    n = len(src)
+    while i < n:
+        ch = src[i]
+        if ch == "\n":
+            i, line, col = i + 1, line + 1, 1
+            continue
+        if ch in " \t\r":
+            i, col = i + 1, col + 1
+            continue
+        two = src[i:i + 2]
+        if two in _PUNCT:
+            toks.append(Token(two, two, line, col))
+            i, col = i + 2, col + 2
+            continue
+        if ch in _PUNCT:
+            toks.append(Token(ch, ch, line, col))
+            i, col = i + 1, col + 1
+            continue
+        if ch.isdigit():
+            j = i
+            while j < n and src[j].isdigit():
+                j += 1
+            text = src[i:j]
+            if int(text) >= MAX_INT:
+                raise QuerySyntaxError(
+                    f"integer literal too large: {text}", line, col)
+            toks.append(Token("INT", text, line, col))
+            col += j - i
+            i = j
+            continue
+        if ch.isalpha() or ch == "_":
+            j = i
+            while j < n and (src[j].isalnum() or src[j] == "_"):
+                j += 1
+            text = src[i:j]
+            if text.upper() in KEYWORDS:
+                toks.append(Token("KEYWORD", text.upper(), line, col))
+            else:
+                toks.append(Token("IDENT", text, line, col))
+            col += j - i
+            i = j
+            continue
+        raise QuerySyntaxError(f"unexpected character {ch!r}", line, col)
+    toks.append(Token("EOF", "", line, col))
+    return toks
+
+
+class _Parser:
+    def __init__(self, toks: list):
+        self.toks = toks
+        self.i = 0
+
+    # -- token plumbing ------------------------------------------------------
+    @property
+    def cur(self) -> Token:
+        return self.toks[self.i]
+
+    def _fail(self, msg: str):
+        t = self.cur
+        got = "end of input" if t.kind == "EOF" else repr(t.text)
+        raise QuerySyntaxError(f"{msg} (got {got})", t.line, t.col)
+
+    def at(self, kind: str, text: str = None) -> bool:
+        t = self.cur
+        return t.kind == kind and (text is None or t.text == text)
+
+    def eat(self, kind: str, text: str = None, what: str = None) -> Token:
+        if not self.at(kind, text):
+            self._fail(f"expected {what or text or kind}")
+        t = self.cur
+        self.i += 1
+        return t
+
+    def opt(self, kind: str, text: str = None):
+        if self.at(kind, text):
+            return self.eat(kind, text)
+        return None
+
+    def _list(self, parse_one, what: str) -> tuple:
+        items = [parse_one()]
+        while self.opt(","):
+            if len(items) >= MAX_ITEMS:
+                self._fail(f"too many {what} (max {MAX_ITEMS})")
+            items.append(parse_one())
+        return tuple(items)
+
+    # -- terms ---------------------------------------------------------------
+    def value(self):
+        if self.opt("$"):
+            return ParamRef(self.eat("IDENT", what="parameter name").text)
+        if self.at("INT"):
+            return IntLit(int(self.eat("INT").text))
+        self._fail("expected an integer or $parameter")
+
+    def prop_ref(self) -> PropRef:
+        var = self.eat("IDENT", what="variable").text
+        self.eat(".")
+        return PropRef(var, self.eat("IDENT", what="property name").text)
+
+    # -- patterns ------------------------------------------------------------
+    def node(self) -> NodePat:
+        self.eat("(", what="'('")
+        var = label = prop_key = prop_value = None
+        if self.at("IDENT"):
+            var = self.eat("IDENT").text
+        if self.opt(":"):
+            label = self.eat("IDENT", what="label").text
+        if self.opt("{"):
+            prop_key = self.eat("IDENT", what="property name").text
+            self.eat(":")
+            prop_value = self.value()
+            self.eat("}", what="'}'")
+        self.eat(")", what="')'")
+        return NodePat(var, label, prop_key, prop_value)
+
+    def edge_body(self) -> tuple:
+        """``[var:TYPE*m..n]`` — returns (var, etype, min_hops, max_hops)."""
+        self.eat("[", what="'['")
+        var = etype = min_hops = max_hops = None
+        if self.at("IDENT"):
+            var = self.eat("IDENT").text
+        if self.opt(":"):
+            etype = self.eat("IDENT", what="edge type").text
+        if self.opt("*"):
+            if self.at("INT"):
+                min_hops = int(self.eat("INT").text)
+                self.eat("..", what="'..'")
+                max_hops = int(self.eat("INT").text)
+                if not 1 <= min_hops <= max_hops <= MAX_HOPS:
+                    self._fail(f"hop bounds must satisfy "
+                               f"1 <= m <= n <= {MAX_HOPS}")
+            else:
+                min_hops, max_hops = 1, None
+        self.eat("]", what="']'")
+        return var, etype, min_hops, max_hops
+
+    def edge(self) -> EdgePat:
+        if self.opt("<-"):
+            var, etype, lo, hi = self.edge_body()
+            self.eat("-", what="'-'")
+            return EdgePat(var, etype, "in", lo, hi)
+        self.eat("-", what="'-'")
+        var, etype, lo, hi = self.edge_body()
+        if self.opt("->"):
+            return EdgePat(var, etype, "out", lo, hi)
+        self.eat("-", what="'-' or '->'")
+        return EdgePat(var, etype, "any", lo, hi)
+
+    def path_body(self) -> tuple:
+        nodes = [self.node()]
+        edges = []
+        while self.at("-") or self.at("<-"):
+            if len(edges) >= MAX_ITEMS:
+                self._fail(f"too many edges in one path (max {MAX_ITEMS})")
+            edges.append(self.edge())
+            nodes.append(self.node())
+        return tuple(nodes), tuple(edges)
+
+    def pattern(self) -> PathPat:
+        path_var = None
+        if self.at("IDENT") and self.toks[self.i + 1].kind == "=":
+            path_var = self.eat("IDENT").text
+            self.eat("=")
+        if self.at("IDENT", "shortestPath"):
+            self.eat("IDENT")
+            self.eat("(", what="'('")
+            nodes, edges = self.path_body()
+            self.eat(")", what="')'")
+            return PathPat(nodes, edges, path_var, shortest=True)
+        nodes, edges = self.path_body()
+        return PathPat(nodes, edges, path_var)
+
+    # -- clauses -------------------------------------------------------------
+    def predicate(self) -> Predicate:
+        lhs = self.prop_ref()
+        for cmp in ("<>", ">=", "<=", "=", ">", "<"):
+            if self.opt(cmp):
+                return Predicate(lhs, cmp, self.value())
+        self._fail("expected a comparison operator")
+
+    def return_item(self) -> ReturnItem:
+        if self.at("IDENT", "length") and self.toks[self.i + 1].kind == "(":
+            self.eat("IDENT")
+            self.eat("(")
+            expr = LengthCall(self.eat("IDENT", what="path variable").text)
+            self.eat(")", what="')'")
+        elif self.cur.kind == "IDENT" and self.cur.text in AGG_FNS \
+                and self.toks[self.i + 1].kind == "(":
+            fn = self.eat("IDENT").text
+            self.eat("(")
+            var = self.eat("IDENT", what="variable").text
+            arg = PropRef(var, self.eat("IDENT").text) if self.opt(".") \
+                else var
+            self.eat(")", what="')'")
+            expr = AggCall(fn, arg)
+        else:
+            expr = self.prop_ref()
+        self.eat("KEYWORD", "AS", what="AS")
+        return ReturnItem(expr, self.eat("IDENT", what="alias").text)
+
+    def order_item(self) -> OrderItem:
+        expr = self.prop_ref()
+        if self.opt("KEYWORD", "DESC"):
+            return OrderItem(expr, descending=True)
+        self.eat("KEYWORD", "ASC", what="ASC or DESC")
+        return OrderItem(expr, descending=False)
+
+    # -- entry ---------------------------------------------------------------
+    def query(self) -> Query:
+        self.eat("KEYWORD", "MATCH", what="MATCH")
+        patterns = self._list(self.pattern, "patterns")
+        where = ()
+        if self.opt("KEYWORD", "WHERE"):
+            preds = [self.predicate()]
+            while self.opt("KEYWORD", "AND"):
+                if len(preds) >= MAX_ITEMS:
+                    self._fail(f"too many predicates (max {MAX_ITEMS})")
+                preds.append(self.predicate())
+            where = tuple(preds)
+        self.eat("KEYWORD", "RETURN", what="RETURN")
+        returns = self._list(self.return_item, "return items")
+        order = ()
+        if self.opt("KEYWORD", "ORDER"):
+            self.eat("KEYWORD", "BY", what="BY")
+            order = self._list(self.order_item, "order items")
+        limit = None
+        if self.opt("KEYWORD", "LIMIT"):
+            limit = self.value()
+        self.eat("EOF", what="end of query")
+        return Query(patterns, where, returns, order, limit)
+
+
+def parse(src: str) -> Query:
+    """Parse query text into a :class:`~repro.query.ast.Query` AST.
+
+    Raises :class:`~repro.query.ast.QuerySyntaxError` (positioned) on any
+    malformed input."""
+    return _Parser(_lex(src)).query()

@@ -86,6 +86,43 @@ def test_serving_doc_matches_live_surfaces():
     assert "repro.serve" in arch and "serving.md" in arch
 
 
+def test_query_language_doc_matches_live_surfaces():
+    """docs/query_language.md pins the real grammar surface: every catalog
+    label/edge/property, every comparison and aggregation, and the parser's
+    hard caps must match the live modules."""
+    from repro.query import ast, catalog, parser
+    text = (ROOT / "docs" / "query_language.md").read_text()
+    for label in catalog.LABELS:
+        assert f":{label}" in text, \
+            f"docs/query_language.md is missing label {label}"
+    for etype in catalog.EDGES:
+        assert f":{etype}" in text, \
+            f"docs/query_language.md is missing edge type {etype}"
+    for fn in ast.AGG_FNS:
+        assert f"`{fn}`" in text or f"{fn} \"(\"" in text, \
+            f"docs/query_language.md is missing aggregation {fn}"
+    for cmp in ast.CMP_TOKENS:
+        assert f'"{cmp}"' in text, \
+            f"docs/query_language.md is missing comparison {cmp}"
+    # the documented caps are the enforced caps
+    for name in ("MAX_TEXT", "MAX_ITEMS", "MAX_HOPS"):
+        cap = getattr(parser, name)
+        assert f"`{name}` {cap}" in text, \
+            f"docs/query_language.md pins a stale value for {name}"
+    from repro.core.operators import filter as filter_op
+    assert f"`VAL_BITS` = {filter_op.VAL_BITS}" in text
+    for needle in ("compile_query", "prove_plan", "QuerySyntaxError",
+                   "QueryCompileError", "tests/test_query_conformance.py",
+                   "wire-byte-identical", "tests/test_query_vectors.py",
+                   "shortestPath", "repro.query.ldbc_texts"):
+        assert needle in text, \
+            f"docs/query_language.md no longer mentions {needle}"
+    # architecture.md links the section; README points at the doc
+    arch = (ROOT / "docs" / "architecture.md").read_text()
+    assert "repro.query" in arch and "query_language.md" in arch
+    assert "query_language.md" in (ROOT / "README.md").read_text()
+
+
 def test_analysis_doc_matches_live_catalogue():
     """docs/analysis.md documents every check id the analyzer can emit,
     the adapter vetting contract, and the baseline workflow."""

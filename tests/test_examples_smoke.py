@@ -32,6 +32,11 @@ def test_ldbc_ic1_smoke():
 
 
 @pytest.mark.slow
+def test_query_text_smoke():
+    load_example("query_text").main(n_knows=48, n_persons=16, cfg=TINY)
+
+
+@pytest.mark.slow
 def test_serve_queries_demo(tmp_path):
     """The full multi-process deployment demo: durable log, owner
     SIGKILL + torn-tail recovery, two gossiping verifier processes,

@@ -1,0 +1,232 @@
+"""Parser robustness: the front door fails closed.
+
+Hostile input — truncation, unbalanced patterns, depth bombs, garbage — must
+raise a *positioned* QuerySyntaxError (never a raw exception, never a wrong
+AST), and out-of-schema queries must raise QueryCompileError.  The Hypothesis
+round-trip property (``parse(pretty_print(ast)) == ast``, marked ``fuzz``)
+pins the printer and parser to each other; it skips cleanly where hypothesis
+is not installed (CI installs it).
+"""
+import pytest
+
+from repro.query import (QUERY_TEXTS, QueryCompileError, QueryError,
+                         QuerySyntaxError, compile_query, parse, pretty_print)
+from repro.query import ast as A
+from repro.query.parser import MAX_HOPS, MAX_INT, MAX_ITEMS, MAX_TEXT
+
+VALID = "MATCH (p:Person {id: $person})-[:KNOWS]-(f:Person) RETURN f.id AS x"
+
+
+# ---------------------------------------------------------------------------
+# positioned syntax errors
+# ---------------------------------------------------------------------------
+HOSTILE = [
+    "",                                       # empty
+    "   \n\t ",                               # whitespace only
+    "SELECT * FROM t",                        # wrong language
+    "MATCH",                                  # truncated after keyword
+    "MATCH (",                                # unbalanced node
+    "MATCH (p",                               # unclosed node
+    "MATCH (p:Person {id: $x}",               # unclosed prop map
+    "MATCH (p)-[",                            # unclosed edge
+    "MATCH (p)-[:KNOWS]-",                    # edge without right node
+    "MATCH (p)-[:KNOWS]>(q) RETURN p.id AS x",    # malformed arrow
+    "MATCH (p) RETURN",                       # missing return item
+    "MATCH (p) RETURN p.id",                  # missing AS alias
+    "MATCH (p) RETURN p.id AS",               # missing alias name
+    "MATCH (p) RETURN p.id AS x ORDER",       # ORDER without BY
+    "MATCH (p) RETURN p.id AS x ORDER BY p.id",   # missing ASC/DESC
+    "MATCH (p) RETURN p.id AS x LIMIT",       # missing limit value
+    "MATCH (p) RETURN p.id AS x LIMIT -3",    # negative literal
+    "MATCH (p) WHERE p.a ~ 3 RETURN p.id AS x",   # unknown operator
+    "MATCH (p) WHERE p.a = 'x' RETURN p.id AS x",  # string literal
+    "MATCH (p)-[:KNOWS*0..3]-(f) RETURN f.id AS x",   # hop lower bound 0
+    "MATCH (p)-[:KNOWS*3..2]-(f) RETURN f.id AS x",   # inverted bounds
+    f"MATCH (p)-[:KNOWS*1..{MAX_HOPS + 1}]-(f) RETURN f.id AS x",
+    "MATCH (p) RETURN p.id AS x trailing",    # trailing garbage
+    "MATCH (p) RETURN p.id AS x \0",          # control character
+    f"MATCH (p) WHERE p.a = {MAX_INT} RETURN p.id AS x",  # oversized int
+]
+
+
+@pytest.mark.parametrize("text", HOSTILE, ids=lambda t: repr(t[:28]))
+def test_hostile_inputs_fail_closed_with_position(text):
+    with pytest.raises(QuerySyntaxError) as err:
+        parse(text)
+    assert err.value.line >= 1 and err.value.col >= 1
+    assert f"line {err.value.line}, col {err.value.col}" in str(err.value)
+
+
+def test_depth_bombs_hit_hard_caps():
+    with pytest.raises(QuerySyntaxError):
+        parse("MATCH " + "(a)-[:KNOWS]-" * (MAX_ITEMS + 2)
+              + "(z) RETURN z.id AS x")
+    with pytest.raises(QuerySyntaxError):
+        parse("MATCH " + ", ".join(["(a)"] * (MAX_ITEMS + 2))
+              + " RETURN a.id AS x")
+    with pytest.raises(QuerySyntaxError):
+        parse("MATCH (a) WHERE "
+              + " AND ".join(["a.p = 1"] * (MAX_ITEMS + 2))
+              + " RETURN a.id AS x")
+    with pytest.raises(QuerySyntaxError) as err:
+        parse(VALID + " " * (MAX_TEXT + 1))
+    assert "exceeds" in str(err.value)
+    # non-string input is a syntax error, not an AttributeError
+    with pytest.raises(QuerySyntaxError):
+        parse(None)
+
+
+def test_every_prefix_truncation_fails_closed():
+    """No prefix of a valid query may raise anything but QueryError."""
+    for text in QUERY_TEXTS.values():
+        for i in range(len(text)):
+            try:
+                q = parse(text[:i])
+            except QueryError:
+                continue
+            assert isinstance(q, A.Query)   # a shorter valid query is fine
+
+
+# ---------------------------------------------------------------------------
+# compile errors (well-formed text outside the subset / schema)
+# ---------------------------------------------------------------------------
+BAD_COMPILES = [
+    # unknown names
+    "MATCH (p:Robot {id: $x})-[:KNOWS]-(f) RETURN f.id AS y",
+    "MATCH (p:Person {id: $x})-[:LIKES]->(f) RETURN f.id AS y",
+    "MATCH (p:Person {id: $x})-[:KNOWS]-(f:Person) "
+    "WHERE f.shoeSize = 4 RETURN f.id AS y",
+    # unanchored / misanchored patterns
+    "MATCH (p:Person)-[:KNOWS]-(f) RETURN f.id AS y",
+    "MATCH (p:Person {name: $x})-[:KNOWS]-(f) RETURN f.id AS y",
+    "MATCH (p:Person {id: $x})-[:KNOWS]-(f:Person {id: 3}) "
+    "RETURN f.id AS y",
+    # direction misuse
+    "MATCH (p:Person {id: $x})-[:KNOWS]->(f) RETURN f.id AS y",
+    "MATCH (m:Message {id: $x})-[:HAS_CREATOR]-(c) RETURN c.id AS y",
+    # variable-length misuse
+    "MATCH (p:Person {id: $x})-[:KNOWS*]-(f) RETURN f.id AS y",
+    "MATCH (p:Person {id: $x})<-[:HAS_CREATOR*1..2]-(m) RETURN m.id AS y",
+    "MATCH (p:Person {id: $x})-[:KNOWS*2..3]-(f) RETURN f.id AS y",
+    # clause misuse
+    "MATCH (p:Person {id: $x})-[:KNOWS]-(f) RETURN f.id AS y LIMIT 5",
+    "MATCH (p:Person {id: $x})-[:KNOWS]-(f) "
+    "RETURN count(f) AS n ORDER BY f.id DESC",
+    "MATCH (p:Person {id: $x})-[:KNOWS]-(f) RETURN length(f) AS y",
+    "MATCH (p:Person {id: $x})-[k:KNOWS]-(f) "
+    "WHERE k.creationDate > 3 RETURN f.id AS y",
+    # edge without a type
+    "MATCH (p:Person {id: $x})-[]-(f) RETURN f.id AS y",
+    # duplicate variable
+    "MATCH (f:Person {id: $x})-[f:KNOWS]-(g) RETURN g.id AS y",
+    # multiple patterns
+    "MATCH (p:Person {id: $x}), (q:Person {id: $y}) RETURN p.id AS a",
+]
+
+
+@pytest.mark.parametrize("text", BAD_COMPILES, ids=lambda t: t[:44])
+def test_out_of_subset_queries_raise_compile_errors(text):
+    with pytest.raises(QueryCompileError):
+        compile_query(text)
+
+
+def test_ldbc_texts_parse_and_round_trip():
+    for name, text in QUERY_TEXTS.items():
+        ast = parse(text)
+        assert parse(pretty_print(ast)) == ast, name
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis round trip: parse(pretty_print(ast)) == ast
+# ---------------------------------------------------------------------------
+_RESERVED = {"match", "where", "and", "return", "order", "by", "limit",
+             "as", "asc", "desc", "count", "sum", "min", "length",
+             "shortestpath"}
+
+
+def _strategies():
+    st = pytest.importorskip(
+        "hypothesis.strategies",
+        reason="hypothesis is a CI-only dependency (requirements-ci.txt)")
+
+    ident = st.from_regex(r"[a-z][a-zA-Z0-9_]{0,6}", fullmatch=True) \
+        .filter(lambda s: s.lower() not in _RESERVED)
+    value = st.one_of(
+        st.integers(0, 10**9).map(A.IntLit),
+        ident.map(A.ParamRef))
+    node = st.builds(
+        A.NodePat,
+        var=st.none() | ident,
+        label=st.none() | ident,
+        prop_key=st.none() | ident,
+        prop_value=value,
+    ).map(lambda n: A.NodePat(n.var, n.label, n.prop_key,
+                              n.prop_value if n.prop_key else None))
+    hops = st.one_of(
+        st.just((None, None)), st.just((1, None)),
+        st.tuples(st.integers(1, MAX_HOPS), st.integers(1, MAX_HOPS))
+        .map(lambda t: (min(t), max(t))))
+    edge = st.builds(
+        lambda var, etype, d, h: A.EdgePat(var, etype, d, h[0], h[1]),
+        st.none() | ident, st.none() | ident,
+        st.sampled_from(["out", "in", "any"]), hops)
+    path = st.builds(
+        lambda nodes, edges, pv, sp: A.PathPat(
+            tuple(nodes[:len(edges) + 1]), tuple(edges), pv, sp),
+        st.lists(node, min_size=MAX_ITEMS + 1, max_size=MAX_ITEMS + 1),
+        st.lists(edge, min_size=0, max_size=3),
+        st.none() | ident, st.booleans())
+    prop_ref = st.builds(A.PropRef, ident, ident)
+    expr = st.one_of(
+        prop_ref,
+        st.builds(A.AggCall, st.sampled_from(list(A.AGG_FNS)),
+                  st.one_of(ident, prop_ref)),
+        st.builds(A.LengthCall, ident))
+    query = st.builds(
+        A.Query,
+        patterns=st.lists(path, min_size=1, max_size=2).map(tuple),
+        where=st.lists(
+            st.builds(A.Predicate, prop_ref,
+                      st.sampled_from(list(A.CMP_TOKENS)), value),
+            max_size=2).map(tuple),
+        returns=st.lists(st.builds(A.ReturnItem, expr, ident),
+                         min_size=1, max_size=2).map(tuple),
+        order=st.lists(st.builds(A.OrderItem, prop_ref, st.booleans()),
+                       max_size=2).map(tuple),
+        limit=st.none() | value)
+    return query
+
+
+@pytest.mark.fuzz
+def test_parse_pretty_print_round_trip():
+    hypothesis = pytest.importorskip(
+        "hypothesis",
+        reason="hypothesis is a CI-only dependency (requirements-ci.txt)")
+    query = _strategies()
+
+    @hypothesis.settings(max_examples=300, deadline=None)
+    @hypothesis.given(query)
+    def prop(q):
+        text = pretty_print(q)
+        assert parse(text) == q, text
+
+    prop()
+
+
+@pytest.mark.fuzz
+def test_fuzz_compile_never_raises_raw_exceptions():
+    """Compiling any printable AST either yields a plan or a QueryError."""
+    hypothesis = pytest.importorskip(
+        "hypothesis",
+        reason="hypothesis is a CI-only dependency (requirements-ci.txt)")
+    query = _strategies()
+
+    @hypothesis.settings(max_examples=200, deadline=None)
+    @hypothesis.given(query)
+    def prop(q):
+        try:
+            compile_query(pretty_print(q))
+        except QueryError:
+            pass
+
+    prop()

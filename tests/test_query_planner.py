@@ -1,0 +1,205 @@
+"""Planner + new-operator semantics.
+
+Structural/executional equivalence of every compiled LDBC text against its
+hand-written plan (the cheap half of the conformance story — the wire-byte
+half lives in test_query_conformance.py), executor-level coverage of the
+Filter/Aggregate operators across every comparison/aggregation, and an
+end-to-end prove+verify of queries only the parsed front door can express
+(WHERE with an order predicate, RETURN count/sum/min).
+"""
+import numpy as np
+import pytest
+
+from repro.core import ir
+from repro.core.operators.common import check_constraints
+from repro.query import QUERY_TEXTS, compile_query
+
+QUERY_PARAMS = {
+    "IS3": dict(person=2),
+    "IS4": dict(message=(1 << 20) + 7),
+    "IS5": dict(message=(1 << 20) + 7),
+    "IC1": dict(person=2, firstName=None),     # name filled per-db below
+    "IC2": dict(person=2, k=20),
+    "IC8": dict(person=1, k=20),
+    "IC9": dict(person=2, k=20),
+    "IC13": dict(person1=1, person2=9),
+}
+
+
+def _params(db, qname):
+    params = dict(QUERY_PARAMS[qname])
+    if params.get("firstName", 0) is None:
+        params["firstName"] = int(db.node_props["person"]["firstName"][0])
+    return params
+
+
+def _run_fingerprint(run):
+    """Everything the wire bytes depend on, minus the (nondeterministic)
+    proof transcript: step kinds, shapes, public instances, data columns."""
+    return [(st.kind, tuple(sorted(st.shape.items())), st.data_desc,
+             st.instance.tobytes(), st.data.tobytes()) for st in run.steps]
+
+
+@pytest.mark.parametrize("qname", list(QUERY_TEXTS))
+def test_compiled_plan_matches_hand_plan_execution(db, qname):
+    hand = ir.build_plan(qname)
+    comp = compile_query(QUERY_TEXTS[qname], name=qname)
+    assert [type(n).__name__ for n in comp.nodes] \
+        == [type(n).__name__ for n in hand.nodes]
+    params = _params(db, qname)
+    rh = ir.execute(db, hand, dict(params))
+    rc = ir.execute(db, comp, dict(params))
+    assert _run_fingerprint(rh) == _run_fingerprint(rc)
+    assert set(rh.result) == set(rc.result)
+    for key in rh.result:
+        assert np.array_equal(np.asarray(rh.result[key]),
+                              np.asarray(rc.result[key])), (qname, key)
+
+
+def test_build_plan_resolves_query_text(db):
+    """ir.build_plan accepts a parseable text as the query name (the
+    verifier-side path for text-named bundles) and fails closed otherwise."""
+    text = QUERY_TEXTS["IS5"]
+    plan = ir.build_plan(text)
+    assert plan.name == text
+    run = ir.execute(db, plan, dict(message=(1 << 20) + 7))
+    assert "creator" in run.result
+    with pytest.raises(KeyError):
+        ir.build_plan("MATCH (p:Person RETURN")     # syntax error -> KeyError
+    with pytest.raises(KeyError):
+        ir.build_plan("MATCH (p:Robot {id: 1})-[:KNOWS]-(f) "
+                      "RETURN f.id AS x")           # compile error -> KeyError
+    with pytest.raises(KeyError):
+        ir.build_plan("IC99")                       # unknown name stays one
+
+
+# ---------------------------------------------------------------------------
+# Filter operator semantics (executor level, constraints checked)
+# ---------------------------------------------------------------------------
+_IDS = tuple(range(1, 9))
+_VALS = (5, 30, 17, 30, 2, 99, 42, 8)
+
+
+def _filter_run(db, cmp, thr):
+    node = ir.Filter(ir.Chained((ir.Lit(_IDS), ir.Lit(_VALS))), cmp,
+                     ir.Lit(thr))
+    plan = ir.Plan("t", (node,), dict(ids=ir.Out(0, "src"),
+                                      vals=ir.Out(0, "dst")))
+    run = ir.execute(db, plan, {})
+    st = run.steps[0]
+    assert not check_constraints(st.op, st.advice, st.instance, st.data)
+    return run.result
+
+
+@pytest.mark.parametrize("cmp,py", [
+    ("ge", lambda v, t: v >= t), ("gt", lambda v, t: v > t),
+    ("le", lambda v, t: v <= t), ("lt", lambda v, t: v < t),
+    ("eq", lambda v, t: v == t), ("ne", lambda v, t: v != t)])
+@pytest.mark.parametrize("thr", [0, 17, 30, 1000])
+def test_filter_all_comparisons(db, cmp, py, thr):
+    got = _filter_run(db, cmp, thr)
+    want = [(i, v) for i, v in zip(_IDS, _VALS) if py(v, thr)]
+    assert got["ids"].tolist() == [i for i, _ in want]
+    assert got["vals"].tolist() == [v for _, v in want]
+
+
+def test_filter_empty_input_and_bounds(db):
+    empty = ir.Lit(())
+    node = ir.Filter(ir.Chained((empty, empty)), "ge", ir.Lit(7))
+    run = ir.execute(db, ir.Plan("t", (node,), dict(ids=ir.Out(0, "src"))),
+                     {})
+    st = run.steps[0]
+    assert not check_constraints(st.op, st.advice, st.instance, st.data)
+    assert run.result["ids"].tolist() == []
+    # order comparisons demand range-checkable values
+    with pytest.raises(AssertionError):
+        ir.execute(db, ir.Plan("t", (ir.Filter(
+            ir.Chained((ir.Lit((1,)), ir.Lit((1 << 29,)))), "ge",
+            ir.Lit(0)),), {}), {})
+
+
+# ---------------------------------------------------------------------------
+# Aggregate operator semantics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("agg,vals,want", [
+    ("count", (7, 31, 9, 31, 12, 4), 6),
+    ("count", (3, 0, 5, 0), 2),            # counts NONZERO entries
+    ("count", (), 0),                      # chained empty -> phantom 0 row
+    ("sum", (7, 31, 9, 31, 12, 4), 94),
+    ("sum", (), 0),
+    ("min", (7, 31, 9, 31, 12, 4), 4),
+    ("min", (42,), 42),
+])
+def test_aggregate_semantics(db, agg, vals, want):
+    node = ir.Aggregate(ir.Chained((ir.Lit(vals),)), agg)
+    run = ir.execute(db, ir.Plan("t", (node,), dict(v=ir.Out(0, "value"))),
+                     {})
+    st = run.steps[0]
+    assert not check_constraints(st.op, st.advice, st.instance, st.data)
+    assert run.result["v"] == want
+
+
+def test_aggregate_min_rejects_oversized_values(db):
+    node = ir.Aggregate(ir.Chained((ir.Lit((1 << 29,)),)), "min")
+    with pytest.raises(AssertionError):
+        ir.execute(db, ir.Plan("t", (node,), {}), {})
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: queries only the front door can express
+# ---------------------------------------------------------------------------
+def _canon(bundle) -> bytes:
+    for st in bundle.steps:
+        st.proof.timings = {}
+    return bundle.to_bytes()
+
+
+def test_prove_and_verify_order_predicate_query(db, owner, verifier):
+    """WHERE with an order predicate lowers to the new Filter circuit and
+    survives the full prove -> serialize -> verify loop."""
+    names = db.node_props["person"]["firstName"]
+    thr = int(np.median(names))
+    text = ("MATCH (p:Person {id: $person})-[:KNOWS]-(f:Person) "
+            "WHERE f.firstName >= $thr RETURN f.id AS ids")
+    plan = compile_query(text)
+    kinds = [type(n).__name__ for n in plan.nodes]
+    assert kinds == ["SetExpand", "SetExpand", "Filter"]
+    bundle = owner.prove_plan(plan, dict(person=2, thr=thr))
+    assert bundle.query == text
+    assert verifier.verify_bytes(bundle.to_bytes())
+    # the result is exactly the honest filter of the friend set
+    run = owner.run_plan(ir.build_plan("IC2"), dict(person=2, k=20))
+    friends = np.unique(np.asarray(run.steps[0].outputs["dst"]))
+    want = sorted(int(f) for f in friends
+                  if int(names[int(f) - 1]) >= thr)
+    assert sorted(np.asarray(bundle.result["ids"]).tolist()) == want
+
+
+@pytest.mark.parametrize("fn,expr", [
+    ("count", "count(f)"), ("sum", "sum(f.firstName)"),
+    ("min", "min(f.firstName)")])
+def test_prove_and_verify_aggregate_query(db, owner, verifier, fn, expr):
+    text = (f"MATCH (p:Person {{id: $person}})-[:KNOWS]-(f:Person) "
+            f"RETURN {expr} AS out")
+    plan = compile_query(text)
+    assert type(plan.nodes[-1]).__name__ == "Aggregate"
+    bundle = owner.prove_plan(plan, dict(person=2))
+    assert verifier.verify_bytes(bundle.to_bytes())
+    friends = np.unique(np.asarray(
+        owner.run_plan(ir.build_plan("IC2"),
+                       dict(person=2, k=20)).steps[0].outputs["dst"]))
+    names = db.node_props["person"]["firstName"]
+    vals = [int(names[int(f) - 1]) for f in friends]
+    want = {"count": len(friends), "sum": sum(vals), "min": min(vals)}[fn]
+    assert int(bundle.result["out"]) == want
+
+
+def test_tampered_aggregate_output_fails_verification(owner, verifier):
+    text = ("MATCH (p:Person {id: $person})-[:KNOWS]-(f:Person) "
+            "RETURN count(f) AS n")
+    bundle = owner.prove_plan(compile_query(text), dict(person=2))
+    agg = bundle.steps[-1]
+    agg.instance = agg.instance.copy()
+    agg.instance[0, :] += 1            # claim one more friend
+    bundle.result = dict(n=int(bundle.result["n"]) + 1)
+    assert not verifier.verify(bundle)

@@ -1,0 +1,62 @@
+"""Golden plan vectors: the compiled plan for each LDBC query text is
+rendered canonically (repro.query.render_plan) and compared byte-for-byte
+against the committed text under tests/vectors/ — planner drift becomes a
+visible diff, mirroring the wire-format vectors in test_vectors.py.
+
+Regenerate after an INTENTIONAL planner/decomposition change:
+
+    PYTHONPATH=src python tests/test_query_vectors.py --write
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.query import QUERY_TEXTS, compile_query, render_plan
+
+VECTOR_DIR = Path(__file__).resolve().parent / "vectors"
+
+
+def _vector_name(qname: str) -> str:
+    return f"plan_{qname.lower()}.txt"
+
+
+def _render(qname: str) -> str:
+    return render_plan(compile_query(QUERY_TEXTS[qname], name=qname))
+
+
+@pytest.mark.parametrize("qname", list(QUERY_TEXTS))
+def test_compiled_plan_matches_golden_vector(qname):
+    path = VECTOR_DIR / _vector_name(qname)
+    assert path.exists(), \
+        f"missing golden plan vector {path.name}; regenerate with " \
+        f"`PYTHONPATH=src python tests/test_query_vectors.py --write`"
+    assert _render(qname) == path.read_text(), \
+        f"compiled plan for {qname} drifted from its committed vector"
+
+
+def test_render_is_deterministic():
+    for qname in QUERY_TEXTS:
+        assert _render(qname) == _render(qname)
+
+
+def test_render_covers_every_node_and_result_key():
+    for qname in QUERY_TEXTS:
+        plan = compile_query(QUERY_TEXTS[qname], name=qname)
+        text = _render(qname)
+        assert text.startswith(f"plan {qname}\n")
+        for i in range(len(plan.nodes)):
+            assert f"\n  {i}: " in text
+        for key in plan.result:
+            assert f"\n  {key}: " in text
+
+
+if __name__ == "__main__":
+    if "--write" not in sys.argv:
+        sys.exit("usage: PYTHONPATH=src python "
+                 "tests/test_query_vectors.py --write")
+    VECTOR_DIR.mkdir(exist_ok=True)
+    for qname in QUERY_TEXTS:
+        out = VECTOR_DIR / _vector_name(qname)
+        out.write_text(_render(qname))
+        print(f"wrote {out.name}: {len(out.read_text())} bytes")
