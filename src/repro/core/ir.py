@@ -229,6 +229,12 @@ def _singleton(x):
     return np.asarray([x], np.int64)
 
 
+def _nonzero(a):
+    """Strip id 0 — the padding row Chained materializes for empty inputs."""
+    a = np.asarray(a, np.int64)
+    return a[a != 0]
+
+
 def _length_or_1(a):
     return max(len(a), 1)
 
@@ -378,11 +384,16 @@ def build_plan(qname: str) -> Plan:
         # on import; load it lazily so core stays importable on its own
         _RESOLVER_BOOTSTRAPPED[0] = True
         import importlib
-        importlib.import_module("repro.query")
-        for resolve_fn in list(_PLAN_RESOLVERS):
-            plan = resolve_fn(qname)
-            if plan is not None:
-                return plan
+        try:
+            importlib.import_module("repro.query")
+        except ImportError:
+            pass    # front door unavailable: fall through to the KeyError
+                    # below so verify_bytes keeps returning False, not raising
+        else:
+            for resolve_fn in list(_PLAN_RESOLVERS):
+                plan = resolve_fn(qname)
+                if plan is not None:
+                    return plan
     raise KeyError(f"unknown query {qname!r}; known: {sorted(PLAN_BUILDERS)}"
                    f" (or a parseable repro.query text)")
 

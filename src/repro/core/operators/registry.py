@@ -382,7 +382,10 @@ class FilterAdapter(Adapter):
     shape_schema = dict(n_rows=int, m_in=int, cmp=str)
 
     def manifest_pins(self, node, env: ir.Env, manifest, geo) -> dict:
-        return dict(n_rows=pad_pow2(geo.n_table_rows), m_in=geo.n_table_rows)
+        # same max(..., 2) floor as shape(): a 1-row base table still builds
+        # a 2-row circuit, and the honest prover must pass the pin
+        return dict(n_rows=pad_pow2(max(geo.n_table_rows, 2)),
+                    m_in=geo.n_table_rows)
 
     def shape_flags(self, node) -> dict:
         return dict(cmp=str(node.cmp))
@@ -429,7 +432,9 @@ class AggregateAdapter(Adapter):
     shape_schema = dict(n_rows=int, m_in=int, agg=str)
 
     def manifest_pins(self, node, env: ir.Env, manifest, geo) -> dict:
-        return dict(n_rows=pad_pow2(geo.n_table_rows + 1),
+        # same max(..., 2) floor as shape() (the honest circuit never shrinks
+        # below 2 rows, even over a 1-row base table)
+        return dict(n_rows=pad_pow2(max(geo.n_table_rows + 1, 2)),
                     m_in=geo.n_table_rows)
 
     def shape_flags(self, node) -> dict:

@@ -49,6 +49,7 @@ class _Compiler:
         self.vars = {}          # node var -> _Var
         self.edge_vals = {}     # edge var -> dict(prop=, vals=, pay=, right=)
         self.anchor_var = None
+        self.hop_sources = set()   # vars later pattern hops expanded from
 
     def _emit(self, node) -> int:
         self.nodes.append(node)
@@ -138,6 +139,7 @@ class _Compiler:
         edge_props = self._edge_props_needed()
 
         cur = _Var(left.label, anchor, scalar=True)
+        cur_name = left.var
         for pos, (e, right) in enumerate(zip(path.edges, path.nodes[1:])):
             info = catalog.edge_info(e.etype)
             if info.undirected and e.direction != "any":
@@ -167,7 +169,10 @@ class _Compiler:
                 rv = self._set_hop(e, info, cur)
             rv.label = right_label
             self._declare(right.var, rv)
+            if cur_name is not None:
+                self.hop_sources.add(cur_name)
             cur = rv
+            cur_name = right.var
 
     def _varlength_hop(self, e, info, cur, last_edge) -> _Var:
         if not info.undirected:
@@ -267,6 +272,18 @@ class _Compiler:
         for pred in self.q.where:
             var, key = pred.lhs.var, pred.lhs.key
             v = self._prop_lookup(var)
+            if var in self.hop_sources:
+                raise QueryCompileError(
+                    f"WHERE on intermediate pattern variable {var!r} is "
+                    f"unsupported: later pattern hops already expanded from "
+                    f"its unfiltered id set, so the predicate would be "
+                    f"silently dropped from downstream results; filter the "
+                    f"terminal variable or split the query")
+            if any(v.ids is ev["pay"] for ev in self.edge_vals.values()):
+                raise QueryCompileError(
+                    f"WHERE on {var!r} is unsupported: its ids are bound to "
+                    f"an edge-property expansion whose ORDER BY/RETURN "
+                    f"payload would bypass the filter")
             pt = self._single_prop_table(self._label_of(var), key)
             i = self._emit(ir.SetExpand(ir.BaseTable(pt.table), v.ids))
             pair = ir.Chained((ir.Out(i, "src"), ir.Out(i, "dst")))
@@ -276,7 +293,10 @@ class _Compiler:
                 v.ids = ir.Out(j, "dst")
             else:
                 j = self._emit(ir.Filter(pair, _CMP_MAP[pred.cmp], rhs))
-                v.ids = ir.Out(j, "src")
+                # Chained pads an empty lookup to one (0, 0) row; a predicate
+                # the padding satisfies (e.g. >= 0) would otherwise surface a
+                # phantom id 0 in the verified result
+                v.ids = ir.App(ir._nonzero, (ir.Out(j, "src"),))
 
     # -- RETURN / ORDER BY / LIMIT ------------------------------------------
     def _anchor_returns(self) -> dict:

@@ -12,7 +12,8 @@ import pytest
 
 from repro.core import ir
 from repro.core.operators.common import check_constraints
-from repro.query import QUERY_TEXTS, compile_query
+from repro.graphdb import ldbc
+from repro.query import QUERY_TEXTS, QueryCompileError, compile_query
 
 QUERY_PARAMS = {
     "IS3": dict(person=2),
@@ -71,6 +72,66 @@ def test_build_plan_resolves_query_text(db):
                       "RETURN f.id AS x")           # compile error -> KeyError
     with pytest.raises(KeyError):
         ir.build_plan("IC99")                       # unknown name stays one
+
+
+def test_build_plan_fails_closed_when_front_door_unimportable(monkeypatch):
+    """If the lazy repro.query bootstrap cannot import, build_plan must still
+    raise KeyError (session.verify catches exactly that) — never leak the
+    ImportError through verify_bytes' returns-False contract."""
+    import sys
+    monkeypatch.setattr(ir, "_PLAN_RESOLVERS", [])
+    monkeypatch.setattr(ir, "_RESOLVER_BOOTSTRAPPED", [False])
+    monkeypatch.setitem(sys.modules, "repro.query", None)   # import -> error
+    with pytest.raises(KeyError):
+        ir.build_plan("MATCH (m:Message {id: 1}) RETURN m.content AS c")
+
+
+# ---------------------------------------------------------------------------
+# WHERE must bind — predicates that downstream nodes would bypass fail closed
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pred", ["f.firstName >= $thr", "f.firstName = $thr"])
+def test_where_on_intermediate_variable_fails_closed(pred):
+    """A predicate on a variable that later hops already expanded from would
+    compile to a dead Filter (downstream nodes captured the unfiltered ids);
+    the compiler must refuse rather than prove a silently different query."""
+    text = ("MATCH (p:Person {id: $person})-[:KNOWS]-(f:Person)"
+            "<-[:HAS_CREATOR]-(m:Message) "
+            f"WHERE {pred} RETURN m.id AS ids")
+    with pytest.raises(QueryCompileError, match="intermediate"):
+        compile_query(text)
+
+
+def test_where_on_edge_payload_variable_fails_closed():
+    """Filtering a node bound to an edge-property expansion would be bypassed
+    by the ORDER BY payload, which reads the unfiltered expansion outputs."""
+    text = ("MATCH (p:Person {id: $person})-[k:KNOWS]-(f:Person) "
+            "WHERE f.firstName >= $thr "
+            "RETURN k.creationDate AS dates ORDER BY k.creationDate DESC")
+    with pytest.raises(QueryCompileError, match="edge-property"):
+        compile_query(text)
+
+
+def test_where_on_terminal_variable_still_compiles():
+    plan = compile_query(
+        "MATCH (p:Person {id: $person})-[:KNOWS]-(f:Person) "
+        "WHERE f.firstName >= $thr RETURN f.id AS ids")
+    assert [type(n).__name__ for n in plan.nodes] \
+        == ["SetExpand", "SetExpand", "Filter"]
+
+
+def test_filter_on_empty_expansion_has_no_phantom_rows():
+    """An anchored person with no KNOWS edges: the WHERE lookup is empty, so
+    Chained pads it to one (0, 0) row; a predicate the padding satisfies
+    (>= 0) must not surface phantom node id 0 in the result."""
+    lonely_db = ldbc.generate(n_knows=24, n_persons=16, n_comments=8, seed=0)
+    t = lonely_db.tables["person_knows_person"]
+    used = set(t.src.tolist()) | set(t.dst.tolist())
+    lonely = next(int(i) for i in lonely_db.node_ids if int(i) not in used)
+    plan = compile_query(
+        "MATCH (p:Person {id: $person})-[:KNOWS]-(f:Person) "
+        "WHERE f.firstName >= 0 RETURN f.id AS ids")
+    run = ir.execute(lonely_db, plan, dict(person=lonely))
+    assert np.asarray(run.result["ids"]).tolist() == []
 
 
 # ---------------------------------------------------------------------------
@@ -143,6 +204,31 @@ def test_aggregate_min_rejects_oversized_values(db):
     node = ir.Aggregate(ir.Chained((ir.Lit((1 << 29,)),)), "min")
     with pytest.raises(AssertionError):
         ir.execute(db, ir.Plan("t", (node,), {}), {})
+
+
+@pytest.mark.parametrize("m", [1, 2, 3, 7])
+def test_filter_aggregate_manifest_pins_match_shape(db, m):
+    """The verifier's manifest pin and the honest prover's shape() must
+    derive the SAME geometry for an m-row table — including tiny tables
+    where shape() applies its max(..., 2) circuit floor."""
+    from types import SimpleNamespace
+
+    from repro.core.operators import registry
+    geo = SimpleNamespace(n_table_rows=m)
+    ids = ir.Lit(tuple(range(1, m + 1)))
+    vals = ir.Lit(tuple(range(m)))
+    fnode = ir.Filter(ir.Chained((ids, vals)), "ge", ir.Lit(0))
+    fa = registry.adapter_for(fnode)
+    assert fa.manifest_pins(fnode, ir.Env({}), None, geo)["n_rows"] \
+        == fa.shape(db, fnode, ir.Env({}))["n_rows"]
+    anode = ir.Aggregate(ir.Chained((vals,)), "count")
+    aa = registry.adapter_for(anode)
+    assert aa.manifest_pins(anode, ir.Env({}), None, geo)["n_rows"] \
+        == aa.shape(db, anode, ir.Env({}))["n_rows"]
+    # a 0-row table still pins the 2-row floor the builders require
+    empty = SimpleNamespace(n_table_rows=0)
+    assert fa.manifest_pins(fnode, ir.Env({}), None, empty)["n_rows"] >= 2
+    assert aa.manifest_pins(anode, ir.Env({}), None, empty)["n_rows"] >= 2
 
 
 # ---------------------------------------------------------------------------
