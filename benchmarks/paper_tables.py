@@ -409,8 +409,18 @@ def transparency_bench(rows: int = 1024):
                    durable_open_replay_us=round(open_us, 1),
                    store_bytes=store_bytes)
 
-    # gossip: sign/emit, and the peer's verify-and-advance hot path
-    key = b"bench-gossip-key"
+    # gossip: Ed25519 sign/verify, emit, and the peer's verify-and-advance
+    # hot path (all pure Python — the ed25519_* rows are the floor every
+    # networked gossip round pays per head)
+    from repro.core import ed25519 as ed
+    key = ed.SigningKey.from_secret(b"bench-gossip-key")
+    head = log.checkpoint()
+    sig, sign_us = timed(gp.sign_checkpoint, key, head)
+    ok, sigv_us = timed(gp.verify_signature, key.pub, head, sig)
+    assert ok
+    yield ("transparency/ed25519/sign", sign_us,
+           f"msg_bytes={len(head.to_bytes()) + 1}")
+    yield ("transparency/ed25519/verify", sigv_us, "")
     msg, emit_us = timed(gp.emit, log, key, 21)
     wire_bytes = msg.to_bytes()
     cp21 = log.checkpoint(21)
@@ -418,10 +428,10 @@ def transparency_bench(rows: int = 1024):
 
     def offer_advance():
         # exactly the verifier's hot path: decode hostile bytes, check the
-        # MAC, verify the consistency proof, advance the pin.  The peer's
-        # pre-pinned state is set directly so bootstrap cost (an extra MAC
-        # + offer) stays out of the gated metric.
-        p = gp.GossipPeer(log.origin, key)
+        # signature, verify the consistency proof, advance the pin.  The
+        # peer's pre-pinned state is set directly so bootstrap cost (an
+        # extra signature check + offer) stays out of the gated metric.
+        p = gp.GossipPeer(log.origin, key.pub)
         p.head, p.seen = cp21, {21: pinned_root}
         return p.offer(gp.GossipMessage.from_bytes(wire_bytes))
 
@@ -433,7 +443,34 @@ def transparency_bench(rows: int = 1024):
            f"span=21->{log.size}")
     records.update(gossip_emit_us=round(emit_us, 1),
                    gossip_offer_us=round(offer_us, 1),
-                   gossip_bytes=len(wire_bytes))
+                   gossip_bytes=len(wire_bytes),
+                   ed25519_sign_us=round(sign_us, 1),
+                   ed25519_verify_us=round(sigv_us, 1))
+
+    # framed round trip: one gossip head served over the real socket
+    # transport (loopback), REQ_HEAD -> signed envelope -> verify+advance
+    from repro.net import framing, server as net_server
+    from repro.net.peer import PeerClient
+
+    srv = net_server.NetServer()
+    srv.register(framing.REQ_HEAD,
+                 lambda payload: (framing.RESP_HEAD, wire_bytes))
+    with srv.serving() as addr:
+        client = PeerClient(addr, timeout=5.0)
+
+        def framed_round_trip():
+            kind, payload = client.request(framing.REQ_HEAD, b"")
+            assert kind == framing.RESP_HEAD
+            p = gp.GossipPeer(log.origin, key.pub)
+            p.head, p.seen = cp21, {21: pinned_root}
+            return p.offer(gp.GossipMessage.from_bytes(payload))
+
+        assert framed_round_trip() is True
+        _, rt_us = timed(framed_round_trip)
+        client.close()
+    yield ("transparency/net/framed_head_round_trip", rt_us,
+           f"loopback;bytes={len(wire_bytes)}")
+    records.update(framed_head_round_trip_us=round(rt_us, 1))
 
     with open("BENCH_transparency.json", "w") as f:
         json.dump(dict(rows=rows, results=records), f, indent=2,

@@ -1,35 +1,40 @@
-"""Multi-process transparency deployment demo: one owner, two verifiers.
+"""Networked transparency deployment demo: one owner, two verifiers, TCP.
 
-The full deployment story of the durable transparency layer, end to end::
+The full deployment story of the transparency fabric, end to end::
 
     PYTHONPATH=src python examples/serve_queries.py [--queries 4] [--dir D]
 
-The driver (this process) orchestrates three child processes over a shared
-work directory — no in-process object crosses a trust boundary, only bytes:
+The driver (this process) orchestrates three child processes that talk to
+each other **over real sockets** (`repro.net`, protocol.md §10) — no
+in-process object crosses a trust boundary, only signed bytes on the wire:
 
 * an **owner** that opens a *durable* transparency log
   (``TransparencyLog.open``), publishes the commitment manifest as leaf 0,
-  emits a signed gossip head, proves a queue of LDBC queries to spool
-  files, then appends a manifest revision and gossips the new head with a
-  consistency proof;
-* **two verifiers** that each pin the head with a ``GossipPeer``, bootstrap
-  their entire trust root from ``(gossip-pinned checkpoint, inclusion
-  proof, manifest bytes)``, verify every spooled bundle from bytes alone,
-  advance their head across the revision only on a valid consistency
-  proof, and cross-gossip their heads with each other.
+  proves a queue of LDBC queries through a ``ProofService``, and runs a
+  ``NetServer`` serving its Ed25519-signed gossip head, the manifest,
+  inclusion/consistency proofs, and finished ``ProofBundle``\\ s;
+* **two verifiers** that each run their own ``NetServer`` (for
+  verifier-to-verifier gossip) and a ``PeerClient`` toward the owner —
+  through a deterministic in-process ``FaultProxy`` that drops and
+  truncates frames to prove the retry/backoff path — bootstrap their
+  entire trust root from fetched bytes, verify every bundle, advance
+  their pinned head across a manifest revision only on a valid
+  consistency proof, and cross-gossip their heads over TCP.
 
 Mid-stream the driver **kills the owner with SIGKILL**, appends a torn
 half-record to the log file (what a crash during an unsynced write leaves
-behind), and restarts the owner: the reopened log truncates the torn tail,
-re-derives every Merkle root against the stored checkpoints, and the owner
-resumes at the first unproven query.  Finally the driver plays a malicious
-owner: it forks the log history and gossips a conflicting signed head —
-both verifiers must raise ``EquivocationError`` with the two conflicting
-checkpoints as evidence.
+behind), and restarts the owner on a fresh port: the reopened log
+truncates the torn tail, the owner resumes at the first unproven query,
+and the verifiers — whose circuit breakers opened while the owner was
+dead — keep serving from their last pinned head, re-resolve the port, and
+reconnect.  Finally the driver plays a malicious owner: it forks the log
+history, signs the forked head with the REAL origin key, and pushes it to
+both verifiers over their gossip sockets — both must answer with an
+``RESP_EQUIVOCATION`` frame carrying the ``EquivocationError`` evidence.
 
 The driver asserts all of it: recovery happened, every bundle verified in
-both verifier processes, heads advanced exactly once, and equivocation was
-detected twice.
+both verifier processes, heads advanced exactly once, no process hung
+past its timeout budget, and equivocation was detected by both peers.
 """
 import sys
 from pathlib import Path
@@ -43,22 +48,37 @@ import os
 import signal
 import subprocess
 import tempfile
+import threading
 import time
 
 from repro.core import gossip
 from repro.core import prover as pv
+from repro.core.ed25519 import SigningKey
 from repro.core.session import ZKGraphSession
 from repro.core.transparency import InclusionProof, TransparencyLog
 from repro.graphdb import ldbc
+from repro.net import framing
+from repro.net.faults import FaultProxy
+from repro.net.peer import PeerClient, PeerUnavailable
+from repro.net.server import NetServer
 from repro.serve import ProofService
 
 CFG = pv.ProverConfig(blowup=4, n_queries=16, fri_final_size=16)
 ORIGIN = "zkgraph-serve-log"
-# the log operator's gossip key.  The demo driver knowingly holds it so it
-# can play a MALICIOUS owner in the final act — which is exactly the threat
-# gossip exists to catch: a correctly-signed but equivocating head.
-AUTH_KEY = b"zkgraph-demo-origin-key"
+# the log operator's Ed25519 identity.  The demo driver knowingly holds the
+# signing half so it can play a MALICIOUS owner in the final act — which is
+# exactly the threat gossip exists to catch: a correctly-signed but
+# equivocating head.  Verifiers pin only KEY.pub.
+KEY = SigningKey.from_secret(b"zkgraph-demo-origin-key")
 TIMEOUT = float(os.environ.get("ZKGRAPH_DEMO_TIMEOUT", "900"))
+
+# deterministic fault scripts, one per verifier: the first frames of each
+# verifier's owner-link get dropped/truncated/stalled, so bootstrap itself
+# exercises retry-with-backoff and typed frame errors on every demo run
+FAULT_SCRIPTS = {
+    "v1": ["drop", "pass", "truncate", "pass", "drop"],
+    "v2": ["pass", "drop", "pass", "truncate"],
+}
 
 
 def query_queue(db, n):
@@ -79,7 +99,7 @@ def query_queue(db, n):
 
 
 # ---------------------------------------------------------------------------
-# shared helpers: atomic byte exchange through the work dir
+# shared helpers
 # ---------------------------------------------------------------------------
 def _strip_timings(raw: bytes) -> bytes:
     """Re-encode bundle bytes with per-step prover timings zeroed: timings
@@ -106,6 +126,10 @@ def wait_for(path: Path, deadline: float) -> bytes:
     raise TimeoutError(f"timed out waiting for {path}")
 
 
+def read_port(d: Path, name: str, deadline: float) -> int:
+    return int(wait_for(d / f"{name}.port", deadline).decode())
+
+
 def _cfg_args(cfg: pv.ProverConfig, n_knows: int, n_persons: int) -> list:
     return ["--blowup", str(cfg.blowup), "--n-queries", str(cfg.n_queries),
             "--fri-final-size", str(cfg.fri_final_size),
@@ -121,7 +145,7 @@ def _build(args):
 
 
 # ---------------------------------------------------------------------------
-# the owner process
+# the owner process: a durable log + a ProofService behind a NetServer
 # ---------------------------------------------------------------------------
 def run_owner(args) -> None:
     d = Path(args.dir)
@@ -133,27 +157,59 @@ def run_owner(args) -> None:
               f"torn-tail bytes, {log.size} intact leaves", flush=True)
     raw = session.commitments.to_bytes()
     if log.size == 0:
-        checkpoint, inclusion, raw = session.publish_to(log)
+        _, _, raw = session.publish_to(log)
         print(f"[owner] manifest published: {len(raw)} bytes -> "
-              f"log {checkpoint.origin!r} size {checkpoint.tree_size}",
-              flush=True)
+              f"log {ORIGIN!r} size {log.size}", flush=True)
     else:
         assert log.entry(0) == raw, "restart re-derived a different manifest"
-        inclusion = log.inclusion_proof(0, 1)
         print(f"[owner] resumed with {log.size} published leaves", flush=True)
-    # the bootstrap artifacts are (re)written on EVERY start — a crash
-    # between the log append and these writes must not strand verifiers;
-    # everything is deterministic from the persisted log, so a rewrite is
-    # byte-identical to what a verifier may already have read
-    cp1 = log.checkpoint(1)
-    atomic_write(d / "manifest.bin", raw)
-    atomic_write(d / "inclusion.bin", inclusion.to_bytes())
-    atomic_write(d / "head0.bin", gossip.GossipMessage(
-        cp1, None, gossip.sign_checkpoint(AUTH_KEY, cp1)).to_bytes())
     log.sync()                  # audit disk against memory before serving
 
     spool = d / "bundles"
     spool.mkdir(exist_ok=True)
+    log_lock = threading.Lock()     # server threads vs the revision append
+
+    def on_head(payload):
+        with log_lock:
+            return (framing.RESP_HEAD, gossip.emit(log, KEY).to_bytes())
+
+    def on_manifest(payload):
+        return (framing.RESP_MANIFEST, raw)
+
+    def on_inclusion(payload):
+        # payload: the verifier's pinned tree size, so the proof targets
+        # exactly the checkpoint that verifier has verified
+        size = int.from_bytes(payload, "little") if payload else 1
+        with log_lock:
+            return (framing.RESP_INCLUSION,
+                    log.inclusion_proof(0, size).to_bytes())
+
+    def on_consistency(payload):
+        since = int.from_bytes(payload, "little")
+        with log_lock:
+            return (framing.RESP_CONSISTENCY,
+                    gossip.emit(log, KEY, since=since).to_bytes())
+
+    def on_bundle(payload):
+        cursor = int.from_bytes(payload, "little")
+        path = spool / f"q{cursor}.bin"
+        if cursor >= args.queries:
+            raise ValueError(f"no query at cursor {cursor}")
+        if not path.exists():
+            return (framing.RESP_PENDING, b"")
+        return (framing.RESP_BUNDLE, path.read_bytes())
+
+    srv = NetServer()
+    srv.register(framing.REQ_PING, lambda p: (framing.RESP_PONG, p))
+    srv.register(framing.REQ_HEAD, on_head)
+    srv.register(framing.REQ_MANIFEST, on_manifest)
+    srv.register(framing.REQ_INCLUSION, on_inclusion)
+    srv.register(framing.REQ_CONSISTENCY, on_consistency)
+    srv.register(framing.REQ_BUNDLE, on_bundle)
+    _, port = srv.start()
+    atomic_write(d / "owner.port", str(port).encode())
+    print(f"[owner] serving on 127.0.0.1:{port}", flush=True)
+
     pending = [(i, kind, params)
                for i, (kind, params) in enumerate(query_queue(db,
                                                               args.queries))
@@ -184,75 +240,229 @@ def run_owner(args) -> None:
             "serviced bundle bytes diverged from the solo prover"
         print(f"[owner] q{i0} re-proven solo: bytes identical", flush=True)
 
-    if log.size < 2:            # manifest revision: the log must only GROW
-        session.publish_to(log)
-    atomic_write(d / "head1.bin",
-                 gossip.emit(log, AUTH_KEY, since=1).to_bytes())
-    head = log.sync()
-    log.close()
+    with log_lock:
+        if log.size < 2:        # manifest revision: the log must only GROW
+            session.publish_to(log)
+        head = log.sync()
     stats = session.cache.stats()
     atomic_write(d / "owner.done", json.dumps(dict(
         queries=args.queries, tree_size=head.tree_size,
         keygen_misses=stats["misses"], keygen_hits=stats["hits"]),
         sort_keys=True).encode())
     print(f"[owner] done: log size {head.tree_size}, keygen cache "
-          f"{stats['misses']} misses / {stats['hits']} hits", flush=True)
+          f"{stats['misses']} misses / {stats['hits']} hits; still serving",
+          flush=True)
+    # stay up serving heads/proofs/bundles until the driver reaps us
+    while True:
+        time.sleep(0.5)
 
 
 # ---------------------------------------------------------------------------
-# a verifier process
+# a verifier process: its own gossip server + a fault-proxied owner link
 # ---------------------------------------------------------------------------
+class OwnerLink:
+    """The verifier's resilient path to the owner: resolves the owner's
+    current port from the work dir, optionally routes through a
+    deterministic FaultProxy, and retries through PeerUnavailable — which
+    is exactly what an owner SIGKILL and restart on a new port looks like
+    from this side.  Every wait is bounded by the shared deadline."""
+
+    def __init__(self, d: Path, name: str, deadline: float, faults):
+        self.d = d
+        self.name = name
+        self.deadline = deadline
+        self.faults = list(faults)
+        self.port = None
+        self.proxy = None
+        self.client = None
+
+    def _connect(self) -> None:
+        port = read_port(self.d, "owner", self.deadline)
+        if port == self.port and self.client is not None:
+            return
+        self.close()
+        self.port = port
+        target = ("127.0.0.1", port)
+        if self.faults:
+            # the scripted faults hit this first incarnation of the link;
+            # a reconnect after owner restart goes direct
+            self.proxy = FaultProxy(target, script=self.faults,
+                                    stall_seconds=1.0)
+            target = self.proxy.start()
+            self.faults = []
+        self.client = PeerClient(target, timeout=2.0, retries=3,
+                                 backoff=0.05, cooldown=0.3)
+
+    def close(self) -> None:
+        if self.client is not None:
+            self.client.close()
+            self.client = None
+        if self.proxy is not None:
+            self.proxy.stop()
+            self.proxy = None
+
+    def rpc(self, kind: int, payload: bytes = b"",
+            fallback=None) -> tuple[int, bytes]:
+        """One request, surviving owner death: on PeerUnavailable the link
+        re-resolves the port (the restarted owner binds a new one) and
+        tries again until the deadline.  ``fallback`` is called once per
+        outage — the hook verifiers use to report they keep serving from
+        the pinned head instead of wedging."""
+        reported = False
+        while time.time() < self.deadline:
+            self._connect()
+            try:
+                return self.client.request(kind, payload)
+            except PeerUnavailable:
+                if fallback is not None and not reported:
+                    fallback()
+                    reported = True
+                # stale port file?  the restarted owner rewrites it
+                self.port = None
+                time.sleep(0.2)
+        raise TimeoutError(f"[{self.name}] owner unreachable past deadline")
+
+
 def run_verifier(args) -> None:
     d = Path(args.dir)
     name = args.name
     deadline = time.time() + TIMEOUT
-    _, cfg = _build(args)       # policy only — a verifier has NO database
+    # proof policy only — a verifier holds NO database, just the trust root
+    cfg = pv.ProverConfig(blowup=args.blowup, n_queries=args.n_queries,
+                          fri_final_size=args.fri_final_size)
 
-    raw = wait_for(d / "manifest.bin", deadline)
-    inclusion = InclusionProof.from_bytes(
-        wait_for(d / "inclusion.bin", deadline))
-    peer = gossip.GossipPeer(ORIGIN, AUTH_KEY)
-    peer.offer(gossip.GossipMessage.from_bytes(
-        wait_for(d / "head0.bin", deadline)))
+    peer = gossip.GossipPeer(ORIGIN, KEY.pub)
+    peer_lock = threading.Lock()
+    equivocation = {"detected": False, "evidence": ""}
+    alarm = threading.Event()
+
+    def on_gossip(payload):
+        """Another peer (or the adversary) pushes a head at this verifier:
+        verify-and-advance under the lock; an equivocating head answers
+        with the alarm frame carrying the evidence."""
+        msg = gossip.GossipMessage.from_bytes(payload)
+        try:
+            with peer_lock:
+                advanced = peer.offer(msg)
+        except gossip.EquivocationError as e:
+            equivocation.update(detected=True, evidence=str(e))
+            alarm.set()
+            print(f"[{name}] ALARM: {e}", flush=True)
+            return (framing.RESP_EQUIVOCATION, str(e).encode("utf-8"))
+        return (framing.RESP_ACK, b"advanced" if advanced else b"agreed")
+
+    def on_head(payload):
+        with peer_lock:
+            return (framing.RESP_HEAD, peer.head_message().to_bytes())
+
+    srv = NetServer()
+    srv.register(framing.REQ_PING, lambda p: (framing.RESP_PONG, p))
+    srv.register(framing.REQ_GOSSIP, on_gossip)
+    srv.register(framing.REQ_HEAD, on_head)
+    _, port = srv.start()
+    atomic_write(d / f"{name}.port", str(port).encode())
+
+    link = OwnerLink(d, name, deadline,
+                     FAULT_SCRIPTS.get(name, []) if args.faults else [])
+
+    def fallback():
+        with peer_lock:
+            pinned = peer.head.tree_size if peer.head is not None else None
+        state = f"serving from pinned head @{pinned}" if pinned is not None \
+            else "no head pinned yet"
+        print(f"[{name}] owner unreachable; {state}, retrying", flush=True)
+
+    # ---- bootstrap: the whole trust root arrives as frames ---------------
+    kind, head_raw = link.rpc(framing.REQ_HEAD, fallback=fallback)
+    assert kind == framing.RESP_HEAD, f"expected RESP_HEAD, got {kind:#x}"
+    with peer_lock:
+        peer.offer(gossip.GossipMessage.from_bytes(head_raw))
+        boot_size = peer.pinned.tree_size
+    kind, manifest_raw = link.rpc(framing.REQ_MANIFEST, fallback=fallback)
+    assert kind == framing.RESP_MANIFEST
+    kind, incl_raw = link.rpc(framing.REQ_INCLUSION,
+                              int(boot_size).to_bytes(8, "little"),
+                              fallback=fallback)
+    assert kind == framing.RESP_INCLUSION
     verifier = ZKGraphSession.verifier(
-        cfg=cfg, gossip=peer, inclusion=inclusion, manifest_bytes=raw)
-    print(f"[{name}] trust root bootstrapped from gossip-pinned head "
-          f"@{peer.pinned.tree_size}", flush=True)
+        cfg=cfg, gossip=peer, inclusion=InclusionProof.from_bytes(incl_raw),
+        manifest_bytes=manifest_raw)
+    print(f"[{name}] trust root bootstrapped over TCP from gossip-pinned "
+          f"head @{boot_size}", flush=True)
 
+    # ---- stream the bundles (the owner dies and resumes mid-stream) ------
     results = {}
     for i in range(args.queries):
-        data = wait_for(d / "bundles" / f"q{i}.bin", deadline)
+        while True:
+            kind, data = link.rpc(framing.REQ_BUNDLE,
+                                  i.to_bytes(8, "little"), fallback=fallback)
+            if kind == framing.RESP_BUNDLE:
+                break
+            assert kind == framing.RESP_PENDING, f"unexpected {kind:#x}"
+            if time.time() > deadline:
+                raise TimeoutError(f"[{name}] q{i} never arrived")
+            time.sleep(0.2)
         results[f"q{i}"] = bool(verifier.verify_bytes(data))
         print(f"[{name}] q{i} verified from {len(data)} bytes: "
               f"{results[f'q{i}']}", flush=True)
 
-    # the owner revised the manifest: advance ONLY on a consistency proof
-    advanced = peer.offer(gossip.GossipMessage.from_bytes(
-        wait_for(d / "head1.bin", deadline)))
+    # ---- the owner revised the manifest: advance ONLY on a proof ---------
+    advanced = False
+    while time.time() < deadline and not advanced:
+        kind, head_raw = link.rpc(framing.REQ_HEAD, fallback=fallback)
+        assert kind == framing.RESP_HEAD
+        msg = gossip.GossipMessage.from_bytes(head_raw)
+        with peer_lock:
+            if msg.checkpoint.tree_size == peer.pinned.tree_size:
+                pass                            # not revised yet
+            else:
+                try:
+                    advanced = peer.offer(msg)
+                except gossip.ConsistencyRequired:
+                    pass                        # fetch the linking proof
+        if advanced:
+            break
+        if msg.checkpoint.tree_size > boot_size:
+            kind, linked = link.rpc(
+                framing.REQ_CONSISTENCY,
+                int(peer.pinned.tree_size).to_bytes(8, "little"),
+                fallback=fallback)
+            assert kind == framing.RESP_CONSISTENCY
+            with peer_lock:
+                advanced = peer.offer(gossip.GossipMessage.from_bytes(linked))
+        else:
+            time.sleep(0.2)
     print(f"[{name}] head advanced to @{peer.pinned.tree_size} "
           f"(append-only growth proven)", flush=True)
+    atomic_write(d / f"{name}.advanced", b"1")
 
-    # verifier <-> verifier gossip: exchange heads, expect agreement
-    atomic_write(d / f"{name}.head.bin", peer.head_message().to_bytes())
+    # ---- verifier <-> verifier gossip over TCP ---------------------------
     other = "v2" if name == "v1" else "v1"
-    other_msg = gossip.GossipMessage.from_bytes(
-        wait_for(d / f"{other}.head.bin", deadline))
-    cross = peer.offer(other_msg)       # same honest head: no advance
-    print(f"[{name}] cross-gossip with {other}: heads agree", flush=True)
+    wait_for(d / f"{other}.advanced", deadline)
+    other_client = PeerClient(("127.0.0.1", read_port(d, other, deadline)),
+                              timeout=2.0, retries=5, backoff=0.1)
+    with peer_lock:
+        my_head = peer.head_message().to_bytes()
+    kind, verdict = other_client.request(framing.REQ_GOSSIP, my_head)
+    other_client.close()
+    assert kind == framing.RESP_ACK, \
+        f"cross-gossip with {other} raised: {verdict!r}"
+    cross = verdict == b"advanced"
+    print(f"[{name}] cross-gossip with {other}: heads agree "
+          f"({verdict.decode()})", flush=True)
 
-    detected = None
-    try:
-        peer.offer(gossip.GossipMessage.from_bytes(
-            wait_for(d / "equivocation.bin", deadline)))
-        detected = False
-    except gossip.EquivocationError as e:
-        detected = True
-        print(f"[{name}] ALARM: {e}", flush=True)
-
+    # ---- the forged fork arrives on OUR server; wait for the alarm -------
+    if not alarm.wait(timeout=max(0.0, deadline - time.time())):
+        print(f"[{name}] no equivocation push arrived before the deadline",
+              flush=True)
     atomic_write(d / f"{name}.done", json.dumps(dict(
         results=results, advanced=bool(advanced), cross_advance=bool(cross),
-        equivocation_detected=detected, head=peer.pinned.tree_size),
-        sort_keys=True).encode())
+        equivocation_detected=bool(equivocation["detected"]),
+        head=peer.pinned.tree_size), sort_keys=True).encode())
+    # stay up until the driver reaps us: the other verifier or the driver
+    # may still be talking to our gossip server
+    while True:
+        time.sleep(0.5)
 
 
 # ---------------------------------------------------------------------------
@@ -263,6 +473,7 @@ def _spawn(role: str, d: str, args, extra=()) -> subprocess.Popen:
     env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
     cmd = [sys.executable, str(Path(__file__).resolve()), "--role", role,
            "--dir", d, "--queries", str(args.queries),
+           *(() if args.faults else ("--no-faults",)),
            *_cfg_args(pv.ProverConfig(args.blowup, args.n_queries,
                                       args.fri_final_size), args.n_knows,
                       args.n_persons), *extra]
@@ -286,8 +497,8 @@ def run_driver(args) -> dict:
     d = Path(args.dir or tempfile.mkdtemp(prefix="zkgraph_demo_"))
     d.mkdir(parents=True, exist_ok=True)
     stale = [p.name for p in (d / "owner.done", d / "v1.done",
-                              d / "v2.done", d / "equivocation.bin",
-                              d / "transparency.log") if p.exists()]
+                              d / "v2.done", d / "transparency.log")
+             if p.exists()]
     if stale:
         raise SystemExit(
             f"[driver] {d} holds artifacts from a previous run ({stale}); "
@@ -312,6 +523,7 @@ def run_driver(args) -> dict:
         except ProcessLookupError:
             pass                # already exited: restart is a plain resume
         owner.wait()
+        (d / "owner.port").unlink(missing_ok=True)   # port died with it
         print(f"[driver] owner SIGKILLed after {args.kill_after} queries",
               flush=True)
         # what a crash mid-write leaves: a torn half-record on the log tail
@@ -325,15 +537,34 @@ def run_driver(args) -> dict:
         owner_summary = _wait_done(d / "owner.done", [owner], deadline)
 
         # the malicious-owner act: fork the history (different leaf 0),
-        # sign the forked head with the REAL origin key, and gossip it
-        raw = (d / "manifest.bin").read_bytes()
+        # sign the forked head with the REAL origin key, and PUSH it to
+        # both verifiers' gossip servers — only after both have advanced,
+        # so the fork collides with verified history, not a knowledge gap
+        for name in ("v1", "v2"):
+            wait_for(d / f"{name}.advanced", deadline)
+        client = PeerClient(("127.0.0.1", read_port(d, "owner", deadline)),
+                            timeout=2.0, retries=5, backoff=0.1)
+        kind, manifest_raw = client.request(framing.REQ_MANIFEST, b"")
+        client.close()
+        assert kind == framing.RESP_MANIFEST
         fork = TransparencyLog(ORIGIN)
-        fork.append(raw + b"\xff")
-        fork.append(raw)
-        forged = gossip.emit(fork, AUTH_KEY)
-        atomic_write(d / "equivocation.bin", forged.to_bytes())
-        print("[driver] forged (signed!) fork head gossiped to verifiers",
-              flush=True)
+        fork.append(manifest_raw + b"\xff")
+        fork.append(manifest_raw)
+        forged = gossip.emit(fork, KEY)
+        alarms = {}
+        for name in ("v1", "v2"):
+            client = PeerClient(("127.0.0.1", read_port(d, name, deadline)),
+                                timeout=2.0, retries=5, backoff=0.1)
+            kind, evidence = client.request(framing.REQ_GOSSIP,
+                                            forged.to_bytes())
+            client.close()
+            alarms[name] = (kind, evidence)
+            print(f"[driver] forged (signed!) fork head pushed to {name}: "
+                  f"frame {kind:#x}", flush=True)
+        for name, (kind, evidence) in alarms.items():
+            assert kind == framing.RESP_EQUIVOCATION, \
+                f"{name} answered {kind:#x} instead of the alarm frame"
+            assert b"equivocation detected" in evidence, evidence
 
         summaries = {
             name: _wait_done(d / f"{name}.done", children[:2], deadline)
@@ -351,9 +582,9 @@ def run_driver(args) -> dict:
     assert owner_summary["tree_size"] == 2
     n_ok = sum(len(s["results"]) for s in summaries.values())
     print(f"[driver] OK: crash-recovered owner served {args.queries} "
-          f"queries; {n_ok} bundle verifications across 2 verifier "
-          f"processes; revision advanced by consistency proof; "
-          f"equivocation detected by both peers", flush=True)
+          f"queries over TCP; {n_ok} bundle verifications across 2 "
+          f"verifier processes; revision advanced by consistency proof; "
+          f"forged fork alarmed by both peers", flush=True)
     return dict(owner=owner_summary, **summaries)
 
 
@@ -366,6 +597,9 @@ def main(argv=None, n_knows=128, n_persons=24, cfg=CFG):
     ap.add_argument("--queries", type=int, default=4)
     ap.add_argument("--kill-after", type=int, default=2,
                     help="SIGKILL the owner after this many proven queries")
+    ap.add_argument("--no-faults", dest="faults", action="store_false",
+                    help="disable the deterministic frame-fault injection "
+                         "on the verifiers' owner links")
     ap.add_argument("--blowup", type=int, default=cfg.blowup)
     ap.add_argument("--n-queries", type=int, default=cfg.n_queries)
     ap.add_argument("--fri-final-size", type=int, default=cfg.fri_final_size)

@@ -1,0 +1,220 @@
+"""Ed25519 (RFC 8032) detached signatures, pure Python.
+
+PR 5's gossip layer authenticated checkpoints with a keyed sponge MAC — a
+stand-in that forced every verifier to hold the *signing* secret, so a
+verifier could forge heads and the "origin signature" modelled nothing a
+relay couldn't mint.  Real transparency fabrics (certificate transparency,
+the VeGraS-style verifiable-search logs this repo reproduces toward) sign
+checkpoints with an asymmetric key: the owner publishes a *verify* key as
+part of its identity, and no verifier ever holds the signing half.
+
+This module is a from-the-RFC implementation over ``hashlib.sha512``:
+
+* the container bakes no crypto dependency (no ``cryptography``, no
+  ``pynacl``), and the repo's hard rule is to stub or gate missing deps —
+  signing one ~60-byte checkpoint per gossip round is far below the
+  performance floor where a C backend matters (see
+  ``BENCH_transparency.json``'s ``ed25519_*_us`` rows);
+* the arithmetic is the standard twisted-Edwards group over
+  GF(2^255 - 19) in extended homogeneous coordinates, with the RFC's
+  cofactored verification equation ``[8][S]B = [8]R + [8][k]A``
+  relaxed to the (strictly stronger) unbatched ``[S]B = R + [k]A`` form
+  used by every major deployment.
+
+Strictness (what :func:`verify` rejects, beyond a wrong signature):
+
+* a scalar ``S >= L`` — the RFC 8032 malleability check, so a third party
+  cannot mint a second valid encoding of an honest signature;
+* non-canonical or off-curve point encodings for either ``R`` or the
+  public key — decoding fails closed;
+* any input of the wrong length or type — ``False``, never an exception.
+
+Like every primitive in this repo, this is a *reproduction instance*:
+faithful to the RFC and pinned by its test vectors
+(``tests/test_ed25519.py``), but not a constant-time or side-channel-
+hardened implementation.
+"""
+from __future__ import annotations
+
+import hashlib
+
+__all__ = ["PUBLIC_KEY_LEN", "SEED_LEN", "SIGNATURE_LEN", "Ed25519Error",
+           "SigningKey", "public_key", "sign", "verify"]
+
+SEED_LEN = 32           # RFC 8032: private keys are 32-byte seeds
+PUBLIC_KEY_LEN = 32     # compressed Edwards-y point
+SIGNATURE_LEN = 64      # R (32 bytes) || S (32 bytes)
+
+# field and group parameters (RFC 8032 §5.1)
+_P = 2 ** 255 - 19
+_L = 2 ** 252 + 27742317777372353535851937790883648493
+_D = (-121665 * pow(121666, _P - 2, _P)) % _P           # -121665/121666
+_I = pow(2, (_P - 1) // 4, _P)                          # sqrt(-1)
+
+# the base point B, affine (RFC 8032 §5.1: y = 4/5, x recovered even)
+_BY = (4 * pow(5, _P - 2, _P)) % _P
+
+
+class Ed25519Error(ValueError):
+    """Malformed key material handed to the signing side (wrong seed or
+    key length).  The verifying side never raises — it returns ``False``."""
+
+
+def _sha512(data: bytes) -> bytes:
+    return hashlib.sha512(data).digest()
+
+
+def _recover_x(y: int, sign_bit: int) -> int | None:
+    """x from the curve equation -x^2 + y^2 = 1 + d x^2 y^2; ``None`` if
+    ``y`` is not on the curve or the sign bit is unsatisfiable."""
+    if y >= _P:
+        return None
+    x2 = (y * y - 1) * pow(_D * y * y + 1, _P - 2, _P) % _P
+    x = pow(x2, (_P + 3) // 8, _P)
+    if (x * x - x2) % _P != 0:
+        x = x * _I % _P
+    if (x * x - x2) % _P != 0:
+        return None
+    if x == 0 and sign_bit == 1:
+        return None                 # -0 is not a canonical encoding
+    if x & 1 != sign_bit:
+        x = _P - x
+    return x
+
+
+_BX = _recover_x(_BY, 0)
+assert _BX is not None
+# extended homogeneous coordinates (X, Y, Z, T) with x=X/Z, y=Y/Z, T=XY/Z
+_B = (_BX, _BY, 1, _BX * _BY % _P)
+_IDENT = (0, 1, 1, 0)
+
+
+def _pt_add(p: tuple, q: tuple) -> tuple:
+    # add-2008-hwcd-3: complete addition on a=-1 twisted Edwards curves
+    x1, y1, z1, t1 = p
+    x2, y2, z2, t2 = q
+    a = (y1 - x1) * (y2 - x2) % _P
+    b = (y1 + x1) * (y2 + x2) % _P
+    c = 2 * t1 * _D % _P * t2 % _P
+    d = 2 * z1 * z2 % _P
+    e, f, g, h = b - a, d - c, d + c, b + a
+    return (e * f % _P, g * h % _P, f * g % _P, e * h % _P)
+
+
+def _pt_mul(s: int, p: tuple) -> tuple:
+    q = _IDENT
+    while s > 0:
+        if s & 1:
+            q = _pt_add(q, p)
+        p = _pt_add(p, p)
+        s >>= 1
+    return q
+
+
+def _pt_equal(p: tuple, q: tuple) -> bool:
+    # cross-multiply out the projective denominators
+    x1, y1, z1, _ = p
+    x2, y2, z2, _ = q
+    return (x1 * z2 - x2 * z1) % _P == 0 and (y1 * z2 - y2 * z1) % _P == 0
+
+
+def _pt_compress(p: tuple) -> bytes:
+    x, y, z, _ = p
+    zinv = pow(z, _P - 2, _P)
+    x, y = x * zinv % _P, y * zinv % _P
+    return int.to_bytes(y | ((x & 1) << 255), 32, "little")
+
+
+def _pt_decompress(raw: bytes) -> tuple | None:
+    if len(raw) != 32:
+        return None
+    enc = int.from_bytes(raw, "little")
+    y = enc & ((1 << 255) - 1)
+    x = _recover_x(y, enc >> 255)
+    if x is None:
+        return None
+    return (x, y, 1, x * y % _P)
+
+
+def _clamp(h: bytes) -> int:
+    a = int.from_bytes(h[:32], "little")
+    return (a & ((1 << 254) - 8)) | (1 << 254)
+
+
+def public_key(seed: bytes) -> bytes:
+    """The 32-byte verify key for a 32-byte seed (RFC 8032 §5.1.5)."""
+    if not isinstance(seed, (bytes, bytearray)) or len(seed) != SEED_LEN:
+        raise Ed25519Error(
+            f"Ed25519 seed must be {SEED_LEN} bytes, got "
+            f"{len(seed) if isinstance(seed, (bytes, bytearray)) else type(seed).__name__}")
+    return _pt_compress(_pt_mul(_clamp(_sha512(bytes(seed))), _B))
+
+
+def sign(seed: bytes, message: bytes) -> bytes:
+    """RFC 8032 §5.1.6 detached signature (64 bytes) over ``message``.
+
+    Deterministic — no ambient randomness enters the proof-adjacent path
+    (the nonce is the RFC's hash of the seed prefix and the message)."""
+    if not isinstance(seed, (bytes, bytearray)) or len(seed) != SEED_LEN:
+        raise Ed25519Error(f"Ed25519 seed must be {SEED_LEN} bytes")
+    message = bytes(message)
+    h = _sha512(bytes(seed))
+    a = _clamp(h)
+    pk = _pt_compress(_pt_mul(a, _B))
+    r = int.from_bytes(_sha512(h[32:] + message), "little") % _L
+    r_enc = _pt_compress(_pt_mul(r, _B))
+    k = int.from_bytes(_sha512(r_enc + pk + message), "little") % _L
+    s = (r + k * a) % _L
+    return r_enc + int.to_bytes(s, 32, "little")
+
+
+def verify(pub: bytes, message: bytes, signature: bytes) -> bool:
+    """RFC 8032 §5.1.7 verification: ``False`` on *any* defect — wrong
+    length, non-canonical ``S`` (malleability), off-curve points, or a
+    signature that simply does not check.  Never raises."""
+    try:
+        if not isinstance(pub, (bytes, bytearray)) \
+                or not isinstance(signature, (bytes, bytearray)):
+            return False
+        pub, signature = bytes(pub), bytes(signature)
+        if len(pub) != PUBLIC_KEY_LEN or len(signature) != SIGNATURE_LEN:
+            return False
+        a_pt = _pt_decompress(pub)
+        r_pt = _pt_decompress(signature[:32])
+        if a_pt is None or r_pt is None:
+            return False
+        s = int.from_bytes(signature[32:], "little")
+        if s >= _L:
+            return False            # RFC 8032 malleability rejection
+        k = int.from_bytes(
+            _sha512(signature[:32] + pub + bytes(message)), "little") % _L
+        return _pt_equal(_pt_mul(s, _B), _pt_add(r_pt, _pt_mul(k, a_pt)))
+    except (TypeError, ValueError):
+        return False
+
+
+class SigningKey:
+    """A seed plus its derived verify key, for call sites that sign more
+    than once (the public-key derivation is the expensive half).
+
+    ``SigningKey.from_secret(b"...")`` derives a seed from arbitrary secret
+    bytes via SHA-512 — the deterministic path demos and tests use so key
+    material never depends on ambient randomness."""
+
+    __slots__ = ("seed", "pub")
+
+    def __init__(self, seed: bytes):
+        if not isinstance(seed, (bytes, bytearray)) \
+                or len(seed) != SEED_LEN:
+            raise Ed25519Error(f"Ed25519 seed must be {SEED_LEN} bytes")
+        self.seed = bytes(seed)
+        self.pub = public_key(self.seed)
+
+    @classmethod
+    def from_secret(cls, secret: bytes) -> "SigningKey":
+        if not isinstance(secret, (bytes, bytearray)) or not secret:
+            raise Ed25519Error("secret must be non-empty bytes")
+        return cls(_sha512(bytes(secret))[:SEED_LEN])
+
+    def sign(self, message: bytes) -> bytes:
+        return sign(self.seed, message)

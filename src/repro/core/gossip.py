@@ -6,11 +6,12 @@ shown a private fork forever.  This module is the comparing-notes layer (the
 gossip protocol certificate-transparency deployments and transparency-backed
 verifiable-search systems assume):
 
-* a :class:`GossipMessage` — a wire-codable (payload kind 8,
-  ``docs/protocol.md`` §9) envelope carrying a signed-origin
+* a :class:`GossipMessage` — a wire-codable (payload kind 9,
+  ``docs/protocol.md`` §10) envelope carrying an Ed25519-signed
   :class:`~repro.core.transparency.Checkpoint`, an optional
   :class:`~repro.core.transparency.ConsistencyProof` linking it to an older
-  head, and the origin's authenticator over the checkpoint bytes;
+  head, the signer's 32-byte verify key, and the 64-byte detached signature
+  over the canonical checkpoint bytes;
 * a :class:`GossipPeer` — the verifier-side state machine.  It pins the
   freshest checkpoint it has *verified consistent* with everything it has
   ever seen, **demands a consistency proof** before advancing across a
@@ -19,15 +20,17 @@ verifiable-search systems assume):
   checkpoints as evidence when two heads for the same tree size disagree or
   an offered extension fails its consistency proof.
 
-The authenticator is a keyed sponge MAC over the canonical checkpoint bytes
-(``hash_bytes(0x02 || key || checkpoint_bytes)`` — domain-separated from the
-log's ``0x00`` leaf hash; §9).  It stands in for the log operator's
-signature: this repo's hash is a reproduction instance, not an audited
-signature scheme, but the *protocol shape* — origin-bound heads a relay
-cannot forge without the origin key — is the real one.
+The signature is an Ed25519 (RFC 8032, :mod:`repro.core.ed25519`) detached
+signature over ``0x03 || checkpoint_bytes`` — domain-separated from the
+log's ``0x00`` leaf hash and the retired v2 MAC's ``0x02`` prefix (§10).
+The owner holds the 32-byte seed; verifiers pin only the *verify* key
+published alongside the manifest/log origin, so no verifier can mint a head
+and a relay cannot substitute its own.  The MAC-era kind-8 envelope is
+retired: :func:`repro.core.wire.decode_gossip_message` rejects it by name.
 
 Owner side: :func:`emit` builds the signed message straight from a
-:class:`TransparencyLog` (durable or in-process).  Verifier side:
+:class:`TransparencyLog` (durable or in-process) and a
+:class:`~repro.core.ed25519.SigningKey`.  Verifier side:
 ``GossipPeer.offer`` consumes messages from any source — the owner, another
 verifier relaying (:meth:`GossipPeer.head_message`), or hostile bytes via
 :func:`repro.core.wire.decode_gossip_message`.
@@ -35,15 +38,14 @@ verifier relaying (:meth:`GossipPeer.head_message`), or hostile bytes via
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import numpy as np
 
-from . import hashing as H
-from . import wire
+from . import ed25519, wire
 from .transparency import Checkpoint, ConsistencyProof, verify_consistency
 
-_AUTH_PREFIX = b"\x02"          # domain-separates the MAC from leaf hashes
+_SIG_PREFIX = b"\x03"   # domain-separates signatures from leaf hashes (0x00)
+                        # and the retired v2 MAC (0x02)
 
 __all__ = ["ConsistencyRequired", "EquivocationError", "GossipError",
            "GossipMessage", "GossipPeer", "emit", "sign_checkpoint",
@@ -52,7 +54,7 @@ __all__ = ["ConsistencyRequired", "EquivocationError", "GossipError",
 
 class GossipError(ValueError):
     """A gossip offer was rejected before touching the peer's head: wrong
-    origin, missing/bad authenticator, or an empty (size-0) head."""
+    origin, wrong signer, bad signature, or an empty (size-0) head."""
 
 
 class ConsistencyRequired(GossipError):
@@ -87,24 +89,23 @@ def _hex8(root) -> str:
 
 
 # ---------------------------------------------------------------------------
-# origin authentication (keyed sponge MAC over canonical checkpoint bytes)
+# origin authentication (Ed25519 over canonical checkpoint bytes)
 # ---------------------------------------------------------------------------
-def sign_checkpoint(key: bytes, cp: Checkpoint) -> np.ndarray:
-    """(8,) uint32 authenticator binding ``cp`` to the origin key."""
-    if not isinstance(key, (bytes, bytearray)) or not key:
-        raise GossipError("origin key must be non-empty bytes")
-    return H.hash_bytes(_AUTH_PREFIX + bytes(key) + cp.to_bytes())
+def sign_checkpoint(key: ed25519.SigningKey, cp: Checkpoint) -> bytes:
+    """64-byte detached signature binding ``cp`` to the origin identity."""
+    if not isinstance(key, ed25519.SigningKey):
+        raise GossipError(
+            f"checkpoint signing needs an ed25519.SigningKey, got "
+            f"{type(key).__name__}")
+    return key.sign(_SIG_PREFIX + cp.to_bytes())
 
 
-def verify_signature(key: bytes, cp: Checkpoint, auth) -> bool:
-    """Constant-shape check; ``False`` on any mismatch, never an
-    exception (hostile ``auth`` shapes included)."""
+def verify_signature(signer: bytes, cp: Checkpoint, signature: bytes) -> bool:
+    """``False`` on any defect — wrong signer, wrong lengths, tampered
+    checkpoint or signature — never an exception (hostile inputs included)."""
     try:
-        got = np.asarray(auth, np.uint32)
-        if got.shape != (8,):
-            return False
-        return bool(np.array_equal(got, sign_checkpoint(key, cp)))
-    except (GossipError, ValueError, TypeError):
+        return ed25519.verify(signer, _SIG_PREFIX + cp.to_bytes(), signature)
+    except (ValueError, TypeError):
         return False
 
 
@@ -117,8 +118,9 @@ class GossipMessage:
     older head by a consistency proof (required to advance a peer whose
     pinned head is older)."""
     checkpoint: Checkpoint
-    consistency: Optional[ConsistencyProof]     # None: bootstrap offer
-    auth: np.ndarray                            # (8,) uint32 origin MAC
+    consistency: ConsistencyProof | None    # None: bootstrap offer
+    signer: bytes                           # 32-byte Ed25519 verify key
+    signature: bytes                        # 64-byte detached signature
 
     def to_bytes(self) -> bytes:
         return wire.encode_gossip_message(self)
@@ -128,7 +130,8 @@ class GossipMessage:
         return wire.decode_gossip_message(raw)
 
 
-def emit(log, key: bytes, since: int = None) -> GossipMessage:
+def emit(log, key: ed25519.SigningKey, since: int | None = None) \
+        -> GossipMessage:
     """Owner side: the signed gossip message for ``log``'s current head.
 
     ``since`` attaches the consistency proof from that older tree size, so
@@ -138,7 +141,7 @@ def emit(log, key: bytes, since: int = None) -> GossipMessage:
     proof = None
     if since is not None:
         proof = log.consistency_proof(int(since), cp.tree_size)
-    return GossipMessage(cp, proof, sign_checkpoint(key, cp))
+    return GossipMessage(cp, proof, key.pub, sign_checkpoint(key, cp))
 
 
 # ---------------------------------------------------------------------------
@@ -147,18 +150,30 @@ def emit(log, key: bytes, since: int = None) -> GossipMessage:
 class GossipPeer:
     """Verifier-side gossip state: origin-pinned, equivocation-alarmed.
 
+    ``signer`` is the origin's published Ed25519 verify key — every offer
+    must both *name* that key in its envelope and carry a signature that
+    checks against it, so a relay can neither substitute its own head nor
+    re-sign someone else's.  ``signer=None`` trusts the transport (tests
+    and pre-authenticated channels only).
+
     The peer remembers every ``tree_size -> root`` it has verified
     (``seen``), so a *stale* replay that contradicts history is caught just
     like a conflicting fresh head.  ``offer`` returns ``True`` when the
     pinned head advanced, ``False`` for duplicates and ignorable stale
     offers, and raises on everything that must not be silent."""
 
-    def __init__(self, origin: str, auth_key: bytes = None):
+    def __init__(self, origin: str, signer: bytes | None = None):
+        if signer is not None:
+            signer = bytes(signer)
+            if len(signer) != ed25519.PUBLIC_KEY_LEN:
+                raise GossipError(
+                    f"gossip signer key must be {ed25519.PUBLIC_KEY_LEN} "
+                    f"bytes, got {len(signer)}")
         self.origin = origin
-        self.auth_key = auth_key        # None: transport is pre-authenticated
-        self.head: Optional[Checkpoint] = None
+        self.signer = signer            # None: transport is pre-authenticated
+        self.head: Checkpoint | None = None
         self.seen: dict = {}            # tree_size -> (8,) root, verified
-        self._head_msg: Optional[GossipMessage] = None
+        self._head_msg: GossipMessage | None = None
 
     @property
     def pinned(self) -> Checkpoint:
@@ -170,7 +185,7 @@ class GossipPeer:
 
     def head_message(self) -> GossipMessage:
         """The accepted message for this peer's head, for relaying to other
-        peers verbatim — the origin's authenticator travels with it, so a
+        peers verbatim — the origin's signature travels with it, so a
         relay cannot substitute its own head."""
         if self._head_msg is None:
             raise GossipError(
@@ -185,10 +200,15 @@ class GossipPeer:
                 f"pinned on {self.origin!r}")
         if cp.tree_size < 1:
             raise GossipError("an empty (size-0) checkpoint pins nothing")
-        if self.auth_key is not None and not verify_signature(
-                self.auth_key, cp, msg.auth):
-            raise GossipError(
-                f"checkpoint @{cp.tree_size} failed origin authentication")
+        if self.signer is not None:
+            if bytes(msg.signer) != self.signer:
+                raise GossipError(
+                    f"checkpoint @{cp.tree_size} signed by an unexpected "
+                    f"key (not the pinned origin identity)")
+            if not verify_signature(self.signer, cp, msg.signature):
+                raise GossipError(
+                    f"checkpoint @{cp.tree_size} failed origin signature "
+                    f"verification")
         known = self.seen.get(int(cp.tree_size))
         if known is not None and not np.array_equal(known, cp.root):
             # split view: two roots for one tree size — stale or fresh,

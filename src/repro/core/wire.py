@@ -53,8 +53,9 @@ import struct
 import numpy as np
 
 MAGIC = b"ZKGB"
-WIRE_VERSION = 2     # v2: bundles carry the manifest digest they were
-                     # proven against; manifest/checkpoint payloads added
+WIRE_VERSION = 3     # v3: gossip envelopes carry Ed25519 detached
+                     # signatures (kind 9); the v2 MAC-era envelope
+                     # (kind 8) is retired and rejected by name
 
 # payload kinds (a message's top-level type)
 KIND_BUNDLE = 1
@@ -64,7 +65,8 @@ KIND_MANIFEST = 4
 KIND_CHECKPOINT = 5
 KIND_INCLUSION = 6
 KIND_CONSISTENCY = 7
-KIND_GOSSIP = 8      # additive in v2: old payloads remain valid
+_KIND_GOSSIP_MAC_RETIRED = 8    # v2 MAC-era envelope; never decoded again
+KIND_GOSSIP = 9      # v3 signed envelope (Ed25519 over checkpoint bytes)
 
 # hard caps: a malformed length prefix can never trigger a large allocation
 MAX_STR = 4096
@@ -98,7 +100,13 @@ _F_M_VERSION, _F_M_NNODES, _F_M_EDGES, _F_M_TABLES, _F_M_ROOTS = \
 _F_C_ORIGIN, _F_C_SIZE, _F_C_ROOT = 0x50, 0x51, 0x52
 _F_I_INDEX, _F_I_SIZE, _F_I_PATH = 0x60, 0x61, 0x62
 _F_Y_OLD, _F_Y_NEW, _F_Y_PATH = 0x70, 0x71, 0x72
-_F_G_CHECKPOINT, _F_G_CONSIST, _F_G_AUTH = 0x80, 0x81, 0x82
+_F_G_CHECKPOINT, _F_G_CONSIST = 0x80, 0x81
+# 0x82 was the v2 MAC authenticator; retired with kind 8, never reused
+_F_G_SIGNER, _F_G_SIG = 0x83, 0x84
+
+# Ed25519 material carried by the signed gossip envelope (raw, fixed-width)
+SIGNER_LEN = 32      # compressed Edwards verify key (repro.core.ed25519)
+SIG_LEN = 64         # detached signature R || S
 
 _DTYPES = {0: np.dtype("<u4"), 1: np.dtype("<i8")}
 _DTYPE_CODE = {np.dtype(np.uint32): 0, np.dtype(np.int64): 1}
@@ -563,6 +571,10 @@ def _check_header(d: _Dec, kind: int):
             f"unsupported wire version {version} (this verifier speaks "
             f"{WIRE_VERSION})")
     got = d.u8()
+    if got == _KIND_GOSSIP_MAC_RETIRED:
+        raise WireFormatError(
+            "payload kind 8 is the retired MAC-era gossip envelope; "
+            "checkpoints are Ed25519-signed since wire v3 (kind 9)")
     if got != kind:
         raise WireFormatError(f"payload kind {got} != expected {kind}")
 
@@ -954,7 +966,7 @@ def decode_consistency_proof(raw: bytes):
 
 
 # ---------------------------------------------------------------------------
-# gossip envelope (kind 8): signed checkpoint + optional consistency proof
+# gossip envelope (kind 9): Ed25519-signed checkpoint + optional consistency
 # ---------------------------------------------------------------------------
 def _embed(e: _Enc, raw: bytes, what: str):
     """A complete inner wire message, length-prefixed.  Nesting whole
@@ -987,12 +999,18 @@ def encode_gossip_message(msg) -> bytes:
     else:
         e.u8(1)
         _embed(e, encode_consistency_proof(msg.consistency), "consistency")
-    e.u8(_F_G_AUTH)
-    auth = np.asarray(msg.auth)
-    if auth.shape != (8,):
+    e.u8(_F_G_SIGNER)
+    signer = bytes(msg.signer)
+    if len(signer) != SIGNER_LEN:
         raise WireFormatError(
-            f"gossip auth must be an (8,) digest, got shape {auth.shape}")
-    e.array(auth, dtype=np.uint32, ndim=1)
+            f"gossip signer must be {SIGNER_LEN} bytes, got {len(signer)}")
+    e.buf += signer
+    e.u8(_F_G_SIG)
+    signature = bytes(msg.signature)
+    if len(signature) != SIG_LEN:
+        raise WireFormatError(
+            f"gossip signature must be {SIG_LEN} bytes, got {len(signature)}")
+    e.buf += signature
     return bytes(e.buf)
 
 
@@ -1013,7 +1031,9 @@ def decode_gossip_message(raw: bytes):
     consistency = None
     if flag:
         consistency = decode_consistency_proof(_unembed(d, "consistency"))
-    d.tag(_F_G_AUTH, "gossip.auth")
-    auth = d.array(dtype=np.uint32, ndim=1, shape=(8,))
+    d.tag(_F_G_SIGNER, "gossip.signer")
+    signer = d.take(SIGNER_LEN)
+    d.tag(_F_G_SIG, "gossip.signature")
+    signature = d.take(SIG_LEN)
     d.done()
-    return GossipMessage(checkpoint, consistency, auth)
+    return GossipMessage(checkpoint, consistency, signer, signature)

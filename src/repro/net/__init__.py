@@ -1,0 +1,29 @@
+"""Networked transparency fabric: a length-prefixed framed socket transport
+(`docs/protocol.md` §10) carrying gossip heads, checkpoint/consistency
+fetches, and :class:`~repro.core.session.ProofBundle` delivery between
+owner and verifier processes.
+
+Blocking-IO threads, matching the `repro.serve` threading model: a
+:class:`~repro.net.server.NetServer` runs one accept loop plus one thread
+per connection; a :class:`~repro.net.peer.PeerClient` issues typed
+request/response frames with explicit timeouts, bounded retry with
+backoff + deterministic jitter, and a per-peer circuit breaker so a dead
+peer fails fast (:class:`~repro.net.peer.PeerUnavailable`) instead of
+wedging its caller.  Hostile bytes fail closed through
+:class:`~repro.net.framing.FrameError`, a
+:class:`~repro.core.wire.WireFormatError` subclass.
+
+:mod:`repro.net.faults` is the deterministic in-process fault-injection
+harness (drop/duplicate/reorder/truncate/corrupt frames, frozen-peer
+stalls, connection kills) the adversarial suite drives.
+"""
+from .framing import (FrameError, ConnectionClosed, MAX_FRAME, NET_MAGIC,
+                      NET_VERSION, encode_frame, recv_frame, send_frame)
+from .peer import (CircuitOpen, NetError, PeerClient, PeerUnavailable,
+                   RemoteError)
+from .server import NetServer
+
+__all__ = ["CircuitOpen", "ConnectionClosed", "FrameError", "MAX_FRAME",
+           "NET_MAGIC", "NET_VERSION", "NetError", "NetServer", "PeerClient",
+           "PeerUnavailable", "RemoteError", "encode_frame", "recv_frame",
+           "send_frame"]

@@ -1,0 +1,197 @@
+"""Deterministic in-process fault injection for the framed transport.
+
+A :class:`FaultProxy` is a tiny frame-aware TCP proxy that sits between a
+:class:`~repro.net.peer.PeerClient` and a
+:class:`~repro.net.server.NetServer` and misbehaves *on schedule*: each
+frame it forwards (in either direction) consumes the next action from a
+shared script, so an adversarial test states exactly which frame gets
+dropped, duplicated, reordered, truncated, corrupted, stalled, or has its
+connection killed — and replays identically every run.  Randomness (the
+corrupt action's byte position) comes from a seeded :class:`random.Random`.
+
+Actions:
+
+========== ==============================================================
+``pass``    forward the frame unchanged (also the default after the
+            script is exhausted)
+``drop``    swallow the frame: the other side sees silence, then timeout
+``dup``     forward the frame twice (a retransmit / confused relay)
+``reorder`` hold the frame; forward it *after* the next frame in the
+            same direction
+``truncate`` forward only the first half of the frame's bytes, then kill
+            both directions — a connection dying mid-frame
+``corrupt`` flip one payload byte (header left intact so the corruption
+            reaches the payload codec, which must fail closed)
+``stall``   sleep ``stall_seconds`` (sized beyond the client timeout)
+            before forwarding — the frozen-peer scenario
+``close``   kill both directions immediately, before forwarding — a
+            mid-handshake death
+========== ==============================================================
+
+Every action must end, on the client side, in a typed error or a clean
+fallback (`tests/test_net_faults.py` asserts this frame by frame): the
+transport's contract is *no hang, no acceptance of damaged bytes*.
+"""
+from __future__ import annotations
+
+import contextlib
+import random
+import socket
+import threading
+from collections import deque
+from collections.abc import Iterable, Iterator
+
+from . import framing
+
+ACTIONS = frozenset({"pass", "drop", "dup", "reorder", "truncate",
+                     "corrupt", "stall", "close"})
+
+
+class FaultProxy:
+    """A misbehaving hop between one client and one upstream server."""
+
+    def __init__(self, upstream: tuple[str, int],
+                 script: Iterable[str] = (), stall_seconds: float = 1.0,
+                 seed: int = 0, host: str = "127.0.0.1"):
+        script = list(script)
+        unknown = set(script) - ACTIONS
+        if unknown:
+            raise ValueError(f"unknown fault actions: {sorted(unknown)}")
+        self.upstream = (upstream[0], int(upstream[1]))
+        self.stall_seconds = stall_seconds
+        self.host = host
+        self.port = 0
+        self._script: deque[str] = deque(script)
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+        self._stopping = threading.Event()
+        self._listener: socket.socket | None = None
+        self._accept_thread: threading.Thread | None = None
+        self._socks: set[socket.socket] = set()
+        self.frames_seen = 0
+
+    def extend_script(self, actions: Iterable[str]) -> None:
+        """Append actions (thread-safe) — lets a test schedule the next
+        fault while the transport is live."""
+        actions = list(actions)
+        unknown = set(actions) - ACTIONS
+        if unknown:
+            raise ValueError(f"unknown fault actions: {sorted(unknown)}")
+        with self._lock:
+            self._script.extend(actions)
+
+    def _next_action(self) -> str:
+        with self._lock:
+            self.frames_seen += 1
+            return self._script.popleft() if self._script else "pass"
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> tuple[str, int]:
+        listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        listener.bind((self.host, 0))
+        listener.listen(8)
+        listener.settimeout(0.2)
+        self._listener = listener
+        self.port = listener.getsockname()[1]
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="fault-proxy", daemon=True)
+        self._accept_thread.start()
+        return (self.host, self.port)
+
+    def stop(self) -> None:
+        self._stopping.set()
+        if self._listener is not None:
+            with contextlib.suppress(OSError):
+                self._listener.close()
+        with self._lock:
+            socks = list(self._socks)
+        for s in socks:
+            with contextlib.suppress(OSError):
+                s.close()
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5.0)
+            self._accept_thread = None
+        self._listener = None
+
+    @contextlib.contextmanager
+    def serving(self) -> Iterator[tuple[str, int]]:
+        addr = self.start()
+        try:
+            yield addr
+        finally:
+            self.stop()
+
+    # -- pumping ------------------------------------------------------------
+    def _accept_loop(self) -> None:
+        listener = self._listener
+        assert listener is not None     # started before the thread spawns
+        while not self._stopping.is_set():
+            try:
+                client, _ = listener.accept()
+            except TimeoutError:
+                continue
+            except OSError:
+                return
+            try:
+                server = socket.create_connection(self.upstream, timeout=5.0)
+            except OSError:
+                with contextlib.suppress(OSError):
+                    client.close()
+                continue
+            for s in (client, server):
+                s.settimeout(30.0)
+                with self._lock:
+                    self._socks.add(s)
+            for src, dst in ((client, server), (server, client)):
+                threading.Thread(target=self._pump, args=(src, dst),
+                                 name="fault-pump", daemon=True).start()
+
+    def _kill_pair(self, a: socket.socket, b: socket.socket) -> None:
+        for s in (a, b):
+            with contextlib.suppress(OSError):
+                s.close()
+            with self._lock:
+                self._socks.discard(s)
+
+    def _pump(self, src: socket.socket, dst: socket.socket) -> None:
+        held: bytes | None = None       # a reordered frame awaiting release
+        try:
+            while not self._stopping.is_set():
+                try:
+                    kind, payload = framing.recv_frame(src)
+                except (framing.FrameError, TimeoutError, OSError):
+                    return self._kill_pair(src, dst)
+                raw = framing.encode_frame(kind, payload)
+                action = self._next_action()
+                if action == "drop":
+                    continue
+                if action == "close":
+                    return self._kill_pair(src, dst)
+                if action == "stall":
+                    # hold the frame beyond the client's timeout budget,
+                    # checking for shutdown so stop() never waits on us
+                    self._stopping.wait(self.stall_seconds)
+                if action == "truncate":
+                    with contextlib.suppress(OSError):
+                        dst.sendall(raw[: max(1, len(raw) // 2)])
+                    return self._kill_pair(src, dst)
+                if action == "corrupt" and payload:
+                    flip = self._rng.randrange(len(payload))
+                    body = bytearray(raw)
+                    body[framing._HEADER.size + flip] ^= 0x20
+                    raw = bytes(body)
+                out = [raw, raw] if action == "dup" else [raw]
+                if action == "reorder" and held is None:
+                    held = raw
+                    continue
+                if held is not None:
+                    out.append(held)    # released *after* this frame
+                    held = None
+                try:
+                    for frame in out:
+                        dst.sendall(frame)
+                except OSError:
+                    return self._kill_pair(src, dst)
+        finally:
+            self._kill_pair(src, dst)

@@ -1,0 +1,129 @@
+"""Length-prefixed frame codec for the socket transport (protocol.md §10).
+
+One frame is one complete message::
+
+    frame := NET_MAGIC(4) net_version:u8 frame_kind:u8 length:u32 payload
+
+All integers little-endian, matching :mod:`repro.core.wire`.  The payload
+of a transparency frame (``RESP_HEAD``, ``RESP_MANIFEST``, ...) is itself a
+complete canonical wire message, so the byte-level trust boundary is the
+existing one: the transport adds framing, never interpretation.
+
+Fail-closed rules, mirroring the wire codec:
+
+* a length prefix above :data:`MAX_FRAME` raises :class:`FrameError`
+  *before* any allocation — a hostile peer cannot ask a verifier to
+  buffer gigabytes;
+* bad magic, an unknown version, or a connection closed mid-frame raise
+  :class:`FrameError` (a :class:`~repro.core.wire.WireFormatError`
+  subclass, so every existing except-path that fails closed on malformed
+  proof bytes fails closed on malformed transport bytes too);
+* a connection closed cleanly *between* frames raises
+  :class:`ConnectionClosed` — the one shutdown a server loop treats as
+  normal rather than hostile.
+
+Socket timeouts are left to propagate (``TimeoutError``): the caller — a
+:class:`~repro.net.peer.PeerClient` retry loop or a
+:class:`~repro.net.server.NetServer` connection thread — owns the budget.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+
+from repro.core.wire import WireFormatError
+
+NET_MAGIC = b"ZKGF"
+NET_VERSION = 1
+MAX_FRAME = 1 << 26     # 64 MiB: comfortably above any ProofBundle, far
+                        # below anything that could wedge a verifier
+
+_HEADER = struct.Struct("<4sBBI")
+
+# frame kinds: requests (odd jobs a peer can ask) and responses
+REQ_PING = 0x01         # liveness probe; empty payload
+RESP_PONG = 0x02
+REQ_HEAD = 0x03         # latest signed head; empty payload
+RESP_HEAD = 0x04        # payload: kind-9 gossip message bytes
+REQ_MANIFEST = 0x05     # empty payload
+RESP_MANIFEST = 0x06    # payload: kind-4 manifest bytes
+REQ_INCLUSION = 0x07    # empty payload (manifest leaf under current head)
+RESP_INCLUSION = 0x08   # payload: kind-6 inclusion-proof bytes
+REQ_CONSISTENCY = 0x09  # payload: old tree size, u64 LE
+RESP_CONSISTENCY = 0x0A  # payload: gossip bytes carrying the linking proof
+REQ_BUNDLE = 0x0B       # payload: serving-queue cursor, u64 LE
+RESP_BUNDLE = 0x0C      # payload: kind-1 proof-bundle bytes
+RESP_PENDING = 0x0D     # no bundle at that cursor yet; empty payload
+REQ_GOSSIP = 0x0E       # push a head; payload: kind-9 gossip bytes
+RESP_ACK = 0x0F
+RESP_EQUIVOCATION = 0x10  # payload: utf-8 evidence text; the alarm frame
+RESP_ERROR = 0x11       # payload: utf-8 error text (typed failure, not RST)
+
+FRAME_KINDS = frozenset(range(REQ_PING, RESP_ERROR + 1))
+
+
+class FrameError(WireFormatError):
+    """Malformed transport bytes: bad magic, version skew, an oversized
+    length prefix, an unknown frame kind, or a connection that died
+    mid-frame.  Subclasses :class:`WireFormatError` so transport-level
+    hostility fails closed through the same paths as payload-level."""
+
+
+class ConnectionClosed(FrameError):
+    """The peer closed the connection at a frame boundary — orderly EOF,
+    distinct from mid-frame truncation."""
+
+
+def encode_frame(kind: int, payload: bytes) -> bytes:
+    """The canonical bytes of one frame; raises :class:`FrameError` on an
+    unknown kind or oversized payload (the sender obeys the same caps the
+    receiver enforces)."""
+    if kind not in FRAME_KINDS:
+        raise FrameError(f"unknown frame kind {kind:#x}")
+    payload = bytes(payload)
+    if len(payload) > MAX_FRAME:
+        raise FrameError(
+            f"frame payload {len(payload)} bytes exceeds cap {MAX_FRAME}")
+    return _HEADER.pack(NET_MAGIC, NET_VERSION, kind, len(payload)) + payload
+
+
+def send_frame(sock: socket.socket, kind: int, payload: bytes) -> None:
+    sock.sendall(encode_frame(kind, payload))
+
+
+def _recv_exact(sock: socket.socket, n: int, *, at_boundary: bool) -> bytes:
+    chunks = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 16))
+        if not chunk:
+            if at_boundary and got == 0:
+                raise ConnectionClosed("peer closed the connection")
+            raise FrameError(
+                f"connection closed mid-frame: wanted {n} bytes, got {got}")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def recv_frame(sock: socket.socket) -> tuple[int, bytes]:
+    """Read exactly one frame; ``(kind, payload)``.
+
+    Raises :class:`ConnectionClosed` on orderly EOF, :class:`FrameError`
+    on anything malformed, and lets the socket's own timeout propagate."""
+    header = _recv_exact(sock, _HEADER.size, at_boundary=True)
+    magic, version, kind, length = _HEADER.unpack(header)
+    if magic != NET_MAGIC:
+        raise FrameError(
+            f"bad frame magic {magic!r}: not a zkgraph transport frame")
+    if version != NET_VERSION:
+        raise FrameError(
+            f"unsupported transport version {version} (this peer speaks "
+            f"{NET_VERSION})")
+    if kind not in FRAME_KINDS:
+        raise FrameError(f"unknown frame kind {kind:#x}")
+    if length > MAX_FRAME:
+        raise FrameError(
+            f"frame length {length} exceeds cap {MAX_FRAME}")
+    payload = _recv_exact(sock, length, at_boundary=False) if length else b""
+    return kind, payload

@@ -1,0 +1,174 @@
+"""Typed framed RPC client with retry, backoff + jitter, and a circuit
+breaker — the verifier's side of the transport.
+
+Failure taxonomy (all subclass :class:`NetError`, itself a ``ValueError``
+sibling of the wire errors, never a bare socket exception):
+
+* :class:`RemoteError` — the peer *answered* with a typed
+  :data:`~repro.net.framing.RESP_ERROR` frame.  The transport worked; the
+  request was refused.  Not retried, does not count against the breaker.
+* :class:`PeerUnavailable` — the transport failed after every allowed
+  attempt (connect refused, timeout, truncated frame, dead socket).  The
+  caller falls back — a gossip verifier keeps serving from its last
+  pinned head, exactly the degradation the transparency design allows.
+* :class:`CircuitOpen` — a :class:`PeerUnavailable` raised *instantly*
+  because recent failures opened this peer's breaker: no socket is
+  touched, so one dead peer costs its callers microseconds, not
+  timeout-seconds, per request.
+
+The breaker is the classic three-state machine: CLOSED counts consecutive
+transport failures; at ``fail_threshold`` it OPENs for ``cooldown``
+seconds, failing fast; the first request after cooldown is the HALF_OPEN
+probe — success re-CLOSEs, failure re-OPENs.  Retry backoff is
+exponential with deterministic jitter from a seeded
+:class:`random.Random`, so adversarial tests replay byte-identical
+schedules (no ambient randomness, same rule as the proof path).
+"""
+from __future__ import annotations
+
+import contextlib
+import random
+import socket
+import time
+
+from . import framing
+
+CLOSED, OPEN, HALF_OPEN = "closed", "open", "half-open"
+
+
+class NetError(ValueError):
+    """Base of every typed transport failure a :class:`PeerClient` raises."""
+
+
+class RemoteError(NetError):
+    """The peer processed the request and refused it (RESP_ERROR frame)."""
+
+
+class PeerUnavailable(NetError):
+    """Every allowed transport attempt failed; the caller should degrade
+    (serve from the last pinned head), not hang or crash."""
+
+
+class CircuitOpen(PeerUnavailable):
+    """Failing fast: the breaker is open from recent failures, no socket
+    was touched.  Retry after the cooldown elapses."""
+
+
+class PeerClient:
+    """One peer's framed RPC endpoint: ``request(kind, payload)``.
+
+    The connection persists across requests and reconnects transparently;
+    every attempt is bounded by ``timeout`` seconds of socket inactivity,
+    retries are bounded by ``retries``, and the circuit breaker bounds how
+    often a dead peer is even attempted.  Not thread-safe — one client per
+    calling thread, like a socket."""
+
+    def __init__(self, addr: tuple[str, int], timeout: float = 5.0,
+                 retries: int = 3, backoff: float = 0.05,
+                 fail_threshold: int = 3, cooldown: float = 1.0,
+                 jitter_seed: int = 0):
+        self.addr = (addr[0], int(addr[1]))
+        self.timeout = timeout
+        self.retries = max(1, int(retries))
+        self.backoff = backoff
+        self.fail_threshold = max(1, int(fail_threshold))
+        self.cooldown = cooldown
+        self._rng = random.Random(jitter_seed)
+        self._sock: socket.socket | None = None
+        self._state = CLOSED
+        self._consecutive_failures = 0
+        self._opened_at = 0.0
+
+    # -- breaker ------------------------------------------------------------
+    @property
+    def state(self) -> str:
+        """Breaker state, cooldown-aware: OPEN reads as HALF_OPEN once the
+        cooldown has elapsed and a probe would be allowed through."""
+        if self._state == OPEN and \
+                time.monotonic() - self._opened_at >= self.cooldown:
+            return HALF_OPEN
+        return self._state
+
+    def _breaker_admit(self) -> None:
+        if self._state != OPEN:
+            return
+        remaining = self.cooldown - (time.monotonic() - self._opened_at)
+        if remaining > 0:
+            raise CircuitOpen(
+                f"peer {self.addr[0]}:{self.addr[1]} circuit open after "
+                f"{self._consecutive_failures} consecutive failures; "
+                f"probe allowed in {remaining:.2f}s")
+        self._state = HALF_OPEN            # one probe request goes through
+
+    def _breaker_success(self) -> None:
+        self._state = CLOSED
+        self._consecutive_failures = 0
+
+    def _breaker_failure(self) -> None:
+        self._consecutive_failures += 1
+        if self._state == HALF_OPEN or \
+                self._consecutive_failures >= self.fail_threshold:
+            self._state = OPEN
+            self._opened_at = time.monotonic()
+
+    # -- transport ----------------------------------------------------------
+    def _connected(self) -> socket.socket:
+        if self._sock is None:
+            sock = socket.create_connection(self.addr, timeout=self.timeout)
+            sock.settimeout(self.timeout)
+            self._sock = sock
+        return self._sock
+
+    def _drop_connection(self) -> None:
+        if self._sock is not None:
+            with contextlib.suppress(OSError):
+                self._sock.close()
+            self._sock = None
+
+    def close(self) -> None:
+        self._drop_connection()
+
+    def __enter__(self) -> "PeerClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def request(self, kind: int, payload: bytes) -> tuple[int, bytes]:
+        """One RPC: send a frame, return the response ``(kind, payload)``.
+
+        Retries transport failures with exponential backoff + seeded
+        jitter; raises :class:`RemoteError` on a typed refusal,
+        :class:`PeerUnavailable` when the peer stays unreachable, and
+        :class:`CircuitOpen` (without touching the network) while the
+        breaker cools down."""
+        self._breaker_admit()
+        last: Exception | None = None
+        for attempt in range(self.retries):
+            if attempt:
+                delay = self.backoff * (2 ** (attempt - 1)) \
+                    + self._rng.uniform(0.0, self.backoff)
+                time.sleep(delay)
+            try:
+                sock = self._connected()
+                framing.send_frame(sock, kind, payload)
+                resp_kind, resp_payload = framing.recv_frame(sock)
+            except framing.FrameError as e:
+                last = e
+                self._drop_connection()
+                continue
+            except (TimeoutError, OSError) as e:
+                last = e
+                self._drop_connection()
+                continue
+            self._breaker_success()
+            if resp_kind == framing.RESP_ERROR:
+                raise RemoteError(
+                    f"peer {self.addr[0]}:{self.addr[1]} refused "
+                    f"{kind:#x}: {resp_payload.decode('utf-8', 'replace')}")
+            return resp_kind, resp_payload
+        self._breaker_failure()
+        raise PeerUnavailable(
+            f"peer {self.addr[0]}:{self.addr[1]} unreachable after "
+            f"{self.retries} attempts: {type(last).__name__}: {last}") \
+            from last

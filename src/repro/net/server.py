@@ -1,0 +1,153 @@
+"""Blocking-IO framed TCP server: one accept loop, one thread per peer.
+
+The same threading model as :mod:`repro.serve` (plain threads + locks, no
+async runtime): a :class:`NetServer` owns a listening socket, accepts
+connections on a daemon thread, and runs each connection's request loop on
+its own daemon thread.  Handlers are a registry from request frame kind to
+``handler(payload) -> (response_kind, response_payload)`` — the server
+itself never interprets payload bytes.
+
+Failure behaviour, the part that matters:
+
+* a handler exception becomes a typed :data:`~repro.net.framing.RESP_ERROR`
+  frame (message text only — no tracebacks, no state) and the connection
+  survives; a *hostile* frame (:class:`~repro.net.framing.FrameError`)
+  gets one ``RESP_ERROR`` and the connection is closed — malformed bytes
+  don't get a second chance to probe the parser;
+* every connection socket carries an idle timeout, so a frozen peer
+  occupies one thread for at most ``conn_timeout`` seconds, never forever;
+* :meth:`stop` closes the listener and every live connection socket and
+  joins the accept loop — shutdown cannot leak threads that outlive the
+  process's useful life.
+"""
+from __future__ import annotations
+
+import contextlib
+import socket
+import threading
+from collections.abc import Callable, Iterator
+
+from . import framing
+
+Handler = Callable[[bytes], tuple[int, bytes]]
+
+
+class NetServer:
+    """A framed request/response server over TCP.
+
+    ``register(kind, handler)`` before :meth:`start`; handlers run on the
+    connection's thread and must be thread-safe across connections (the
+    transparency objects they close over — log, session — already are, or
+    are guarded by the caller)."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 conn_timeout: float = 30.0, backlog: int = 16):
+        self.host = host
+        self.port = port
+        self.conn_timeout = conn_timeout
+        self.backlog = backlog
+        self._handlers: dict[int, Handler] = {}
+        self._listener: socket.socket | None = None
+        self._accept_thread: threading.Thread | None = None
+        self._conns: set[socket.socket] = set()
+        self._lock = threading.Lock()
+        self._stopping = threading.Event()
+
+    def register(self, kind: int, handler: Handler) -> None:
+        if kind not in framing.FRAME_KINDS:
+            raise framing.FrameError(f"unknown frame kind {kind:#x}")
+        self._handlers[kind] = handler
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> tuple[str, int]:
+        """Bind, listen, and return the bound ``(host, port)``."""
+        if self._listener is not None:
+            raise RuntimeError("server already started")
+        listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        listener.bind((self.host, self.port))
+        listener.listen(self.backlog)
+        # a finite accept timeout keeps the loop responsive to stop()
+        listener.settimeout(0.2)
+        self._listener = listener
+        self.port = listener.getsockname()[1]
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="net-accept", daemon=True)
+        self._accept_thread.start()
+        return (self.host, self.port)
+
+    def stop(self) -> None:
+        self._stopping.set()
+        if self._listener is not None:
+            with contextlib.suppress(OSError):
+                self._listener.close()
+        with self._lock:
+            conns = list(self._conns)
+        for conn in conns:
+            with contextlib.suppress(OSError):
+                conn.close()
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5.0)
+            self._accept_thread = None
+        self._listener = None
+
+    @contextlib.contextmanager
+    def serving(self) -> Iterator[tuple[str, int]]:
+        addr = self.start()
+        try:
+            yield addr
+        finally:
+            self.stop()
+
+    # -- the loops ----------------------------------------------------------
+    def _accept_loop(self) -> None:
+        listener = self._listener
+        assert listener is not None     # started before the thread spawns
+        while not self._stopping.is_set():
+            try:
+                conn, _ = listener.accept()
+            except TimeoutError:
+                continue
+            except OSError:
+                return                      # listener closed by stop()
+            conn.settimeout(self.conn_timeout)
+            with self._lock:
+                self._conns.add(conn)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             name="net-conn", daemon=True).start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        try:
+            while not self._stopping.is_set():
+                try:
+                    kind, payload = framing.recv_frame(conn)
+                except framing.ConnectionClosed:
+                    return
+                except framing.FrameError as e:
+                    # hostile or truncated bytes: answer once, then drop the
+                    # connection — never keep parsing a poisoned stream
+                    with contextlib.suppress(OSError):
+                        framing.send_frame(conn, framing.RESP_ERROR,
+                                           str(e).encode("utf-8"))
+                    return
+                except (TimeoutError, OSError):
+                    return                  # idle or dead peer: reclaim
+                handler = self._handlers.get(kind)
+                if handler is None:
+                    resp = (framing.RESP_ERROR,
+                            f"no handler for frame kind {kind:#x}".encode())
+                else:
+                    try:
+                        resp = handler(payload)
+                    except Exception as e:  # typed to the peer, conn survives
+                        resp = (framing.RESP_ERROR,
+                                f"{type(e).__name__}: {e}".encode("utf-8"))
+                try:
+                    framing.send_frame(conn, resp[0], resp[1])
+                except (framing.FrameError, OSError):
+                    return
+        finally:
+            with self._lock:
+                self._conns.discard(conn)
+            with contextlib.suppress(OSError):
+                conn.close()

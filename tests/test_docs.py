@@ -10,9 +10,18 @@ from repro.core import wire
 ROOT = Path(__file__).resolve().parent.parent
 
 
+def _section(text, start, end=None):
+    """The slice of a doc between two headings (to its end if end=None)."""
+    i = text.index(start)
+    return text[i:text.index(end)] if end else text[i:]
+
+
+_PIN_ROW = r"\|\s*`([A-Z_]+)`\s*\|\s*`([0-9a-fx]+)`\s*\|"
+
+
 def test_protocol_constants_match_wire_module():
     text = (ROOT / "docs" / "protocol.md").read_text()
-    rows = re.findall(r"\|\s*`([A-Z_]+)`\s*\|\s*`([0-9a-fx]+)`\s*\|", text)
+    rows = re.findall(_PIN_ROW, _section(text, "## 8.", "## 9."))
     pinned = dict(rows)
     assert "MAGIC" in pinned and "WIRE_VERSION" in pinned, \
         "protocol.md §8 constants table is missing or unparseable"
@@ -23,9 +32,37 @@ def test_protocol_constants_match_wire_module():
             f"{getattr(wire, name)}"
     # every cap and kind the module exports is pinned in the doc
     exported = {n for n in dir(wire)
-                if n.startswith(("KIND_", "MAX_")) or n == "WIRE_VERSION"}
+                if n.startswith(("KIND_", "MAX_", "SIG"))
+                or n == "WIRE_VERSION"}
     missing = exported - set(pinned) - {"MAGIC"}
     assert not missing, f"protocol.md §8 is missing constants: {missing}"
+
+
+def test_protocol_net_constants_match_framing_module():
+    """§10's transport constants AND the frame-kind table are pinned
+    against repro.net.framing — the wire format of the socket fabric is a
+    spec, not an implementation detail."""
+    from repro.net import framing
+    text = (ROOT / "docs" / "protocol.md").read_text()
+    sec = _section(text, "## 10.")
+    pinned = dict(re.findall(_PIN_ROW, sec))
+    assert "NET_MAGIC" in pinned and "MAX_FRAME" in pinned, \
+        "protocol.md §10 constants tables are missing or unparseable"
+    assert bytes.fromhex(pinned.pop("NET_MAGIC")) == framing.NET_MAGIC
+    for name, value in pinned.items():
+        assert int(value, 0) == getattr(framing, name), \
+            f"docs/protocol.md pins {name}={value} but framing.{name} is " \
+            f"{getattr(framing, name)}"
+    # every frame kind and transport cap the module exports is pinned
+    exported = {n for n in dir(framing)
+                if n.startswith(("REQ_", "RESP_"))
+                or n in ("NET_VERSION", "MAX_FRAME")}
+    missing = exported - set(pinned) - {"NET_MAGIC"}
+    assert not missing, f"protocol.md §10 is missing constants: {missing}"
+    # the retirement story stays told: kind 8 and tag 0x82 are documented
+    # as retired, never reused
+    assert "retired" in _section(text, "## 1.", "## 2.").lower()
+    assert "0x82" in sec and "never reused" in sec
 
 
 def test_protocol_worked_example_digest_matches_vector():
@@ -48,6 +85,24 @@ def test_readme_quickstart_block_present_and_current():
                    "verify_bytes", "GossipPeer", "gossip="):
         assert needle in code, f"README quickstart no longer uses {needle}"
     compile(code, "README.md#quickstart", "exec")    # at least parses
+
+
+def test_readme_networked_snippet_present_and_current():
+    """The README's networked-quickstart block must exercise the real
+    socket fabric: a NetServer serving the signed head, a PeerClient
+    fetching it, and the gossip peer verifying the Ed25519 envelope."""
+    readme = (ROOT / "README.md").read_text()
+    blocks = re.findall(r"```python\n(.*?)```", readme, re.S)
+    net = [b for b in blocks if "NetServer" in b]
+    assert net, "README.md lost its networked-quickstart code block"
+    code = net[0]
+    for needle in ("from repro.net import", "PeerClient", "REQ_HEAD",
+                   "GossipMessage.from_bytes", "peer.offer"):
+        assert needle in code, \
+            f"README networked snippet no longer uses {needle}"
+    compile(code, "README.md#networked", "exec")     # at least parses
+    # and the full multi-process demo is pointed at
+    assert "examples/serve_queries.py" in readme
 
 
 def test_readme_serving_snippet_present_and_current():

@@ -1,0 +1,116 @@
+"""RFC 8032 conformance for the pure-Python Ed25519 under the gossip
+signatures (repro/core/ed25519.py): the RFC §7.1 test vectors byte-for-byte,
+plus the strictness matrix — malleable scalars, off-curve and non-canonical
+points, wrong lengths — all of which must verify ``False``, never raise."""
+import hashlib
+
+import pytest
+
+from repro.core import ed25519 as ed
+
+# RFC 8032 §7.1 TEST 1-3: (seed, public key, message, signature), hex
+RFC_VECTORS = [
+    ("9d61b19deffd5a60ba844af492ec2cc44449c5697b326919703bac031cae7f60",
+     "d75a980182b10ab7d54bfed3c964073a0ee172f3daa62325af021a68f707511a",
+     "",
+     "e5564300c360ac729086e2cc806e828a84877f1eb8e5d974d873e06522490155"
+     "5fb8821590a33bacc61e39701cf9b46bd25bf5f0595bbe24655141438e7a100b"),
+    ("4ccd089b28ff96da9db6c346ec114e0f5b8a319f35aba624da8cf6ed4fb8a6fb",
+     "3d4017c3e843895a92b70aa74d1b7ebc9c982ccf2ec4968cc0cd55f12af4660c",
+     "72",
+     "92a009a9f0d4cab8720e820b5f642540a2b27b5416503f8fb3762223ebdb69da"
+     "085ac1e43e15996e458f3613d0f11d8c387b2eaeb4302aeeb00d291612bb0c00"),
+    ("c5aa8df43f9f837bedb7442f31dcb7b166d38535076f094b85ce3a2e0b4458f7",
+     "fc51cd8e6218a1a38da47ed00230f0580816ed13ba3303ac5deb911548908025",
+     "af82",
+     "6291d657deec24024827e69c3abe01a30ce548a284743a445e3680d7db5ac3ac"
+     "18ff9b538d16f290ae67f760984dc6594a7c15e9716ed28dc027beceea1ec40a"),
+]
+
+
+@pytest.mark.parametrize("seed,pub,msg,sig", RFC_VECTORS)
+def test_rfc8032_vectors(seed, pub, msg, sig):
+    seed, pub = bytes.fromhex(seed), bytes.fromhex(pub)
+    msg, sig = bytes.fromhex(msg), bytes.fromhex(sig)
+    assert ed.public_key(seed) == pub
+    assert ed.sign(seed, msg) == sig
+    assert ed.verify(pub, msg, sig) is True
+
+
+def test_sign_verify_roundtrip_many_messages():
+    key = ed.SigningKey.from_secret(b"roundtrip-secret")
+    for i in range(8):
+        msg = b"checkpoint-%d" % i * (i + 1)
+        sig = key.sign(msg)
+        assert ed.verify(key.pub, msg, sig) is True
+        assert ed.verify(key.pub, msg + b"x", sig) is False
+        assert ed.verify(key.pub, msg[:-1], sig) is False
+
+
+def test_wrong_key_and_tampered_signature_fail():
+    k1 = ed.SigningKey.from_secret(b"owner")
+    k2 = ed.SigningKey.from_secret(b"not-the-owner")
+    msg = b"the signed head"
+    sig = k1.sign(msg)
+    assert ed.verify(k2.pub, msg, sig) is False
+    for pos in range(0, ed.SIGNATURE_LEN, 7):
+        bad = bytearray(sig)
+        bad[pos] ^= 1
+        assert ed.verify(k1.pub, msg, bytes(bad)) is False
+
+
+def test_malleability_s_plus_l_rejected():
+    """S' = S + L satisfies the unreduced curve equation — RFC 8032
+    demands rejecting it so signatures are non-malleable."""
+    key = ed.SigningKey.from_secret(b"malleability")
+    msg = b"m"
+    sig = key.sign(msg)
+    s = int.from_bytes(sig[32:], "little")
+    s_malleated = s + ed._L
+    if s_malleated < (1 << 256):
+        forged = sig[:32] + int.to_bytes(s_malleated, 32, "little")
+        assert ed.verify(key.pub, msg, forged) is False
+    assert ed.verify(
+        key.pub, msg, sig[:32] + b"\xff" * 32) is False    # S >> L
+
+
+def test_noncanonical_and_off_curve_points_rejected():
+    key = ed.SigningKey.from_secret(b"points")
+    msg = b"m"
+    sig = key.sign(msg)
+    # a y coordinate >= p is a non-canonical encoding
+    bad_pub = int.to_bytes(ed._P + 1, 32, "little")
+    assert ed.verify(bad_pub, msg, sig) is False
+    # R replaced by an off-curve encoding (y=2 is not on the curve)
+    off = int.to_bytes(2, 32, "little")
+    assert ed.verify(key.pub, msg, off + sig[32:]) is False
+    # -0: x sign bit set with x = 0 is non-canonical
+    minus_zero = int.to_bytes(1 | (1 << 255), 32, "little")
+    assert ed.verify(minus_zero, msg, sig) is False
+
+
+def test_wrong_lengths_and_types_return_false_never_raise():
+    key = ed.SigningKey.from_secret(b"lengths")
+    sig = key.sign(b"m")
+    for pub in (key.pub[:-1], key.pub + b"\x00", b"", None, "not-bytes", 7):
+        assert ed.verify(pub, b"m", sig) is False
+    for bad_sig in (sig[:-1], sig + b"\x00", b"", None, "not-bytes", 7):
+        assert ed.verify(key.pub, b"m", bad_sig) is False
+
+
+def test_signing_side_fails_loud_on_bad_material():
+    with pytest.raises(ed.Ed25519Error):
+        ed.sign(b"short", b"m")
+    with pytest.raises(ed.Ed25519Error):
+        ed.public_key(b"\x00" * 31)
+    with pytest.raises(ed.Ed25519Error):
+        ed.SigningKey(b"\x00" * 33)
+    with pytest.raises(ed.Ed25519Error):
+        ed.SigningKey.from_secret(b"")
+
+
+def test_from_secret_is_the_documented_derivation():
+    secret = b"zkgraph-demo-origin-key"
+    key = ed.SigningKey.from_secret(secret)
+    assert key.seed == hashlib.sha512(secret).digest()[:32]
+    assert key.pub == ed.public_key(key.seed)

@@ -38,10 +38,13 @@ def test_query_text_smoke():
 
 @pytest.mark.slow
 def test_serve_queries_demo(tmp_path):
-    """The full multi-process deployment demo: durable log, owner
-    SIGKILL + torn-tail recovery, two gossiping verifier processes,
-    revision advance by consistency proof, equivocation detection.  The
-    driver asserts all of it internally; here we re-assert the summaries.
+    """The full networked deployment demo: owner and two verifiers as
+    separate socket processes (repro.net frames carry every trust byte),
+    deterministic frame faults on the verifiers' owner links, owner
+    SIGKILL + torn-tail recovery mid-stream, revision advance by
+    consistency proof, verifier-to-verifier gossip over TCP, and a forged
+    (correctly signed!) fork head alarmed by both peers.  The driver
+    asserts all of it internally; here we re-assert the summaries.
     IC13 queue entries draw person2 from [9, 24), so keep >= 24 persons."""
     mod = load_example("serve_queries")
     out = mod.main(["--queries", "3", "--dir", str(tmp_path / "demo")],
@@ -49,5 +52,8 @@ def test_serve_queries_demo(tmp_path):
     assert out["owner"]["tree_size"] == 2          # manifest + revision
     for name in ("v1", "v2"):
         assert all(out[name]["results"].values())
+        assert out[name]["advanced"] is True       # by consistency proof
+        assert out[name]["cross_advance"] is False  # peers already agreed
+        assert out[name]["head"] == 2
         assert out[name]["equivocation_detected"] is True
     assert os.path.exists(tmp_path / "demo" / "transparency.log")

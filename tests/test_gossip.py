@@ -2,20 +2,22 @@
 
 The satellite paths the issue names are all here, running on every PR:
 stale-checkpoint replay, consistency-proof forgery across a manifest
-revision, and split-view equivocation between two peers — plus origin
-authentication, the wire envelope treating every byte as hostile, and the
-session bootstrap from a gossip-pinned head.
+revision, and split-view equivocation between two peers — plus Ed25519
+origin signatures, signature/version skew against the retired MAC era,
+the wire envelope treating every byte as hostile, and the session
+bootstrap from a gossip-pinned head.
 """
 import numpy as np
 import pytest
 
+from repro.core import ed25519 as ed
 from repro.core import gossip as gp
 from repro.core import wire
 from repro.core.session import WireFormatError, ZKGraphSession
 from repro.core.transparency import (Checkpoint, ConsistencyProof,
                                      TransparencyLog)
 
-KEY = b"test-origin-key"
+KEY = ed.SigningKey.from_secret(b"test-origin-key")
 ORIGIN = "gossip-log"
 
 
@@ -38,24 +40,24 @@ def fork(log):
 
 
 def pinned_peer(log, size=3):
-    peer = gp.GossipPeer(ORIGIN, KEY)
-    assert peer.offer(gp.GossipMessage(log.checkpoint(size), None,
-                                       gp.sign_checkpoint(
-                                           KEY, log.checkpoint(size))))
+    peer = gp.GossipPeer(ORIGIN, KEY.pub)
+    cp = log.checkpoint(size)
+    assert peer.offer(gp.GossipMessage(cp, None, KEY.pub,
+                                       gp.sign_checkpoint(KEY, cp)))
     return peer
 
 
 def msg_at(log, size, since=None):
     cp = log.checkpoint(size)
     proof = log.consistency_proof(since, size) if since else None
-    return gp.GossipMessage(cp, proof, gp.sign_checkpoint(KEY, cp))
+    return gp.GossipMessage(cp, proof, KEY.pub, gp.sign_checkpoint(KEY, cp))
 
 
 # ---------------------------------------------------------------------------
 # head pinning and advancement
 # ---------------------------------------------------------------------------
 def test_bootstrap_then_advance_with_proof(log):
-    peer = gp.GossipPeer(ORIGIN, KEY)
+    peer = gp.GossipPeer(ORIGIN, KEY.pub)
     with pytest.raises(gp.GossipError, match="no pinned head"):
         peer.pinned
     assert peer.offer(msg_at(log, 2)) is True
@@ -83,14 +85,15 @@ def test_duplicate_head_is_a_noop(log):
 
 
 def test_empty_checkpoint_rejected(log):
-    peer = gp.GossipPeer(ORIGIN, KEY)
+    peer = gp.GossipPeer(ORIGIN, KEY.pub)
     cp = Checkpoint(ORIGIN, 0, log.root(0))
     with pytest.raises(gp.GossipError, match="size-0"):
-        peer.offer(gp.GossipMessage(cp, None, gp.sign_checkpoint(KEY, cp)))
+        peer.offer(gp.GossipMessage(cp, None, KEY.pub,
+                                    gp.sign_checkpoint(KEY, cp)))
 
 
 def test_cross_origin_head_rejected(log):
-    peer = gp.GossipPeer("other-log", KEY)
+    peer = gp.GossipPeer("other-log", KEY.pub)
     with pytest.raises(gp.GossipError, match="pinned on"):
         peer.offer(msg_at(log, 2))
 
@@ -99,7 +102,7 @@ def test_cross_origin_head_rejected(log):
 # stale-checkpoint replay
 # ---------------------------------------------------------------------------
 def test_stale_replay_never_regresses_the_head(log):
-    peer = gp.GossipPeer(ORIGIN, KEY)
+    peer = gp.GossipPeer(ORIGIN, KEY.pub)
     peer.offer(msg_at(log, 2))
     peer.offer(msg_at(log, 5, since=2))
     # replaying both an already-seen and a never-seen older checkpoint
@@ -109,7 +112,7 @@ def test_stale_replay_never_regresses_the_head(log):
 
 
 def test_stale_replay_that_contradicts_history_is_equivocation(log, fork):
-    peer = gp.GossipPeer(ORIGIN, KEY)
+    peer = gp.GossipPeer(ORIGIN, KEY.pub)
     peer.offer(msg_at(log, 3))
     peer.offer(msg_at(log, 6, since=3))
     with pytest.raises(gp.EquivocationError) as exc:
@@ -128,10 +131,9 @@ def test_forged_consistency_proof_raises_equivocation(log):
     for row in range(honest.path.shape[0]):
         forged_path = honest.path.copy()
         forged_path[row, 0] ^= 1
-        forged = gp.GossipMessage(
-            log.checkpoint(6),
-            ConsistencyProof(3, 6, forged_path),
-            gp.sign_checkpoint(KEY, log.checkpoint(6)))
+        cp6 = log.checkpoint(6)
+        forged = gp.GossipMessage(cp6, ConsistencyProof(3, 6, forged_path),
+                                  KEY.pub, gp.sign_checkpoint(KEY, cp6))
         with pytest.raises(gp.EquivocationError, match="does not extend"):
             peer.offer(forged)
         assert peer.pinned.tree_size == 3      # alarm, no state change
@@ -143,7 +145,7 @@ def test_forked_head_with_its_own_valid_proof_is_equivocation(log, fork):
     sizes collide exactly, the split view fires first."""
     peer = pinned_peer(log, 3)
     forked = gp.GossipMessage(fork.checkpoint(6),
-                              fork.consistency_proof(3, 6),
+                              fork.consistency_proof(3, 6), KEY.pub,
                               gp.sign_checkpoint(KEY, fork.checkpoint(6)))
     with pytest.raises(gp.EquivocationError):
         peer.offer(forked)
@@ -197,51 +199,127 @@ def test_behind_peer_keeps_pin_until_proof_arrives(log):
 
 
 # ---------------------------------------------------------------------------
-# origin authentication
+# origin signatures (Ed25519 over canonical checkpoint bytes)
 # ---------------------------------------------------------------------------
 def test_bad_or_missing_signature_rejected(log):
-    peer = gp.GossipPeer(ORIGIN, KEY)
+    peer = gp.GossipPeer(ORIGIN, KEY.pub)
     cp = log.checkpoint(2)
-    wrong_key = gp.GossipMessage(cp, None,
-                                 gp.sign_checkpoint(b"not-the-key", cp))
-    with pytest.raises(gp.GossipError, match="authentication"):
-        peer.offer(wrong_key)
-    tampered = gp.sign_checkpoint(KEY, cp).copy()
+    other = ed.SigningKey.from_secret(b"not-the-key")
+    # a relay re-signing under its own (honestly-named) key: wrong signer
+    with pytest.raises(gp.GossipError, match="unexpected key"):
+        peer.offer(gp.GossipMessage(cp, None, other.pub,
+                                    gp.sign_checkpoint(other, cp)))
+    # naming the origin's key but signing with another: bad signature
+    with pytest.raises(gp.GossipError, match="signature"):
+        peer.offer(gp.GossipMessage(cp, None, KEY.pub,
+                                    gp.sign_checkpoint(other, cp)))
+    tampered = bytearray(gp.sign_checkpoint(KEY, cp))
     tampered[0] ^= 1
-    with pytest.raises(gp.GossipError, match="authentication"):
-        peer.offer(gp.GossipMessage(cp, None, tampered))
-    with pytest.raises(gp.GossipError, match="authentication"):
-        peer.offer(gp.GossipMessage(cp, None, np.zeros((3,), np.uint32)))
+    with pytest.raises(gp.GossipError, match="signature"):
+        peer.offer(gp.GossipMessage(cp, None, KEY.pub, bytes(tampered)))
+    with pytest.raises(gp.GossipError, match="signature"):
+        peer.offer(gp.GossipMessage(cp, None, KEY.pub, b"\x00" * 64))
 
 
 def test_signature_binds_the_exact_checkpoint(log):
     cp2, cp3 = log.checkpoint(2), log.checkpoint(3)
-    auth2 = gp.sign_checkpoint(KEY, cp2)
-    assert gp.verify_signature(KEY, cp2, auth2)
-    assert not gp.verify_signature(KEY, cp3, auth2)      # size swap
-    assert not gp.verify_signature(KEY, Checkpoint(
-        "other-log", cp2.tree_size, cp2.root), auth2)    # origin swap
-    assert not gp.verify_signature(KEY, cp2, None)
-    assert not gp.verify_signature(b"other", cp2, auth2)
+    sig2 = gp.sign_checkpoint(KEY, cp2)
+    assert gp.verify_signature(KEY.pub, cp2, sig2)
+    assert not gp.verify_signature(KEY.pub, cp3, sig2)       # size swap
+    assert not gp.verify_signature(KEY.pub, Checkpoint(
+        "other-log", cp2.tree_size, cp2.root), sig2)         # origin swap
+    assert not gp.verify_signature(KEY.pub, cp2, None)
+    assert not gp.verify_signature(
+        ed.SigningKey.from_secret(b"other").pub, cp2, sig2)
 
 
-def test_keyless_peer_skips_mac_but_still_detects_equivocation(log, fork):
-    """auth_key=None models a pre-authenticated transport: MAC checks are
-    skipped, the split-view alarm is not."""
-    peer = gp.GossipPeer(ORIGIN, auth_key=None)
-    junk_auth = np.zeros(8, np.uint32)
-    assert peer.offer(gp.GossipMessage(log.checkpoint(3), None, junk_auth))
+def test_signature_domain_separated_from_leaf_hash_and_mac(log):
+    """The signed bytes are 0x03 || checkpoint — a signature over the bare
+    checkpoint bytes (or any other domain) must not verify."""
+    cp = log.checkpoint(2)
+    for prefix in (b"", b"\x00", b"\x02"):
+        wrong_domain = KEY.sign(prefix + cp.to_bytes())
+        assert not gp.verify_signature(KEY.pub, cp, wrong_domain)
+    assert gp.verify_signature(KEY.pub, cp, KEY.sign(b"\x03" + cp.to_bytes()))
+
+
+def test_keyless_peer_skips_signature_but_still_detects_equivocation(
+        log, fork):
+    """signer=None models a pre-authenticated transport: signature checks
+    are skipped, the split-view alarm is not."""
+    peer = gp.GossipPeer(ORIGIN, signer=None)
+    junk = b"\x00" * ed.SIGNATURE_LEN
+    assert peer.offer(gp.GossipMessage(log.checkpoint(3), None,
+                                       b"\x00" * 32, junk))
     with pytest.raises(gp.EquivocationError):
-        peer.offer(gp.GossipMessage(fork.checkpoint(3), None, junk_auth))
+        peer.offer(gp.GossipMessage(fork.checkpoint(3), None,
+                                    b"\x00" * 32, junk))
 
 
-def test_empty_key_rejected(log):
-    with pytest.raises(gp.GossipError, match="non-empty"):
-        gp.sign_checkpoint(b"", log.checkpoint(2))
+def test_signing_requires_a_signing_key(log):
+    with pytest.raises(gp.GossipError, match="SigningKey"):
+        gp.sign_checkpoint(b"raw-secret-bytes", log.checkpoint(2))
+    with pytest.raises(gp.GossipError, match="32 bytes"):
+        gp.GossipPeer(ORIGIN, b"short-key")
 
 
 # ---------------------------------------------------------------------------
-# the wire envelope (kind 8) treats every byte as hostile
+# signature/version skew: the MAC era fails closed by name
+# ---------------------------------------------------------------------------
+def _mac_era_bytes(log):
+    """Bytes shaped like the retired v2 kind-8 envelope: v2 header, kind 8,
+    embedded checkpoint, no-consistency flag, (8,) uint32 MAC field."""
+    e = wire._Enc()
+    e.buf += wire.MAGIC
+    e.u16(2)                                   # WIRE_VERSION of the MAC era
+    e.u8(8)                                    # retired KIND_GOSSIP
+    e.u8(wire._F_G_CHECKPOINT)
+    cp_raw = log.checkpoint(3).to_bytes()
+    e.u32(len(cp_raw))
+    e.buf += cp_raw
+    e.u8(wire._F_G_CONSIST)
+    e.u8(0)
+    e.u8(0x82)                                 # the retired MAC field tag
+    e.array(np.arange(8, dtype=np.uint32))
+    return bytes(e.buf)
+
+
+def test_mac_era_message_to_signed_era_peer_fails_closed(log):
+    """A v2 MAC-era gossip message offered to a signed-era peer dies in the
+    codec with a typed error — version first, so not a byte is interpreted."""
+    with pytest.raises(WireFormatError, match="unsupported wire version"):
+        gp.GossipMessage.from_bytes(_mac_era_bytes(log))
+
+
+def test_retired_gossip_kind_rejected_by_name(log):
+    """Kind 8 under the CURRENT version (an upgraded relay replaying an old
+    envelope shape) is named as the retired MAC era, not a generic kind
+    mismatch — and no decoder resurrects it."""
+    raw = bytearray(_mac_era_bytes(log))
+    raw[4:6] = wire.WIRE_VERSION.to_bytes(2, "little")
+    with pytest.raises(WireFormatError, match="retired MAC-era"):
+        gp.GossipMessage.from_bytes(bytes(raw))
+    with pytest.raises(WireFormatError, match="retired MAC-era"):
+        wire.decode_checkpoint(bytes(raw))
+
+
+def test_signed_era_message_to_mac_era_peer_fails_closed(log):
+    """The reverse skew: today's kind-9 bytes presented to a decoder
+    expecting the old kind (simulated by re-tagging the header) mismatch
+    on the kind byte — a v2 peer would already have failed on version."""
+    raw = gp.emit(log, KEY).to_bytes()
+    kind_at = len(wire.MAGIC) + 2
+    assert raw[kind_at] == wire.KIND_GOSSIP
+    with pytest.raises(WireFormatError, match="payload kind"):
+        wire.decode_checkpoint(raw)            # kind 9 where 5 expected
+    v2 = bytearray(raw)
+    v2[4:6] = (2).to_bytes(2, "little")        # what a v2 peer would see
+    with pytest.raises(WireFormatError, match="unsupported wire version"):
+        gp.GossipMessage.from_bytes(bytes(v2))
+
+
+# ---------------------------------------------------------------------------
+# the wire envelope (kind 9) treats every byte as hostile
 # ---------------------------------------------------------------------------
 def test_gossip_message_roundtrip_canonical(log):
     for msg in (gp.emit(log, KEY), gp.emit(log, KEY, since=2)):
@@ -252,7 +330,9 @@ def test_gossip_message_roundtrip_canonical(log):
         assert (rt.consistency is None) == (msg.consistency is None)
         if rt.consistency is not None:
             assert rt.consistency.to_bytes() == msg.consistency.to_bytes()
-        assert np.array_equal(rt.auth, msg.auth)
+        assert rt.signer == KEY.pub
+        assert rt.signature == msg.signature
+        assert gp.verify_signature(rt.signer, rt.checkpoint, rt.signature)
 
 
 def test_gossip_wire_truncation_and_trailing_rejected(log):
@@ -306,13 +386,34 @@ def test_gossip_wire_byte_flip_fuzz_never_crashes(log):
             msg = gp.GossipMessage.from_bytes(bytes(flipped))
         except WireFormatError:
             continue
-        # survived the codec: the peer must still fail closed (bad MAC,
-        # bad proof, or equivocation) or accept a byte-identical message
+        # survived the codec: the peer must still fail closed (bad
+        # signature, bad proof, or equivocation) or accept a byte-identical
+        # message
         try:
             peer.offer(msg)
         except gp.GossipError:
             pass
         assert peer.pinned.tree_size in (3, 6)
+
+
+def test_signed_envelope_flip_fuzz_over_signature_fields(log):
+    """Hostile-bytes flip fuzz targeted at the signer + signature tail of
+    the new envelope: every flip either dies in the codec or fails
+    signature verification — no flipped head is ever accepted."""
+    raw = gp.emit(log, KEY).to_bytes()
+    tail = len(raw) - (1 + ed.PUBLIC_KEY_LEN + 1 + ed.SIGNATURE_LEN)
+    for pos in range(tail, len(raw)):
+        for bit in (0x01, 0x80):
+            flipped = bytearray(raw)
+            flipped[pos] ^= bit
+            peer = gp.GossipPeer(ORIGIN, KEY.pub)
+            try:
+                msg = gp.GossipMessage.from_bytes(bytes(flipped))
+            except WireFormatError:
+                continue               # flipped a field tag: codec rejects
+            with pytest.raises(gp.GossipError):
+                peer.offer(msg)
+            assert peer.head is None
 
 
 def test_oversized_embed_rejected():
@@ -334,8 +435,8 @@ def test_verifier_bootstraps_from_gossip_pinned_head(owner, bundle,
                                                      tiny_cfg):
     log = TransparencyLog("session-gossip-log")
     checkpoint, inclusion, raw = owner.publish_to(log)
-    peer = gp.GossipPeer("session-gossip-log", KEY)
-    peer.offer(gp.GossipMessage(checkpoint, None,
+    peer = gp.GossipPeer("session-gossip-log", KEY.pub)
+    peer.offer(gp.GossipMessage(checkpoint, None, KEY.pub,
                                 gp.sign_checkpoint(KEY, checkpoint)))
     v = ZKGraphSession.verifier(cfg=tiny_cfg, gossip=peer,
                                 inclusion=inclusion, manifest_bytes=raw)
@@ -345,12 +446,12 @@ def test_verifier_bootstraps_from_gossip_pinned_head(owner, bundle,
 def test_verifier_gossip_bootstrap_fails_closed(owner, tiny_cfg):
     log = TransparencyLog("session-gossip-log")
     checkpoint, inclusion, raw = owner.publish_to(log)
-    empty = gp.GossipPeer("session-gossip-log", KEY)
+    empty = gp.GossipPeer("session-gossip-log", KEY.pub)
     with pytest.raises(gp.GossipError, match="no pinned head"):
         ZKGraphSession.verifier(cfg=tiny_cfg, gossip=empty,
                                 inclusion=inclusion, manifest_bytes=raw)
-    pinned = gp.GossipPeer("session-gossip-log", KEY)
-    pinned.offer(gp.GossipMessage(checkpoint, None,
+    pinned = gp.GossipPeer("session-gossip-log", KEY.pub)
+    pinned.offer(gp.GossipMessage(checkpoint, None, KEY.pub,
                                   gp.sign_checkpoint(KEY, checkpoint)))
     with pytest.raises(TypeError, match="not both"):
         ZKGraphSession.verifier(cfg=tiny_cfg, gossip=pinned,

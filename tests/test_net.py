@@ -1,0 +1,359 @@
+"""Socket-transport coverage (repro/net): frame codec hostility, the
+threaded server, the retrying client, the circuit breaker, and a signed
+gossip head + proof bundle crossing a real TCP connection end to end.
+
+Everything runs on loopback with sub-second timeouts: a hang here is a bug
+in the transport, and the per-test timeout (pytest.ini) makes it a failure
+instead of a stuck job.
+"""
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.core import ed25519 as ed
+from repro.core import gossip as gp
+from repro.core.session import ZKGraphSession
+from repro.core.transparency import TransparencyLog
+from repro.core.wire import WireFormatError
+from repro.net import framing
+from repro.net.peer import (CircuitOpen, PeerClient, PeerUnavailable,
+                            RemoteError)
+from repro.net.server import NetServer
+
+KEY = ed.SigningKey.from_secret(b"net-test-origin-key")
+ORIGIN = "net-test-log"
+
+
+def make_log(n=5):
+    log = TransparencyLog(ORIGIN)
+    for i in range(n):
+        log.append(b"manifest-rev-%d" % i)
+    return log
+
+
+@pytest.fixture()
+def echo_server():
+    srv = NetServer(conn_timeout=5.0)
+    srv.register(framing.REQ_PING, lambda p: (framing.RESP_PONG, p))
+    with srv.serving() as addr:
+        yield srv, addr
+
+
+def fast_client(addr, **kw):
+    kw.setdefault("timeout", 1.0)
+    kw.setdefault("retries", 2)
+    kw.setdefault("backoff", 0.01)
+    return PeerClient(addr, **kw)
+
+
+# ---------------------------------------------------------------------------
+# frame codec: every byte hostile
+# ---------------------------------------------------------------------------
+def test_frame_roundtrip_over_socketpair():
+    a, b = socket.socketpair()
+    try:
+        framing.send_frame(a, framing.REQ_HEAD, b"payload-bytes")
+        assert framing.recv_frame(b) == (framing.REQ_HEAD, b"payload-bytes")
+        framing.send_frame(b, framing.RESP_HEAD, b"")
+        assert framing.recv_frame(a) == (framing.RESP_HEAD, b"")
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_encode_rejects_bad_kind_and_oversize():
+    with pytest.raises(framing.FrameError, match="unknown frame kind"):
+        framing.encode_frame(0x7F, b"")
+    big = bytearray(framing.encode_frame(framing.REQ_PING, b""))
+    big[6:10] = (framing.MAX_FRAME + 1).to_bytes(4, "little")
+    a, b = socket.socketpair()
+    try:
+        a.sendall(bytes(big))
+        with pytest.raises(framing.FrameError, match="exceeds cap"):
+            framing.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+@pytest.mark.parametrize("mutate,match", [
+    (lambda f: b"XXXX" + f[4:], "bad frame magic"),
+    (lambda f: f[:4] + bytes([framing.NET_VERSION + 1]) + f[5:],
+     "unsupported transport version"),
+    (lambda f: f[:5] + b"\x7f" + f[6:], "unknown frame kind"),
+])
+def test_frame_header_hostility_is_typed(mutate, match):
+    raw = framing.encode_frame(framing.REQ_HEAD, b"x" * 8)
+    a, b = socket.socketpair()
+    try:
+        a.sendall(mutate(raw))
+        a.close()
+        with pytest.raises(framing.FrameError, match=match):
+            framing.recv_frame(b)
+    finally:
+        b.close()
+
+
+def test_frame_truncation_vs_clean_eof():
+    raw = framing.encode_frame(framing.REQ_HEAD, b"x" * 32)
+    for cut, exc in ((0, framing.ConnectionClosed),
+                     (5, framing.FrameError),
+                     (len(raw) - 1, framing.FrameError)):
+        a, b = socket.socketpair()
+        try:
+            a.sendall(raw[:cut])
+            a.close()
+            with pytest.raises(exc):
+                framing.recv_frame(b)
+        finally:
+            b.close()
+    # FrameError IS a WireFormatError: the existing fail-closed paths apply
+    assert issubclass(framing.FrameError, WireFormatError)
+
+
+# ---------------------------------------------------------------------------
+# server + client happy path
+# ---------------------------------------------------------------------------
+def test_ping_round_trip_and_persistent_connection(echo_server):
+    _, addr = echo_server
+    with fast_client(addr) as client:
+        for i in range(4):
+            kind, payload = client.request(framing.REQ_PING, b"n%d" % i)
+            assert (kind, payload) == (framing.RESP_PONG, b"n%d" % i)
+
+
+def test_concurrent_clients_each_get_their_own_answers(echo_server):
+    _, addr = echo_server
+    errors = []
+
+    def worker(tag):
+        try:
+            with fast_client(addr) as client:
+                for i in range(8):
+                    msg = b"%s-%d" % (tag, i)
+                    assert client.request(framing.REQ_PING, msg)[1] == msg
+        except Exception as e:      # noqa: BLE001 — collected for the assert
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(b"t%d" % t,))
+               for t in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10)
+    assert errors == []
+
+
+def test_unregistered_kind_is_a_typed_remote_error(echo_server):
+    _, addr = echo_server
+    with fast_client(addr) as client:
+        with pytest.raises(RemoteError, match="no handler"):
+            client.request(framing.REQ_BUNDLE, b"\x00" * 8)
+        # the connection survives a refusal
+        assert client.request(framing.REQ_PING, b"ok")[1] == b"ok"
+
+
+def test_handler_exception_becomes_remote_error_not_disconnect():
+    srv = NetServer()
+
+    def explode(payload):
+        raise ValueError("handler went bang")
+
+    srv.register(framing.REQ_PING, explode)
+    with srv.serving() as addr, fast_client(addr) as client:
+        with pytest.raises(RemoteError, match="handler went bang"):
+            client.request(framing.REQ_PING, b"")
+        with pytest.raises(RemoteError):        # still serving
+            client.request(framing.REQ_PING, b"")
+
+
+def test_hostile_bytes_get_one_error_then_disconnect(echo_server):
+    _, addr = echo_server
+    raw = socket.create_connection(addr, timeout=2.0)
+    raw.settimeout(2.0)
+    try:
+        raw.sendall(b"GET / HTTP/1.1\r\n\r\n")     # not a zkgraph frame
+        kind, payload = framing.recv_frame(raw)
+        assert kind == framing.RESP_ERROR
+        assert b"magic" in payload
+        # server hung up: clean EOF or an RST (unread bytes were pending)
+        with pytest.raises((framing.ConnectionClosed, ConnectionResetError)):
+            framing.recv_frame(raw)
+    finally:
+        raw.close()
+
+
+# ---------------------------------------------------------------------------
+# retry, timeout, circuit breaker
+# ---------------------------------------------------------------------------
+def test_dead_peer_is_peer_unavailable_not_a_hang():
+    sock = socket.socket()
+    sock.bind(("127.0.0.1", 0))
+    port = sock.getsockname()[1]
+    sock.close()                                   # nothing listens here
+    client = fast_client(("127.0.0.1", port), timeout=0.5)
+    t0 = time.monotonic()
+    with pytest.raises(PeerUnavailable, match="unreachable after 2"):
+        client.request(framing.REQ_PING, b"")
+    assert time.monotonic() - t0 < 5.0
+
+
+def test_circuit_breaker_opens_then_probes_half_open():
+    sock = socket.socket()
+    sock.bind(("127.0.0.1", 0))
+    addr = ("127.0.0.1", sock.getsockname()[1])
+    sock.close()
+    client = fast_client(addr, timeout=0.3, retries=1,
+                         fail_threshold=2, cooldown=0.4)
+    for _ in range(2):
+        with pytest.raises(PeerUnavailable):
+            client.request(framing.REQ_PING, b"")
+    assert client.state == "open"
+    # open breaker fails fast: no socket work, microseconds not timeouts
+    t0 = time.monotonic()
+    with pytest.raises(CircuitOpen, match="circuit open"):
+        client.request(framing.REQ_PING, b"")
+    assert time.monotonic() - t0 < 0.1
+    # after cooldown the next request is the half-open probe — and a server
+    # that came back up closes the breaker again
+    time.sleep(0.45)
+    assert client.state == "half-open"
+    srv = NetServer()
+    srv.register(framing.REQ_PING, lambda p: (framing.RESP_PONG, p))
+    srv.host, srv.port = addr[0], addr[1]
+    with srv.serving():
+        assert client.request(framing.REQ_PING, b"back")[1] == b"back"
+    assert client.state == "closed"
+    client.close()
+
+
+def test_failed_half_open_probe_reopens_the_breaker():
+    sock = socket.socket()
+    sock.bind(("127.0.0.1", 0))
+    addr = ("127.0.0.1", sock.getsockname()[1])
+    sock.close()
+    client = fast_client(addr, timeout=0.2, retries=1,
+                         fail_threshold=1, cooldown=0.2)
+    with pytest.raises(PeerUnavailable):
+        client.request(framing.REQ_PING, b"")
+    time.sleep(0.25)
+    with pytest.raises(PeerUnavailable):           # the probe itself fails
+        client.request(framing.REQ_PING, b"")
+    with pytest.raises(CircuitOpen):               # and re-opened instantly
+        client.request(framing.REQ_PING, b"")
+    client.close()
+
+
+def test_frozen_handler_hits_client_timeout_budget():
+    srv = NetServer(conn_timeout=10.0)
+    release = threading.Event()
+
+    def frozen(payload):
+        release.wait(8.0)
+        return (framing.RESP_PONG, b"late")
+
+    srv.register(framing.REQ_PING, frozen)
+    try:
+        with srv.serving() as addr:
+            client = fast_client(addr, timeout=0.3, retries=2, backoff=0.01)
+            t0 = time.monotonic()
+            with pytest.raises(PeerUnavailable):
+                client.request(framing.REQ_PING, b"")
+            assert time.monotonic() - t0 < 3.0     # bounded, not wedged
+            client.close()
+    finally:
+        release.set()
+
+
+# ---------------------------------------------------------------------------
+# the transparency fabric over the wire
+# ---------------------------------------------------------------------------
+def serve_transparency(log, key):
+    """An owner-side server exposing the real RPC surface."""
+    srv = NetServer()
+    srv.register(framing.REQ_HEAD,
+                 lambda p: (framing.RESP_HEAD, gp.emit(log, key).to_bytes()))
+
+    def consistency(payload):
+        if len(payload) != 8:
+            raise ValueError("REQ_CONSISTENCY wants a u64 old size")
+        since = int.from_bytes(payload, "little")
+        return (framing.RESP_CONSISTENCY,
+                gp.emit(log, key, since=since).to_bytes())
+
+    srv.register(framing.REQ_CONSISTENCY, consistency)
+    return srv
+
+
+def test_signed_head_fetch_verify_and_advance_over_tcp():
+    log = make_log(3)
+    srv = serve_transparency(log, KEY)
+    with srv.serving() as addr, fast_client(addr) as client:
+        peer = gp.GossipPeer(ORIGIN, KEY.pub)
+        kind, payload = client.request(framing.REQ_HEAD, b"")
+        assert kind == framing.RESP_HEAD
+        assert peer.offer(gp.GossipMessage.from_bytes(payload)) is True
+        assert peer.pinned.tree_size == 3
+        # the log grows; the peer advances only through a consistency fetch
+        log.append(b"manifest-rev-3")
+        kind, payload = client.request(framing.REQ_HEAD, b"")
+        with pytest.raises(gp.ConsistencyRequired):
+            peer.offer(gp.GossipMessage.from_bytes(payload))
+        kind, payload = client.request(
+            framing.REQ_CONSISTENCY,
+            int(peer.pinned.tree_size).to_bytes(8, "little"))
+        assert kind == framing.RESP_CONSISTENCY
+        assert peer.offer(gp.GossipMessage.from_bytes(payload)) is True
+        assert peer.pinned.tree_size == 4
+
+
+def test_relay_cannot_substitute_its_own_signed_head():
+    """A hostile relay re-signs the head under its own key: the transport
+    delivers it fine — and the gossip layer rejects it, which is the whole
+    point of carrying signatures inside the envelope."""
+    log = make_log(3)
+    mallory = ed.SigningKey.from_secret(b"mallory")
+    srv = serve_transparency(log, mallory)          # serves mallory-signed
+    with srv.serving() as addr, fast_client(addr) as client:
+        peer = gp.GossipPeer(ORIGIN, KEY.pub)       # pins the honest key
+        _, payload = client.request(framing.REQ_HEAD, b"")
+        with pytest.raises(gp.GossipError, match="unexpected key"):
+            peer.offer(gp.GossipMessage.from_bytes(payload))
+        assert peer.head is None
+
+
+def test_verifier_bootstrap_and_bundle_delivery_over_tcp(owner, bundle,
+                                                         tiny_cfg):
+    """The full trust path over sockets: manifest, inclusion proof, signed
+    head, and the proof bundle all travel as frames; the verifier session
+    is built purely from received bytes and accepts the bundle."""
+    log = TransparencyLog("session-net-log")
+    checkpoint, inclusion, manifest_raw = owner.publish_to(log)
+    raw_bundle = bundle.to_bytes()
+    srv = NetServer()
+    srv.register(framing.REQ_HEAD,
+                 lambda p: (framing.RESP_HEAD,
+                            gp.emit(log, KEY).to_bytes()))
+    srv.register(framing.REQ_MANIFEST,
+                 lambda p: (framing.RESP_MANIFEST, manifest_raw))
+    srv.register(framing.REQ_INCLUSION,
+                 lambda p: (framing.RESP_INCLUSION, inclusion.to_bytes()))
+    srv.register(framing.REQ_BUNDLE,
+                 lambda p: (framing.RESP_BUNDLE, raw_bundle))
+    with srv.serving() as addr, fast_client(addr, timeout=5.0) as client:
+        peer = gp.GossipPeer("session-net-log", KEY.pub)
+        _, head_raw = client.request(framing.REQ_HEAD, b"")
+        assert peer.offer(gp.GossipMessage.from_bytes(head_raw)) is True
+        _, man_raw = client.request(framing.REQ_MANIFEST, b"")
+        _, incl_raw = client.request(framing.REQ_INCLUSION, b"")
+        from repro.core.transparency import InclusionProof
+        verifier = ZKGraphSession.verifier(
+            cfg=tiny_cfg, gossip=peer,
+            inclusion=InclusionProof.from_bytes(incl_raw),
+            manifest_bytes=man_raw)
+        _, bundle_raw = client.request(framing.REQ_BUNDLE, b"")
+        assert verifier.verify_bytes(bundle_raw) is True
+        # and a tampered delivery fails closed, same as ever
+        assert verifier.verify_bytes(bundle_raw[:-3]) is False

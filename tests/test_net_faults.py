@@ -1,0 +1,261 @@
+"""Deterministic fault-injection suite (repro/net/faults.py).
+
+Every injected fault — dropped, duplicated, reordered, truncated,
+corrupted frames, frozen-peer stalls, connections killed mid-exchange —
+must end in a typed error or a clean fallback: never a hang (the per-test
+timeout enforces this), never acceptance of a damaged or unsigned head.
+
+The scripts are consumed frame-by-frame in arrival order (request then
+response for this strict RPC protocol), so each test states exactly which
+frame misbehaves and replays identically every run.
+"""
+import time
+
+import pytest
+
+from repro.core import ed25519 as ed
+from repro.core import gossip as gp
+from repro.core.transparency import TransparencyLog
+from repro.core.wire import WireFormatError
+from repro.net import framing
+from repro.net.faults import FaultProxy
+from repro.net.peer import PeerClient, PeerUnavailable, RemoteError
+from repro.net.server import NetServer
+
+KEY = ed.SigningKey.from_secret(b"fault-test-origin-key")
+ORIGIN = "fault-test-log"
+
+
+def make_log(n=4):
+    log = TransparencyLog(ORIGIN)
+    for i in range(n):
+        log.append(b"manifest-rev-%d" % i)
+    return log
+
+
+@pytest.fixture()
+def head_server():
+    """An owner serving its signed head; yields (server, log)."""
+    log = make_log()
+    srv = NetServer(conn_timeout=5.0)
+    srv.register(framing.REQ_HEAD,
+                 lambda p: (framing.RESP_HEAD, gp.emit(log, KEY).to_bytes()))
+    srv.register(framing.REQ_PING, lambda p: (framing.RESP_PONG, p))
+    with srv.serving():
+        yield srv, log
+
+
+def proxied_client(srv, script, timeout=0.4, retries=3, **kw):
+    proxy = FaultProxy(("127.0.0.1", srv.port), script=script,
+                       stall_seconds=kw.pop("stall_seconds", 1.2))
+    addr = proxy.start()
+    client = PeerClient(addr, timeout=timeout, retries=retries,
+                        backoff=0.01, **kw)
+    return proxy, client
+
+
+def fetch_and_pin(client):
+    kind, payload = client.request(framing.REQ_HEAD, b"")
+    assert kind == framing.RESP_HEAD
+    peer = gp.GossipPeer(ORIGIN, KEY.pub)
+    assert peer.offer(gp.GossipMessage.from_bytes(payload)) is True
+    return peer
+
+
+# ---------------------------------------------------------------------------
+# one fault per frame, each must resolve typed-or-clean
+# ---------------------------------------------------------------------------
+def test_dropped_request_is_retried_to_success(head_server):
+    srv, _ = head_server
+    proxy, client = proxied_client(srv, ["drop"])
+    try:
+        peer = fetch_and_pin(client)        # attempt 1 drops, attempt 2 lands
+        assert peer.pinned.tree_size == 4
+    finally:
+        client.close()
+        proxy.stop()
+
+
+def test_dropped_response_is_retried_to_success(head_server):
+    srv, _ = head_server
+    proxy, client = proxied_client(srv, ["pass", "drop"])
+    try:
+        peer = fetch_and_pin(client)
+        assert peer.pinned.tree_size == 4
+    finally:
+        client.close()
+        proxy.stop()
+
+
+def test_truncated_response_is_typed_then_recovered(head_server):
+    """Half a frame then connection death: FrameError inside the client,
+    one reconnect, clean success — the poisoned stream is never re-read."""
+    srv, _ = head_server
+    proxy, client = proxied_client(srv, ["pass", "truncate"])
+    try:
+        peer = fetch_and_pin(client)
+        assert peer.pinned.tree_size == 4
+    finally:
+        client.close()
+        proxy.stop()
+
+
+def test_corrupted_head_is_never_accepted(head_server):
+    """A flipped payload byte survives the transport (framing is intact) —
+    so the *payload* codec or the signature must refuse it.  Either way the
+    peer pins nothing."""
+    srv, _ = head_server
+    proxy, client = proxied_client(srv, ["pass", "corrupt"], retries=1)
+    try:
+        peer = gp.GossipPeer(ORIGIN, KEY.pub)
+        kind, payload = client.request(framing.REQ_HEAD, b"")
+        assert kind == framing.RESP_HEAD
+        with pytest.raises((WireFormatError, gp.GossipError)):
+            peer.offer(gp.GossipMessage.from_bytes(payload))
+        assert peer.head is None
+    finally:
+        client.close()
+        proxy.stop()
+
+
+def test_every_corruption_position_fails_closed(head_server):
+    """Sweep the corrupt action across many deterministic seeds: whatever
+    byte flips, the outcome is a typed rejection, never a pinned forgery."""
+    srv, _ = head_server
+    outcomes = set()
+    for seed in range(12):
+        proxy = FaultProxy(("127.0.0.1", srv.port),
+                           script=["pass", "corrupt"], seed=seed)
+        addr = proxy.start()
+        client = PeerClient(addr, timeout=0.4, retries=1, backoff=0.01)
+        try:
+            peer = gp.GossipPeer(ORIGIN, KEY.pub)
+            _, payload = client.request(framing.REQ_HEAD, b"")
+            try:
+                peer.offer(gp.GossipMessage.from_bytes(payload))
+                outcomes.add("accepted")
+            except WireFormatError:
+                outcomes.add("codec-rejected")
+            except gp.GossipError:
+                outcomes.add("signature-rejected")
+            assert peer.head is None
+        finally:
+            client.close()
+            proxy.stop()
+    assert "accepted" not in outcomes
+    assert outcomes                         # the sweep actually ran
+
+
+def test_duplicated_response_leaves_protocol_recoverable(head_server):
+    """A duplicated response frame desyncs the persistent connection: the
+    next request reads the stale duplicate.  The duplicate is still an
+    honestly-signed head — offer() treats it as the no-op replay it is —
+    and the client recovers on its own connection lifecycle."""
+    srv, _ = head_server
+    proxy, client = proxied_client(srv, ["pass", "dup"])
+    try:
+        peer = fetch_and_pin(client)
+        # next request consumes the stale duplicate first
+        kind, payload = client.request(framing.REQ_HEAD, b"")
+        assert kind == framing.RESP_HEAD
+        assert peer.offer(gp.GossipMessage.from_bytes(payload)) is False
+        assert peer.pinned.tree_size == 4   # replay was a no-op
+    finally:
+        client.close()
+        proxy.stop()
+
+
+def test_reordered_responses_are_detected_by_kind(head_server):
+    """Reordering across two pipelined exchanges delivers a PONG where a
+    HEAD was expected: the caller's kind check catches it — a typed
+    protocol violation, not a mis-pinned head."""
+    srv, _ = head_server
+    # frames: req1 pass, req2 pass, then the two responses swap
+    proxy, client = proxied_client(srv, ["pass", "reorder"])
+    try:
+        # issue REQ_PING then REQ_HEAD on one connection; the ping response
+        # is held and released after the head response
+        kind1, _ = client.request(framing.REQ_PING, b"marker")
+        kind2, payload2 = client.request(framing.REQ_HEAD, b"")
+        kinds = {kind1, kind2}
+        assert kinds == {framing.RESP_PONG, framing.RESP_HEAD}
+        got_head = payload2 if kind2 == framing.RESP_HEAD else None
+        if kind2 != framing.RESP_HEAD:
+            # caller-side contract: wrong kind => protocol violation, the
+            # response is NOT fed to the gossip layer
+            return
+        peer = gp.GossipPeer(ORIGIN, KEY.pub)
+        assert peer.offer(gp.GossipMessage.from_bytes(got_head)) is True
+    finally:
+        client.close()
+        proxy.stop()
+
+
+def test_frozen_peer_stall_falls_back_to_pinned_head(head_server):
+    """The frozen-peer scenario end to end: a verifier with a pinned head
+    asks for a newer one, the peer stalls past every timeout — the fetch
+    dies typed, the verifier keeps serving from its pin."""
+    srv, log = head_server
+    proxy, client = proxied_client(srv, [], timeout=0.3, retries=2)
+    try:
+        peer = fetch_and_pin(client)        # healthy bootstrap
+        log.append(b"manifest-rev-new")     # a newer head exists
+        proxy.extend_script(["stall", "stall", "stall", "stall"])
+        t0 = time.monotonic()
+        with pytest.raises(PeerUnavailable):
+            client.request(framing.REQ_HEAD, b"")
+        assert time.monotonic() - t0 < 4.0  # bounded by budget, not wedged
+        # the fallback: last pinned head still serves
+        assert peer.pinned.tree_size == 4
+    finally:
+        client.close()
+        proxy.stop()
+
+
+def test_connection_killed_mid_exchange_is_typed(head_server):
+    srv, _ = head_server
+    proxy, client = proxied_client(srv, ["close", "close", "close"],
+                                   retries=3)
+    try:
+        with pytest.raises(PeerUnavailable):
+            client.request(framing.REQ_HEAD, b"")
+    finally:
+        client.close()
+        proxy.stop()
+
+
+def test_fault_storm_never_wedges_and_never_forges(head_server):
+    """A deterministic storm of every fault class in sequence: each request
+    either completes with an honestly-signed head or dies typed; the peer's
+    pin only ever moves forward through verification."""
+    srv, _ = head_server
+    storm = ["drop", "pass", "corrupt", "truncate", "dup", "stall",
+             "close", "pass", "reorder", "drop"]
+    proxy, client = proxied_client(srv, storm, timeout=0.3, retries=2)
+    peer = gp.GossipPeer(ORIGIN, KEY.pub)
+    t0 = time.monotonic()
+    try:
+        for _ in range(8):
+            try:
+                kind, payload = client.request(framing.REQ_HEAD, b"")
+            except (PeerUnavailable, RemoteError):
+                continue                    # typed transport failure: fine
+            if kind != framing.RESP_HEAD:
+                continue                    # reordered junk: ignored
+            try:
+                peer.offer(gp.GossipMessage.from_bytes(payload))
+            except (WireFormatError, gp.GossipError):
+                continue                    # damaged payload: fine
+        assert time.monotonic() - t0 < 20.0
+        assert peer.head is None or peer.pinned.tree_size == 4
+    finally:
+        client.close()
+        proxy.stop()
+
+
+def test_unknown_script_action_rejected_up_front():
+    with pytest.raises(ValueError, match="unknown fault actions"):
+        FaultProxy(("127.0.0.1", 1), script=["explode"])
+    proxy = FaultProxy(("127.0.0.1", 1))
+    with pytest.raises(ValueError, match="unknown fault actions"):
+        proxy.extend_script(["sever"])

@@ -19,6 +19,7 @@ from repro.core import transparency as tl
 from repro.core import wire
 from repro.core.commit import (CommitmentManifest, MANIFEST_VERSION,
                                TableGeometry)
+from repro.core.ed25519 import SigningKey
 
 VECTOR_DIR = Path(__file__).resolve().parent / "vectors"
 
@@ -74,12 +75,12 @@ def _u32s_to_bytes(digest: np.ndarray) -> bytes:
     return np.asarray(digest, np.uint32).astype("<u4").tobytes()
 
 
-VECTOR_GOSSIP_KEY = b"zkgraph-vector-gossip-key"
+VECTOR_GOSSIP_KEY = SigningKey.from_secret(b"zkgraph-vector-gossip-key")
 
 
 def build_gossip() -> gp.GossipMessage:
-    """The vector log's size-5 head as a signed gossip message carrying
-    the 3 -> 5 consistency proof (docs/protocol.md §9)."""
+    """The vector log's size-5 head as an Ed25519-signed gossip message
+    carrying the 3 -> 5 consistency proof (docs/protocol.md §10)."""
     return gp.emit(build_log(), VECTOR_GOSSIP_KEY, since=3)
 
 
@@ -180,13 +181,15 @@ def test_gossip_vector_verifies_end_to_end():
     raw = _read("gossip_head_3_to_5.hex")
     msg = gp.GossipMessage.from_bytes(raw)
     assert msg.to_bytes() == raw
-    assert gp.verify_signature(VECTOR_GOSSIP_KEY, msg.checkpoint, msg.auth)
+    assert msg.signer == VECTOR_GOSSIP_KEY.pub
+    assert gp.verify_signature(msg.signer, msg.checkpoint, msg.signature)
     cp3 = tl.Checkpoint.from_bytes(_read("checkpoint_size3.hex"))
     assert tl.verify_consistency(cp3, msg.checkpoint, msg.consistency)
     # a peer pinned at the size-3 vector checkpoint advances on exactly it
-    peer = gp.GossipPeer("zkgraph-vector-log", VECTOR_GOSSIP_KEY)
-    peer.offer(gp.GossipMessage(cp3, None,
-                                gp.sign_checkpoint(VECTOR_GOSSIP_KEY, cp3)))
+    peer = gp.GossipPeer("zkgraph-vector-log", VECTOR_GOSSIP_KEY.pub)
+    peer.offer(gp.GossipMessage(
+        cp3, None, VECTOR_GOSSIP_KEY.pub,
+        gp.sign_checkpoint(VECTOR_GOSSIP_KEY, cp3)))
     assert peer.offer(msg) is True
     assert peer.pinned.tree_size == 5
 
@@ -215,11 +218,13 @@ def test_wire_constants_pinned():
     """The spec constants in docs/protocol.md §1 are written against these
     values; bump the doc and regenerate vectors when changing them."""
     assert wire.MAGIC == b"ZKGB"
-    assert wire.WIRE_VERSION == 2
+    assert wire.WIRE_VERSION == 3
     assert (wire.KIND_BUNDLE, wire.KIND_PROOF, wire.KIND_FRI,
             wire.KIND_MANIFEST, wire.KIND_CHECKPOINT, wire.KIND_INCLUSION,
             wire.KIND_CONSISTENCY, wire.KIND_GOSSIP) == (1, 2, 3, 4, 5, 6,
-                                                         7, 8)
+                                                         7, 9)
+    assert wire._KIND_GOSSIP_MAC_RETIRED == 8   # never reused
+    assert (wire.SIGNER_LEN, wire.SIG_LEN) == (32, 64)
 
 
 if __name__ == "__main__":
